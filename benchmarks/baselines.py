@@ -1,0 +1,120 @@
+"""Baseline-system models for the paper-figure benchmarks (§V-A).
+
+Each baseline estimates one training iteration's time for a varied-length
+batch on the paper's cluster (4 nodes x 8 A800, NVLink intra / IB inter),
+using the same cost-model primitives as InfiniPipe so comparisons are
+apples-to-apples:
+
+* ``infinipipe``   — the real planner + cycle-accurate 1F1B simulator.
+* ``seq1f1b``      — uniform splitting into fixed-size chunks + full static
+                     checkpointing (the paper's adapted Seq1F1B baseline).
+* ``deepspeed_usp``— Ulysses SP across the whole cluster + ZeRO-3: per-layer
+                     all-to-alls cross nodes (IB-bound), params gathered per
+                     layer per microbatch.
+* ``flexsp``       — heterogeneous SP groups: short sequences use intra-node
+                     groups, long ones span nodes; workload imbalance across
+                     groups adds a straggler factor (§V-B discussion).
+* ``megatron``     — TP8 intra-node (per-layer activation all-reduces) +
+                     CP ring for attention + PP between nodes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+from repro.core import (Chunk, ChunkKind, ClusterSpec, CostModel,
+                        PlannerConfig, Slice, plan_batch)
+
+IB_BW = 50e9          # 400 Gb/s InfiniBand per node
+NVLINK_BW = 200e9
+
+
+def _batched(lengths: Sequence[int]) -> Chunk:
+    return Chunk(kind=ChunkKind.BATCHED, context=0,
+                 slices=tuple(Slice(i, 0, l, True)
+                              for i, l in enumerate(lengths)))
+
+
+def infinipipe_time(cm: CostModel, lengths: List[int]) -> float:
+    plan = plan_batch(cm, lengths)
+    return plan.est_total_time
+
+
+def seq1f1b_time(cm: CostModel, lengths: List[int]) -> float:
+    plan = plan_batch(cm, lengths,
+                      PlannerConfig(uniform_split=True, full_ckpt=True,
+                                    fixed_k=cm.cluster.d_p))
+    return plan.est_total_time
+
+
+def deepspeed_usp_time(cm: CostModel, lengths: List[int]) -> float:
+    """SP degree = whole cluster; all-to-all crosses IB; ZeRO-3 gathers per
+    microbatch. No pipeline (d_p=1)."""
+    m = cm.model
+    N = cm.cluster.n_devices
+    # compute: same total flops, full utilization assumed per microbatch
+    comp = sum(cm.t_comp(_batched([l])) for l in lengths) * 3.0  # fwd+bwd
+    # comm: ulysses a2a at IB bandwidth per layer, both passes
+    toks = sum(lengths)
+    e = m.bytes_per_act
+    a2a = 2 * (m.d_head_total + m.d_kv) * toks * e / N
+    t_comm = m.n_layers * a2a / (IB_BW / 8) * 3.0   # 8 ranks share a NIC
+    # ZeRO-3: gather params per layer per microbatch (microbatch ~ per seq)
+    n_micro = max(1, len(lengths) // 8)
+    zero = 2 * m.param_count() * (N - 1) / N / (IB_BW / 8) * n_micro / N
+    return comp + t_comm + zero
+
+
+def flexsp_time(cm: CostModel, lengths: List[int]) -> float:
+    """Heterogeneous SP groups (FlexSP): short seqs intra-node (d_s=8),
+    long seqs cluster-wide; groups run concurrently but finish with the
+    slowest (workload imbalance)."""
+    m = cm.model
+    e = m.bytes_per_act
+    N = cm.cluster.n_devices
+    node = 8
+    short = [l for l in lengths if l <= 16384]
+    long_ = [l for l in lengths if l > 16384]
+    groups = max(1, N // node)
+
+    def grp_time(ls, d_s, bw):
+        if not ls:
+            return 0.0
+        comp = sum(cm.t_comp(_batched([l])) for l in ls) * 3.0 * (N / d_s)
+        toks = sum(ls)
+        a2a = 2 * (m.d_head_total + m.d_kv) * toks * e / d_s
+        return comp + m.n_layers * a2a / bw * 3.0
+
+    # shorts spread over intra-node groups; longs pay IB
+    t_short = grp_time(short, node, NVLINK_BW) / groups
+    t_long = grp_time(long_, N, IB_BW / 8)
+    # imbalance: the slowest group gates the iteration (paper §V-B)
+    imbalance = 1.15 if short and long_ else 1.0
+    zero = 2 * m.param_count() * (N - 1) / N / (IB_BW / 8) / N * 4
+    return (t_short + t_long) * imbalance + zero
+
+
+def megatron_time(cm: CostModel, lengths: List[int]) -> float:
+    """TP=8 (2 all-reduces of activations per layer, NVLink) + CP ring +
+    PP inter-node with 1F1B bubbles."""
+    m = cm.model
+    e = m.bytes_per_act
+    toks = sum(lengths)
+    comp = sum(cm.t_comp(_batched([l])) for l in lengths) * 3.0
+    tp_ar = 2 * 2 * toks * m.d_model * e / 8 / NVLINK_BW * m.n_layers * 3.0
+    d_p = 4
+    n_micro = max(8, len(lengths) // 16)
+    bubble = (d_p - 1) / n_micro
+    # full static checkpointing tuned for the longest context (§V-A)
+    recompute = comp / 3.0
+    return (comp + tp_ar + recompute) * (1 + bubble)
+
+
+BASELINES = {
+    "infinipipe": infinipipe_time,
+    "seq1f1b": seq1f1b_time,
+    "deepspeed_usp": deepspeed_usp_time,
+    "flexsp": flexsp_time,
+    "megatron": megatron_time,
+}

@@ -1,0 +1,273 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape) cell on the single-pod mesh, in seconds per
+training/serving step, per chip:
+
+  compute    = EXEC_FLOPs  / (197e12)       [bf16 peak]
+  memory     = HBM_bytes   / (819e9)
+  collective = ICI_bytes   / (50e9)         [per-link]
+
+Methodology note (EXPERIMENTS.md §Roofline): XLA's ``cost_analysis`` counts
+while-loop bodies ONCE, so for scan-structured programs its flops
+drastically under-report. EXEC_FLOPs/HBM_bytes are therefore derived
+*analytically from the compiled geometry* — the executor's schedule is
+fully known (ticks x stages x layers), every factor (pipeline-bubble
+compute, padded layer slots, remat recompute, CE, EP balance) is explicit —
+and the dry-run JSON's ``cost_analysis``/``hlo_collectives_static`` fields
+are kept as cross-checks. Collective volumes come from the executor's own
+collective schedule (``dryrun.analytic_collectives``), exact per step.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per training token;
+the MODEL_FLOPS / EXEC_FLOPs ratio surfaces bubble + padding + remat +
+lockstep-SPMD waste.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import SHAPES, get_arch
+from repro.core.costs import (_act_bytes_per_token,
+                              _attn_flops_per_token_pair,
+                              _linear_flops_per_token,
+                              _local_attn_flops_per_token)
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+E = 2  # bf16 bytes
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops: float = 0.0          # aggregate useful flops (per device)
+    exec_flops: float = 0.0           # executed flops (per device)
+    hlo_flops_static: float = 0.0
+    bottleneck: str = ""
+    frac_of_roofline: float = 0.0     # model_flops/peak vs step time
+    note: str = ""
+
+    def step_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _layer_body_bytes(s, d_s: int = 16) -> float:
+    """Per-device weight bytes READ per layer use (bf16): gathered ZeRO
+    leaves are full; EP expert weights stay sharded — each device reads
+    only its E/d_s expert shard."""
+    body = s.param_count() - s.vocab * s.d_model * (1 if s.tie_embeddings
+                                                    else 2)
+    n_l = max(s.n_layers + (s.n_encoder_layers or 0), 1)
+    expert = 0.0
+    if s.n_experts:
+        expert = s.n_experts * 3 * s.d_model * s.d_ff_expert
+        body -= expert * s.n_layers
+    return (body / n_l + expert / d_s) * E
+
+
+def exec_flops_train(cfg, geom: Dict, shape, n_dev: int,
+                     kind: str) -> Tuple[float, float]:
+    """(exec_flops_per_device, model_flops_per_device)."""
+    s = cfg.spec
+    n, cap = geom["n_chunks"], geom["cap"]
+    d_p = 16
+    L_ps = geom["layers_per_stage"]
+    ticks = n + d_p - 1
+    total_tokens = shape.seq_len * shape.global_batch  # single pod = all
+    # --- useful model flops ---
+    lin_tok = _linear_flops_per_token(s) + _local_attn_flops_per_token(s)
+    quad_pair = _attn_flops_per_token_pair(s)  # per (q,k) pair, whole model
+    quad_total = shape.global_batch * quad_pair * (shape.seq_len ** 2) / 2
+    fwd = total_tokens * lin_tok + quad_total
+    mult = 3.0 if kind == "train" else 1.0      # fwd + 2x bwd
+    model = fwd * mult
+    # --- executor overheads ---
+    bubble = ticks / max(n, 1)
+    pad = (d_p * L_ps) / max(s.n_layers + (s.n_encoder_layers or 0), 1)
+    remat = 1.0 + (geom.get("l_ckpt", 0) * d_p
+                   / max(s.n_layers, 1)) * (1.0 if kind == "train" else 0.0)
+    execf = fwd * mult * bubble * pad * remat
+    if cfg.spec.is_encoder_decoder:
+        execf *= 2.0  # lockstep enc+dec both execute each tick (DESIGN §8)
+    # CE (+bwd): 2*D*V per token x3; prefill: argmax 2*D*V
+    vp = ((s.vocab + 15) // 16) * 16
+    ce = total_tokens * 2 * s.d_model * vp * (3.0 if kind == "train" else 1.0)
+    execf += ce * bubble
+    model += total_tokens * 2 * s.d_model * s.vocab * (
+        3.0 if kind == "train" else 1.0)
+    return execf / n_dev, model / n_dev
+
+
+def hbm_bytes_train(cfg, geom: Dict, shape, n_dev: int, kind: str) -> float:
+    s = cfg.spec
+    n, cap = geom["n_chunks"], geom["cap"]
+    d_p, d_s = 16, 16
+    L_ps = geom["layers_per_stage"]
+    ticks = n + d_p - 1
+    passes = 2.0 if kind == "train" else 1.0   # fwd + bwd weight reads
+    # each tick re-reads the stage's (gathered) layer weights
+    w = ticks * L_ps * _layer_body_bytes(s) * passes
+    # activations: ~2x (write+read) of per-layer activation bytes
+    act_tok = _act_bytes_per_token(s) / n_dev
+    acts = (ticks * cap / d_s) * act_tok / max(s.n_layers, 1) \
+        * L_ps * 2.0 * passes
+    # optimizer: params fp32 master+m+v read+write (train only)
+    opt = 0.0
+    if kind == "train":
+        opt = (s.param_count() / (d_p * d_s)) * (4 + 4 + 4) * 2
+    # embedding/head rows + CE streaming weight reads per tick
+    vp = ((s.vocab + 15) // 16) * 16
+    ce_w = ticks * (vp / d_s) * s.d_model * E * passes
+    return w + acts + opt + ce_w
+
+
+def exec_decode(cfg, geom: Dict, shape, n_dev: int
+                ) -> Tuple[float, float, float]:
+    """(exec_flops, model_flops, hbm_bytes) per device, one decode step."""
+    s = cfg.spec
+    d_p, d_s = 16, 16
+    nm = geom.get("n_micro", d_p)
+    bm = max(1, shape.global_batch // nm)
+    L_ps = geom["layers_per_stage"]
+    ticks = nm + d_p - 1
+    S = shape.seq_len
+    # per-token linear flops (active params) + attention cache reads
+    lin_tok = _linear_flops_per_token(s)
+    n_layers = max(s.n_layers, 1)
+    attn = 0.0
+    if not s.attn_free:
+        for i in range(n_layers):
+            w = cfg.layer_window(i)
+            span = min(S, w) if w else S
+            attn += 4 * s.n_heads * s.head_dim * span
+    model = shape.global_batch * (lin_tok + attn)
+    bubble = ticks / max(nm, 1)
+    pad = (d_p * L_ps) / n_layers
+    execf = model * bubble * pad
+    vp = ((s.vocab + 15) // 16) * 16
+    execf += shape.global_batch * 2 * s.d_model * vp * bubble
+    model += shape.global_batch * 2 * s.d_model * s.vocab
+    # HBM: weights per tick + KV cache read (the decode bandwidth wall)
+    w = ticks * L_ps * _layer_body_bytes(s) + (vp / d_s) * s.d_model * E
+    kv = 0.0
+    if not s.attn_free:
+        for i in range(n_layers):
+            wdw = cfg.layer_window(i)
+            span = min(S, wdw) if wdw else S
+            kv += bm * nm * (span / d_s) * 2 * s.d_kv * E / d_p * bubble
+    if s.ssm_state:
+        kv += nm * L_ps * bm * s.inner * s.ssm_state * 4 * 2
+    return execf / n_dev, model / n_dev, w + kv
+
+
+def analyze_cell(rec: Dict) -> RooflineRow:
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    row = RooflineRow(arch=arch, shape=shape_name, status=rec["status"])
+    if rec["status"] != "ok":
+        row.note = rec.get("reason", rec.get("error", ""))[:90]
+        return row
+    n_dev = rec.get("n_devices", 256)
+    geom = rec["geometry"]
+    # recompute collective volumes from geometry (keeps accounting fixes in
+    # one place — no recompiles needed); the recorded value is the original
+    from types import SimpleNamespace
+
+    from repro.launch.analysis import analytic_collectives
+    g = SimpleNamespace(d_p=16, d_s=16, **{k: v for k, v in geom.items()})
+    if shape.kind == "decode" and not hasattr(g, "bm"):
+        g.bm = max(1, shape.global_batch // g.n_micro)
+    if not hasattr(g, "zero3_mode"):
+        g.zero3_mode = ("per_step" if rec.get("note") == "zero3step"
+                        else "per_tick")
+    coll = analytic_collectives(cfg, g, shape.kind)
+    if shape.kind in ("train", "prefill"):
+        execf, model = exec_flops_train(cfg, geom, shape, n_dev, shape.kind)
+        hbm = hbm_bytes_train(cfg, geom, shape, n_dev, shape.kind)
+    else:
+        execf, model, hbm = exec_decode(cfg, geom, shape, n_dev)
+    row.exec_flops = execf
+    row.model_flops = model
+    row.hlo_flops_static = rec.get("flops", 0.0)
+    row.compute_s = execf / PEAK_FLOPS
+    row.memory_s = hbm / HBM_BW
+    row.collective_s = (coll.get("ici_bytes", 0.0)
+                        + coll.get("p2p_bytes", 0.0)) / ICI_BW
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.bottleneck = max(terms, key=terms.get)
+    ideal = model / PEAK_FLOPS
+    row.frac_of_roofline = ideal / max(row.step_time(), 1e-30)
+    return row
+
+
+def load_cells(run_dir: str = "runs/dryrun", mesh: str = "16x16",
+               note: str = "") -> List[RooflineRow]:
+    rows = []
+    for p in sorted(Path(run_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != mesh or rec.get("note", "") != note:
+            continue
+        rows.append(analyze_cell(rec))
+    order = {a: i for i, a in enumerate(
+        ["gemma3-1b", "llama3.2-3b", "stablelm-12b", "qwen3-4b",
+         "olmoe-1b-7b", "deepseek-v2-lite", "hymba-1.5b", "qwen2-vl-7b",
+         "seamless-m4t-v2", "falcon-mamba-7b"])}
+    sorder = {s: i for i, s in enumerate(SHAPES)}
+    rows.sort(key=lambda r: (order.get(r.arch, 99), sorder.get(r.shape, 9)))
+    return rows
+
+
+def markdown_table(rows: List[RooflineRow]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/EXEC | roofline frac | note |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.status != "ok":
+            out.append(f"| {r.arch} | {r.shape} | — | — | — | — | — | — | "
+                       f"{r.note} |\n")
+            continue
+        ratio = r.model_flops / max(r.exec_flops, 1e-30)
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.4f} | {r.memory_s:.4f}"
+            f" | {r.collective_s:.4f} | **{r.bottleneck}** | {ratio:.2f} |"
+            f" {100 * r.frac_of_roofline:.1f}% | {r.note} |\n")
+    return "".join(out)
+
+
+def csv_rows(rows: List[RooflineRow]) -> str:
+    out = ["arch,shape,status,compute_s,memory_s,collective_s,bottleneck,"
+           "model_flops,exec_flops,roofline_frac\n"]
+    for r in rows:
+        out.append(f"{r.arch},{r.shape},{r.status},{r.compute_s:.6g},"
+                   f"{r.memory_s:.6g},{r.collective_s:.6g},{r.bottleneck},"
+                   f"{r.model_flops:.6g},{r.exec_flops:.6g},"
+                   f"{r.frac_of_roofline:.4f}\n")
+    return "".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run-dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--note", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load_cells(args.run_dir, args.mesh, args.note)
+    print(csv_rows(rows) if args.csv else markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Benchmark entry point: one function per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, plus
+the full per-figure records.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from . import paper_figures as pf
+
+    figs = {
+        "fig7_end_to_end": lambda: pf.fig7_end_to_end(
+            batch=48 if args.quick else 96),
+        "fig8_breakdown": pf.fig8_breakdown,
+        "fig9_scalability": pf.fig9_scalability,
+        "fig10_ablation": pf.fig10_ablation,
+        "fig11_cost_model_accuracy": pf.fig11_cost_model_accuracy,
+        "fig12_solver_scaling": pf.fig12_solver_scaling,
+        "fig13_convergence": pf.fig13_convergence,
+    }
+    only = {x.strip() for x in args.only.split(",") if x.strip()}
+
+    print("name,us_per_call,derived")
+    all_rows = {}
+    for name, fn in figs.items():
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+            status = "ok"
+        except Exception as e:  # noqa: BLE001
+            rows = [{"error": repr(e)}]
+            status = "error"
+        dt = (time.perf_counter() - t0) * 1e6
+        derived = _derived(name, rows) if status == "ok" else status
+        print(f"{name},{dt:.0f},{derived}", flush=True)
+        all_rows[name] = rows
+
+    # roofline summary (reads the dry-run artifacts if present)
+    t0 = time.perf_counter()
+    try:
+        from .roofline import load_cells
+        rows = load_cells()
+        ok = [r for r in rows if r.status == "ok"]
+        best = max((r.frac_of_roofline for r in ok), default=0)
+        derived = (f"cells={len(rows)};ok={len(ok)};"
+                   f"best_frac={best:.2f}")
+    except Exception as e:  # noqa: BLE001
+        derived = f"unavailable({e!r})"
+    print(f"roofline,{(time.perf_counter() - t0) * 1e6:.0f},{derived}")
+
+    print("\n=== full records ===")
+    for name, rows in all_rows.items():
+        for r in rows:
+            print(json.dumps({"bench": name, **r}))
+
+
+def _derived(name: str, rows) -> str:
+    if name.startswith("fig7"):
+        sp = [r["speedup_vs_flexsp"] for r in rows]
+        return f"max_speedup_vs_flexsp={max(sp):.2f}x"
+    if name.startswith("fig8"):
+        return f"bubble={rows[0]['bubble_ratio']:.3f}"
+    if name.startswith("fig9"):
+        return f"rows={len(rows)}"
+    if name.startswith("fig10"):
+        rel = [r["relative"] for r in rows if isinstance(r["relative"], float)]
+        return f"worst_variant={max(rel):.2f}x" if rel else "n/a"
+    if name.startswith("fig11"):
+        errs = [r["error"] for r in rows if "error" in r]
+        return f"max_err={max(errs):.3f}" if errs else "n/a"
+    if name.startswith("fig12"):
+        return f"overlapped={all(r['overlapped'] for r in rows)}"
+    if name.startswith("fig13"):
+        return str(rows[-1]["loss"])
+    return "ok"
+
+
+if __name__ == "__main__":
+    main()

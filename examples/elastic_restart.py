@@ -1,0 +1,14 @@
+"""Fault-tolerance / elasticity example: train on a (2,4) mesh, checkpoint,
+then restart the SAME run on a (2,2) mesh (half the devices lost) — the
+planner re-solves for the new topology and the checkpoint reshards on load.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.elastic",
+         "--arch", "llama3.2-3b", "--steps", "4"]))

@@ -1,0 +1,14 @@
+"""Long-context serving example (deliverable b): pipelined flash-decode with
+a sequence-sharded KV cache, batched requests.
+
+    PYTHONPATH=src python examples/serve_longcontext.py
+"""
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-1b",
+         "--reduced", "--batch", "4", "--cache-len", "256",
+         "--decode-steps", "4"]))

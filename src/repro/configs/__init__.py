@@ -1,0 +1,4 @@
+from .registry import ARCHS, arch_names, get_arch
+from .shapes import SHAPES, ShapeSpec
+
+__all__ = ["ARCHS", "arch_names", "get_arch", "SHAPES", "ShapeSpec"]

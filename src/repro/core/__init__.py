@@ -1,0 +1,29 @@
+"""InfiniPipe core: the paper's contribution as a host-side solver stack.
+
+Pure Python/NumPy — no JAX imports — so planning runs on CPU workers and
+overlaps with training (the paper's disaggregated solver/executor split).
+"""
+
+from .plan import (Chunk, ChunkKind, ClusterSpec, Coefficients, ExecutionPlan,
+                   ModelSpec, PipelinePlan, SequenceInfo, Slice, Tick, TickOp)
+from .costs import CostModel, analytic_coefficients, fit_coefficients
+from .chunking import ChunkingResult, chunk_sequences, seq_workload
+from .ilp import IlpResult, greedy_cover, simplex_lp, solve_cover_ilp
+from .checkpointing import CkptSolution, diag_index, solve_checkpointing
+from .grouping import GroupingResult, group_sequences
+from .schedule import (PipelineSimulator, SimResult, backward_order,
+                       build_schedule, enumerate_windows, window_limit)
+from .planner import PlannerConfig, plan_batch
+
+__all__ = [
+    "Chunk", "ChunkKind", "ClusterSpec", "Coefficients", "ExecutionPlan",
+    "ModelSpec", "PipelinePlan", "SequenceInfo", "Slice", "Tick", "TickOp",
+    "CostModel", "analytic_coefficients", "fit_coefficients",
+    "ChunkingResult", "chunk_sequences", "seq_workload",
+    "IlpResult", "greedy_cover", "simplex_lp", "solve_cover_ilp",
+    "CkptSolution", "diag_index", "solve_checkpointing",
+    "GroupingResult", "group_sequences",
+    "PipelineSimulator", "SimResult", "backward_order", "build_schedule",
+    "enumerate_windows", "window_limit",
+    "PlannerConfig", "plan_batch",
+]

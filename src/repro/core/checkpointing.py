@@ -1,0 +1,147 @@
+"""Stage-Aware Chunk-Level Adaptive Checkpointing — Alg. 2 / Eq. 15-20.
+
+The key structural insight (Fig. 6b): a recompute bubble at (stage p, bwd
+slot k) propagates along the schedule anti-diagonal, so checkpointing amounts
+may be tied along diagonals without losing anything:
+
+    ckpt'(p, k) = C[(d_p - p) + k']   with  k' = f2b[k]
+
+which shrinks the variable count from ``n * d_p`` to ``n + d_p - 1`` and
+makes the pipeline-time penalty exactly ``F_hat * sum(C)`` (Eq. 17): each
+diagonal contributes one propagated bubble of F_hat per checkpointed layer.
+
+The ILP (Eq. 20) minimizes ``sum(C)`` subject to every chunks window fitting
+in device memory. With Eq. 19's linearization the constraint matrix is
+non-negative => an integer covering program handled by ``repro.core.ilp``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .costs import CostModel
+from .ilp import IlpResult, solve_cover_ilp
+from .plan import Chunk
+from .schedule import enumerate_windows
+
+__all__ = ["CkptSolution", "solve_checkpointing", "diag_index"]
+
+
+def diag_index(d_p: int, stage: int, bwd_idx: int) -> int:
+    """Index into the diagonal variable vector C (stage is 1-based).
+
+    Eq. 16: ckpt(p, k) = C[f2b[k] + d_p - p]. Range [0, n + d_p - 2].
+    """
+    return (d_p - stage) + bwd_idx
+
+
+@dataclass
+class CkptSolution:
+    status: str                      # "optimal" | "feasible" | "infeasible"
+    diag: List[int]                  # C, length n + d_p - 1
+    table: List[List[int]]           # ckpt[p-1][k] per (stage, fwd chunk idx)
+    recompute_time: float            # Eq. 17 pipeline-time penalty
+    ilp: Optional[IlpResult] = None
+
+    @property
+    def total_layers(self) -> int:
+        return int(sum(self.diag))
+
+
+def _coefficients(cm: CostModel, chunks: Sequence[Chunk]
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Alg. 2 lines 1-3: per-chunk I (base bytes) and F (bytes freed per
+    checkpointed layer); plus the last-stage logits add-on."""
+    m, co, cl = cm.model, cm.coeffs, cm.cluster
+    n = len(chunks)
+    I = np.zeros(n)
+    F = np.zeros(n)
+    logits = np.zeros(n)
+    e = m.bytes_per_act
+    repl = cm.kv_replication
+    for k, c in enumerate(chunks):
+        toks = c.tokens
+        dep = 1.0 if c.has_dependents else 0.0
+        I[k] = (co.m_token / cl.n_devices
+                + dep * repl * 2.0 * e * m.n_layers * m.d_kv / cl.n_devices) * toks
+        per_layer_saving = (co.m_token / (m.n_layers * cl.d_s)
+                            - e * (m.d_model + 2.0 * dep * repl * m.d_kv) / cl.d_s)
+        F[k] = max(0.0, per_layer_saving) * toks
+        logits[k] = co.m_logits / cl.d_s * toks
+    return I, F, logits
+
+
+def solve_checkpointing(cm: CostModel, chunks: Sequence[Chunk],
+                        f2b: Sequence[int], n_split: int, *,
+                        capacity: Optional[float] = None,
+                        gap: float = 0.02,
+                        f_hat: Optional[float] = None,
+                        max_windows_per_stage: int = 64) -> CkptSolution:
+    """Solve Eq. 20 for one 1F1B pipeline.
+
+    ``capacity`` defaults to the cluster's usable HBM (G). ``f_hat`` is the
+    per-layer forward time of a balanced chunk (Eq. 17); derived from the
+    pipeline's actual chunks when not supplied.
+    """
+    m, cl = cm.model, cm.cluster
+    n = len(chunks)
+    d_p = cl.d_p
+    if n == 0:
+        return CkptSolution("optimal", [], [], 0.0)
+    G = capacity if capacity is not None else cl.capacity_bytes
+    n_vars = n + d_p - 1
+    layers_per_stage = max(1, m.n_layers // d_p)
+
+    I, F, logits = _coefficients(cm, chunks)
+    windows = enumerate_windows(n, d_p, n_split, f2b)
+
+    rows: List[np.ndarray] = []
+    rhs: List[float] = []
+    for p in range(1, d_p + 1):
+        budget = G - cm.m_model_states(p)
+        stage_rows: List[Tuple[float, np.ndarray]] = []
+        for w in windows[p - 1]:
+            base = 0.0
+            row = np.zeros(n_vars)
+            for k in w:
+                base += I[k] + (logits[k] if p == d_p else 0.0)
+                row[diag_index(d_p, p, f2b[k])] += F[k]
+            need = base - budget
+            if need > 0:
+                stage_rows.append((need, row))
+        # Large pipelines produce hundreds of near-identical steady-state
+        # windows; keep the tightest (largest residual-need) ones. The chunks
+        # are workload-balanced by construction, so the binding constraints
+        # are among the deepest windows.
+        if len(stage_rows) > max_windows_per_stage:
+            stage_rows.sort(key=lambda t: -t[0])
+            stage_rows = stage_rows[:max_windows_per_stage]
+        for need, row in stage_rows:
+            rows.append(row)
+            rhs.append(need)
+
+    ub = np.full(n_vars, float(layers_per_stage))
+    if not rows:
+        diag = [0] * n_vars
+        table = [[0] * n for _ in range(d_p)]
+        return CkptSolution("optimal", diag, table, 0.0)
+
+    res = solve_cover_ilp(np.vstack(rows), np.asarray(rhs), ub, gap=gap)
+    if res.status == "infeasible" or res.x is None:
+        return CkptSolution("infeasible", [], [], math.inf, ilp=res)
+
+    diag = [int(round(v)) for v in res.x]
+    table = [[0] * n for _ in range(d_p)]
+    for p in range(1, d_p + 1):
+        for k in range(n):
+            table[p - 1][k] = diag[diag_index(d_p, p, f2b[k])]
+
+    if f_hat is None:
+        avg_fwd = sum(cm.t_tot(c) for c in chunks) / n
+        f_hat = avg_fwd / m.n_layers
+    recompute = f_hat * sum(diag)
+    return CkptSolution(res.status, diag, table, recompute, ilp=res)

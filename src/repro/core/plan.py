@@ -1,0 +1,451 @@
+"""Core datatypes for the InfiniPipe solver stack.
+
+Everything in ``repro.core`` is pure Python/NumPy (host-side "solver" of the
+paper's disaggregated architecture, Fig. 4). JAX is deliberately not imported
+here so the planner can run on CPU workers that never initialize a device
+runtime, and so planning can overlap with the executor's training step.
+
+The uniform chunk representation follows §III-A.1 of the paper: every chunk is
+``{C, S}`` where ``C`` is the causal context length already processed by
+preceding slices of the same sequence (0 for batched chunks) and ``S`` is the
+set of slice lengths packed into the chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "ChunkKind",
+    "Slice",
+    "Chunk",
+    "SequenceInfo",
+    "ModelSpec",
+    "ClusterSpec",
+    "Coefficients",
+    "PipelinePlan",
+    "ExecutionPlan",
+    "TickOp",
+    "Tick",
+]
+
+
+class ChunkKind(str, enum.Enum):
+    BATCHED = "batched"  # pack of short sequences, C == 0
+    SPLIT = "split"      # one slice of a long sequence, C > 0 or more slices follow
+    HYBRID = "hybrid"    # tail slice of a long sequence packed with shorts
+
+
+@dataclass(frozen=True)
+class Slice:
+    """A contiguous token range of one logical sequence."""
+
+    seq_id: int
+    start: int          # token offset within the sequence
+    length: int
+    is_tail: bool       # last slice of its sequence (or a whole short sequence)
+
+    def __post_init__(self) -> None:
+        if self.length <= 0:
+            raise ValueError(f"slice length must be positive, got {self.length}")
+        if self.start < 0:
+            raise ValueError(f"slice start must be >= 0, got {self.start}")
+
+
+@dataclass(frozen=True)
+class Chunk:
+    """EPP micro-batch: the paper's uniform ``{C, S}`` representation.
+
+    ``has_dependents`` is the indicator the paper writes as ``(1 - I_k)``:
+    True iff some *later* chunk of the same sequence will still attend to this
+    chunk's keys/values. Only non-tail split chunks have dependents; their KV
+    cannot be freed under checkpointing (Eq. 9) and their dKV is materialized
+    throughout the tail's backward (Eq. 5, the ``M_dkv`` term).
+    """
+
+    kind: ChunkKind
+    context: int                 # C: causal context length (tokens) preceding s0
+    slices: Tuple[Slice, ...]    # S (for SPLIT/HYBRID, slices[0] is s0, the sequence slice)
+
+    def __post_init__(self) -> None:
+        if self.kind is ChunkKind.BATCHED and self.context != 0:
+            raise ValueError("batched chunks must have zero context")
+        if self.kind is not ChunkKind.BATCHED and not self.slices:
+            raise ValueError("split/hybrid chunks need at least the sequence slice")
+
+    # -- token accounting ---------------------------------------------------
+    @property
+    def tokens(self) -> int:
+        return sum(s.length for s in self.slices)
+
+    @property
+    def s0(self) -> int:
+        """Length of the (split) sequence slice; 0 for batched chunks."""
+        if self.kind is ChunkKind.BATCHED:
+            return 0
+        return self.slices[0].length
+
+    @property
+    def seq_id(self) -> Optional[int]:
+        """The long sequence this chunk belongs to (None for batched)."""
+        if self.kind is ChunkKind.BATCHED:
+            return None
+        return self.slices[0].seq_id
+
+    @property
+    def has_dependents(self) -> bool:
+        if self.kind is ChunkKind.BATCHED:
+            return False
+        return not self.slices[0].is_tail
+
+    @property
+    def short_slices(self) -> Tuple[Slice, ...]:
+        """Packed short sequences (everything but s0)."""
+        if self.kind is ChunkKind.BATCHED:
+            return self.slices
+        return self.slices[1:]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind.value,
+            "context": self.context,
+            "slices": [dataclasses.asdict(s) for s in self.slices],
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "Chunk":
+        return Chunk(
+            kind=ChunkKind(d["kind"]),
+            context=d["context"],
+            slices=tuple(Slice(**s) for s in d["slices"]),
+        )
+
+
+@dataclass
+class SequenceInfo:
+    """Per-sequence bookkeeping produced by the sequence processor."""
+
+    seq_id: int
+    length: int
+    n_chunks: int            # how many chunks this sequence spans
+    chunk_ids: List[int]     # indices into the global chunk list, slice order
+
+
+# ---------------------------------------------------------------------------
+# Specs shared between the solver and the executor.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """The subset of an architecture config the cost model needs.
+
+    All dimension names follow the paper's notation where one exists:
+    ``D`` = d_model, ``D_kv`` = total KV width (n_kv_heads * head_dim), ``L`` =
+    n_layers, ``e`` = bytes per activation element.
+    """
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # --- optional family extensions ---
+    n_experts: int = 0            # routed experts (0 => dense MLP)
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    kv_lora_rank: int = 0         # > 0 => MLA (deepseek): context stores latent
+    qk_rope_dim: int = 0          # MLA decoupled rope dim
+    ssm_state: int = 0            # > 0 => mamba mixer present
+    ssm_conv: int = 4
+    d_inner: int = 0              # mamba inner width (default 2*d_model)
+    attn_free: bool = False       # pure SSM (falcon-mamba): no attention at all
+    hybrid_parallel: bool = False # hymba: attention and mamba heads in parallel
+    local_window: int = 0         # sliding-window size for local layers
+    local_global_ratio: int = 0   # N local layers per 1 global layer (gemma3: 5)
+    qk_norm: bool = False
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    tie_embeddings: bool = True
+    bytes_per_act: int = 2        # e: bf16 activations
+
+    # ------------------------------------------------------------------
+    @property
+    def d_kv(self) -> int:
+        """D_kv: total key (or value) width per layer as stored for context."""
+        if self.kv_lora_rank > 0:
+            # MLA: the context buffer stores the compressed latent + rope key.
+            # (Halved because the latent is shared by K and V; the cost model
+            # multiplies KV storage by 2.)
+            return (self.kv_lora_rank + self.qk_rope_dim) // 2 or 1
+        if self.attn_free:
+            return 0
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_head_total(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def inner(self) -> int:
+        return self.d_inner if self.d_inner else 2 * self.d_model
+
+    def n_global_layers(self) -> int:
+        """Number of full-attention (global) layers."""
+        if self.attn_free:
+            return 0
+        if self.local_global_ratio <= 0:
+            return self.n_layers
+        period = self.local_global_ratio + 1
+        return (self.n_layers + period - 1) // period
+
+    def n_local_layers(self) -> int:
+        if self.attn_free:
+            return 0
+        return self.n_layers - self.n_global_layers()
+
+    # --- parameter counting (used for M_ms, roofline MODEL_FLOPS) --------
+    def param_count(self) -> int:
+        D, Dh, Hq, Hkv = self.d_model, self.head_dim, self.n_heads, self.n_kv_heads
+        per_layer = 0
+        if not self.attn_free:
+            if self.kv_lora_rank > 0:
+                r, rr = self.kv_lora_rank, self.qk_rope_dim
+                per_layer += D * (Hq * (Dh + rr))                   # q proj (+rope part)
+                per_layer += D * (r + rr)                           # kv down
+                per_layer += r * (Hq * Dh * 2)                      # k/v up
+                per_layer += Hq * Dh * D                            # o proj
+            else:
+                per_layer += D * Hq * Dh + 2 * D * Hkv * Dh + Hq * Dh * D
+        if self.ssm_state > 0:
+            di, ds = self.inner, self.ssm_state
+            per_layer += D * 2 * di            # in proj (x, z)
+            per_layer += di * self.ssm_conv    # conv
+            per_layer += di * (2 * ds + 2)     # B, C, dt projections (approx)
+            per_layer += di * D                # out proj
+            per_layer += di * ds               # A
+        if self.n_experts > 0:
+            per_layer += D * self.n_experts    # router
+            per_layer += self.n_experts * 3 * D * self.d_ff_expert
+            per_layer += self.n_shared_experts * 3 * D * self.d_ff_expert
+        elif self.d_ff > 0 and not (self.attn_free and self.ssm_state > 0):
+            per_layer += 3 * D * self.d_ff     # SwiGLU
+        per_layer += 2 * D                     # norms
+        total = self.n_layers * per_layer
+        if self.is_encoder_decoder:
+            enc_per_layer = per_layer + D * Hq * Dh + 2 * D * Hkv * Dh + Hq * Dh * D
+            total += self.n_encoder_layers * enc_per_layer
+        total += self.vocab * D * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k + shared)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        dead = (self.n_experts - self.top_k) * 3 * self.d_model * self.d_ff_expert
+        return self.param_count() - self.n_layers * dead
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Target hardware. Defaults = TPU v5e per the assignment constants."""
+
+    d_p: int = 16                # pipeline stages (mesh axis "data")
+    d_s: int = 16                # SP/FSDP/EP degree (mesh axis "model")
+    n_pods: int = 1              # DP over pods (mesh axis "pod")
+    flops_per_chip: float = 197e12      # bf16 peak
+    hbm_bytes: float = 16e9             # v5e HBM capacity
+    hbm_bw: float = 819e9               # bytes/s
+    ici_bw: float = 50e9                # bytes/s per link
+    dcn_bw: float = 25e9 / 8            # inter-pod, per host
+    mfu: float = 0.5                    # achievable fraction of peak (refined by fit)
+    mem_fraction: float = 0.92          # usable fraction of HBM
+
+    @property
+    def n_devices(self) -> int:
+        return self.d_p * self.d_s  # per pod (the paper's N = d_s * d_p)
+
+    @property
+    def effective_flops(self) -> float:
+        return self.flops_per_chip * self.mfu
+
+    @property
+    def capacity_bytes(self) -> float:
+        return self.hbm_bytes * self.mem_fraction
+
+    def with_(self, **kw: Any) -> "ClusterSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass
+class Coefficients:
+    """Regression-refined cost-model coefficients (§III-A: 'verified and
+    refined via offline profiling and regression fitting').
+
+    alpha1: seconds per (token-pair) of causal attention  [quadratic term]
+    alpha2: seconds per token of position-independent work [linear term]
+    beta1:  fixed per-chunk overhead per stage (launch/dispatch)
+    All are *whole-model* coefficients; Eq. 1 divides by N and d_p.
+    """
+
+    alpha1: float
+    alpha2: float
+    beta1: float
+    a2a_bw: float          # effective all-to-all bandwidth (bytes/s per device)
+    a2a_latency: float     # per-collective latency (s)
+    ag_bw: float           # effective all-gather bandwidth for allgather-kv SP
+    m_token: float         # activation bytes per token, whole model (M_token)
+    m_logits: float        # logits bytes per token (M_logits)
+
+    def to_json(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, float]) -> "Coefficients":
+        return Coefficients(**d)
+
+
+# ---------------------------------------------------------------------------
+# Schedule / plan artifacts.
+# ---------------------------------------------------------------------------
+
+
+class TickOp(str, enum.Enum):
+    FWD = "F"
+    BWD = "B"
+    BUBBLE = "."
+
+
+@dataclass(frozen=True)
+class Tick:
+    op: TickOp
+    chunk: int = -1  # chunk index within the pipeline; -1 for bubbles
+
+
+@dataclass
+class PipelinePlan:
+    """One 1F1B pipeline: an ordered set of chunks + schedule + ckpt config."""
+
+    chunks: List[Chunk]
+    # forward execution order is list order; f2b maps fwd index -> bwd index
+    f2b: List[int]
+    # per-stage tick schedule (stage-major): schedule[p] is the list of Ticks
+    schedule: List[List[Tick]] = field(default_factory=list)
+    # ckpt[p][k]: checkpointed layers for chunk k (fwd index) at stage p
+    ckpt: List[List[int]] = field(default_factory=list)
+    # the diagonal variables C of Eq. 15 (len == n + d_p - 1)
+    ckpt_diag: List[int] = field(default_factory=list)
+    n_split: int = 1          # N_split: max #chunks of any sequence in this pipeline
+    est_time: float = 0.0     # simulator makespan estimate (s)
+    est_recompute: float = 0.0
+    est_peak_mem: List[float] = field(default_factory=list)  # per stage (bytes)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def b2f(self) -> List[int]:
+        inv = [0] * len(self.f2b)
+        for f, b in enumerate(self.f2b):
+            inv[b] = f
+        return inv
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "chunks": [c.to_json() for c in self.chunks],
+            "f2b": self.f2b,
+            "ckpt": self.ckpt,
+            "ckpt_diag": self.ckpt_diag,
+            "n_split": self.n_split,
+            "est_time": self.est_time,
+            "est_recompute": self.est_recompute,
+            "est_peak_mem": self.est_peak_mem,
+            "schedule": [[(t.op.value, t.chunk) for t in row] for row in self.schedule],
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "PipelinePlan":
+        return PipelinePlan(
+            chunks=[Chunk.from_json(c) for c in d["chunks"]],
+            f2b=list(d["f2b"]),
+            schedule=[[Tick(TickOp(op), ch) for op, ch in row] for row in d["schedule"]],
+            ckpt=[list(r) for r in d["ckpt"]],
+            ckpt_diag=list(d["ckpt_diag"]),
+            n_split=d["n_split"],
+            est_time=d["est_time"],
+            est_recompute=d["est_recompute"],
+            est_peak_mem=list(d["est_peak_mem"]),
+        )
+
+
+@dataclass
+class ExecutionPlan:
+    """The solver's full output for one global batch (per pod)."""
+
+    pipelines: List[PipelinePlan]
+    sequences: List[SequenceInfo]
+    k_split: int                       # the tuned hyper-parameter K of Alg. 1
+    chunk_capacity: int                # T_m rounded up to the bucket geometry
+    mesh_slices: List[int]             # Alg. 1 line 1 slice-length mesh
+    est_total_time: float = 0.0
+    solve_time: float = 0.0
+    remat_mode: str = "uniform"        # "uniform" | "per_chunk"
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def n_chunks(self) -> int:
+        return sum(p.n_chunks for p in self.pipelines)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(c.tokens for p in self.pipelines for c in p.chunks)
+
+    def uniform_ckpt(self) -> int:
+        """Max ILP l_ckpt over all (p, k): the 'uniform' executor policy."""
+        best = 0
+        for p in self.pipelines:
+            for row in p.ckpt:
+                for v in row:
+                    best = max(best, v)
+        return best
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "pipelines": [p.to_json() for p in self.pipelines],
+            "sequences": [dataclasses.asdict(s) for s in self.sequences],
+            "k_split": self.k_split,
+            "chunk_capacity": self.chunk_capacity,
+            "mesh_slices": self.mesh_slices,
+            "est_total_time": self.est_total_time,
+            "solve_time": self.solve_time,
+            "remat_mode": self.remat_mode,
+            "meta": self.meta,
+        }
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json())
+
+    @staticmethod
+    def loads(s: str) -> "ExecutionPlan":
+        d = json.loads(s)
+        return ExecutionPlan(
+            pipelines=[PipelinePlan.from_json(p) for p in d["pipelines"]],
+            sequences=[SequenceInfo(**q) for q in d["sequences"]],
+            k_split=d["k_split"],
+            chunk_capacity=d["chunk_capacity"],
+            mesh_slices=list(d["mesh_slices"]),
+            est_total_time=d["est_total_time"],
+            solve_time=d["solve_time"],
+            remat_mode=d.get("remat_mode", "uniform"),
+            meta=d.get("meta", {}),
+        )

@@ -1,0 +1,201 @@
+"""Top-level InfiniPipe solver (the "solver" box of Fig. 4).
+
+For one global (per-pod) batch of sequence lengths it:
+
+1. sweeps the slice-count hyper-parameter ``K`` over ``[1, d_p + 4]``
+   (§III-B: automatically tuned),
+2. runs Alg. 1 chunking, the Eq. 14 grouping DP (which internally solves the
+   Alg. 2 checkpointing ILP per candidate pipeline),
+3. scores each K by the cycle-accurate simulator's makespan summed over the
+   scheduled 1F1B pipelines (gradient accumulation between them),
+4. emits an :class:`ExecutionPlan` with bucketed chunk geometry so the
+   executor's compiled program is reused across iterations.
+
+The planner is pure host-side Python; `launch/train.py` overlaps it with the
+executor's previous step, reproducing the paper's disaggregated architecture.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .chunking import ChunkingResult, chunk_sequences
+from .costs import CostModel
+from .grouping import GroupingResult, group_sequences
+from .plan import ClusterSpec, ExecutionPlan, ModelSpec
+from .schedule import build_schedule
+
+__all__ = ["plan_batch", "PlannerConfig"]
+
+
+@dataclass
+class PlannerConfig:
+    k_min: int = 1
+    k_max: Optional[int] = None       # default: d_p + 4 (paper's range)
+    ilp_gap: float = 0.02             # SCIP-style optimality gap (§V-F)
+    remat_mode: str = "uniform"       # "uniform" | "per_chunk"
+    capacity_bytes: Optional[float] = None
+    token_capacity: Optional[int] = None
+    bucket_rounding: int = 512        # chunk-capacity bucket granularity
+    fixed_k: Optional[int] = None     # pin K (Seq1F1B-style baselines)
+    uniform_split: bool = False       # ablate: evenly split (w/o wbc)
+    disable_ckpt: bool = False        # ablate: no checkpointing
+    full_ckpt: bool = False           # ablate: checkpoint everything
+
+
+def _round_up(v: int, q: int) -> int:
+    return ((max(v, 1) + q - 1) // q) * q
+
+
+def _apply_ablations(cm: CostModel, cfg: PlannerConfig,
+                     grouping: GroupingResult) -> GroupingResult:
+    if cfg.disable_ckpt or cfg.full_ckpt:
+        per_stage = max(1, cm.model.n_layers // cm.cluster.d_p)
+        val = 0 if cfg.disable_ckpt else per_stage
+        for p in grouping.pipelines:
+            n = len(p.chunks)
+            p.ckpt = [[val] * n for _ in range(cm.cluster.d_p)]
+            p.ckpt_diag = [val] * (n + cm.cluster.d_p - 1)
+            avg_fwd = sum(cm.t_tot(c) for c in p.chunks) / max(n, 1)
+            p.est_recompute = (avg_fwd / cm.model.n_layers) * sum(p.ckpt_diag)
+    return grouping
+
+
+def _quick_estimate(cm: CostModel, chunking: ChunkingResult) -> float:
+    """Cheap makespan proxy for K pre-selection: steady-state per-stage work
+    plus the Eq. 13 warmup-cooldown delta (no grouping/ILP/simulation)."""
+    chunks = chunking.chunks
+    if not chunks:
+        return 0.0
+    per_stage = sum(cm.t_tot(c, per_stage=True)
+                    + cm.t_tot(c, bwd=True, per_stage=True) for c in chunks)
+    return per_stage + cm.delta_warmup(chunks)
+
+
+def plan_batch(cm: CostModel, lengths: Sequence[int],
+               cfg: Optional[PlannerConfig] = None) -> ExecutionPlan:
+    cfg = cfg or PlannerConfig()
+    t0 = time.perf_counter()
+    d_p = cm.cluster.d_p
+    k_max = cfg.k_max if cfg.k_max is not None else d_p + 4
+    ks = ([cfg.fixed_k] if cfg.fixed_k is not None
+          else list(range(cfg.k_min, k_max + 1)))
+
+    # Two-phase sweep: rank all K by a cheap analytic proxy, then run the
+    # full grouping-DP + ILP + simulation only for the most promising ones
+    # (falling back down the ranking if memory-infeasible).
+    if len(ks) > 5:
+        ranked = sorted(
+            ks, key=lambda k: _quick_estimate(
+                cm, chunk_sequences(cm, lengths, k,
+                                    capacity=cfg.token_capacity)))
+        ks = ranked
+
+    best: Optional[Tuple[float, ChunkingResult, GroupingResult]] = None
+    tried: Dict[int, float] = {}
+    full_solves = 0
+    for k in ks:
+        if best is not None and full_solves >= 4:
+            break
+        full_solves += 1
+        chunking = chunk_sequences(cm, lengths, k,
+                                   capacity=cfg.token_capacity)
+        if cfg.uniform_split and k > 1:
+            chunking = _uniform_chunking(cm, lengths, k, cfg)
+        grouping = group_sequences(cm, chunking, gap=cfg.ilp_gap,
+                                   capacity=cfg.capacity_bytes)
+        if not grouping.feasible:
+            tried[k] = math.inf
+            continue
+        grouping = _apply_ablations(cm, cfg, grouping)
+        total = sum(p.est_time for p in grouping.pipelines)
+        if cfg.disable_ckpt or cfg.full_ckpt:
+            # re-simulate with the forced ckpt tables
+            from .schedule import PipelineSimulator
+            total = 0.0
+            for p in grouping.pipelines:
+                res = PipelineSimulator(cm, p.chunks, p.f2b, p.n_split,
+                                        p.ckpt).run()
+                p.est_time = res.makespan
+                p.est_peak_mem = res.per_stage_peak_mem
+                total += res.makespan
+        tried[k] = total
+        if best is None or total < best[0]:
+            best = (total, chunking, grouping)
+    if best is None:
+        raise RuntimeError(
+            f"no feasible plan for any K in {ks}; lengths={list(lengths)[:8]}…")
+
+    total, chunking, grouping = best
+    cap = _round_up(max(chunking.max_chunk_tokens, 1), cfg.bucket_rounding)
+    for p in grouping.pipelines:
+        p.schedule = build_schedule(len(p.chunks), d_p, p.n_split, p.f2b)
+    plan = ExecutionPlan(
+        pipelines=grouping.pipelines,
+        sequences=chunking.sequences,
+        k_split=chunking.k_split,
+        chunk_capacity=cap,
+        mesh_slices=chunking.mesh,
+        est_total_time=total,
+        solve_time=time.perf_counter() - t0,
+        remat_mode=cfg.remat_mode,
+        meta={"k_sweep": {str(k): v for k, v in tried.items()},
+              "sp_policy": cm.sp_policy},
+    )
+    return plan
+
+
+def _uniform_chunking(cm: CostModel, lengths: Sequence[int], k: int,
+                      cfg: PlannerConfig) -> ChunkingResult:
+    """'w/o wbc' ablation + the Seq1F1B baseline: split every long sequence
+    into K *equal-length* slices and pack shorts into fixed-size chunks."""
+    from .plan import Chunk, ChunkKind, SequenceInfo, Slice
+
+    max_len = max(lengths)
+    slice_len = (max_len + k - 1) // k
+    chunks: List = []
+    seqinfos: List[SequenceInfo] = []
+    order = sorted(range(len(lengths)), key=lambda i: -lengths[i])
+    pack: List[Slice] = []
+    pack_tokens = 0
+
+    def flush_pack() -> None:
+        nonlocal pack, pack_tokens
+        if pack:
+            chunks.append(Chunk(kind=ChunkKind.BATCHED, context=0,
+                                slices=tuple(pack)))
+            pack, pack_tokens = [], 0
+
+    for sid in order:
+        ln = lengths[sid]
+        if ln > slice_len:
+            ids = []
+            off = 0
+            while off < ln:
+                cur = min(slice_len, ln - off)
+                sl = Slice(seq_id=sid, start=off, length=cur,
+                           is_tail=(off + cur == ln))
+                chunks.append(Chunk(kind=ChunkKind.SPLIT, context=off,
+                                    slices=(sl,)))
+                ids.append(len(chunks) - 1)
+                off += cur
+            seqinfos.append(SequenceInfo(sid, ln, len(ids), ids))
+        else:
+            if pack_tokens + ln > slice_len:
+                flush_pack()
+            pack.append(Slice(seq_id=sid, start=0, length=ln, is_tail=True))
+            pack_tokens += ln
+            seqinfos.append(SequenceInfo(sid, ln, 1, []))
+    flush_pack()
+    # fix chunk ids for packed sequences
+    for ci, c in enumerate(chunks):
+        for sl in c.slices:
+            for si in seqinfos:
+                if si.seq_id == sl.seq_id and not si.chunk_ids:
+                    si.chunk_ids = [ci]
+    return ChunkingResult(chunks=chunks, sequences=seqinfos,
+                          mesh=[slice_len] * k, t_t=0.0, t_m=slice_len,
+                          k_split=k)

@@ -1,0 +1,317 @@
+"""1F1B schedule construction, chunks-window enumeration, and a
+cycle-accurate pipeline simulator.
+
+Three consumers:
+
+1. :func:`enumerate_windows` feeds Alg. 2's ILP the distinct chunks windows
+   ``W_p(t)`` (Eq. 7-8). Window *content* is duration-independent — it only
+   depends on the per-stage op order, which the 1F1B policy fixes — so the
+   ILP never needs timing.
+2. :func:`build_schedule` emits the per-stage tick list the executor and the
+   simulator share.
+3. :class:`PipelineSimulator` is an event-driven simulator with true chunk
+   durations (from the cost model) and token-level-PP dependencies. It
+   produces makespan, per-stage bubble ratios, a time breakdown
+   (compute / SP-comm / P2P / bubble / recompute) and per-stage peak memory —
+   the measurement substrate for the paper-figure benchmarks (Figs. 7-12)
+   and the straggler-mitigation loop.
+
+Token-level PP dependency (§II-A): forward of slice i must follow forward of
+slices < i of the same sequence; backward of slice i must follow backward of
+slices > i. Both are encoded via the fwd order (slices emitted causally) and
+the ``f2b`` map (slices reversed within each sequence).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from .costs import CostModel
+from .plan import Chunk, ChunkKind, Tick, TickOp
+
+__all__ = [
+    "backward_order",
+    "enumerate_windows",
+    "build_schedule",
+    "PipelineSimulator",
+    "SimResult",
+]
+
+
+def backward_order(chunks: Sequence[Chunk]) -> List[int]:
+    """f2b: fwd index -> bwd index. Slices of one sequence reverse; everything
+    else keeps its fwd position (Fig. 2 semantics)."""
+    n = len(chunks)
+    f2b = [0] * n
+    # group consecutive chunks belonging to the same long sequence
+    i = 0
+    pos = 0
+    while i < n:
+        sid = chunks[i].seq_id
+        j = i
+        if sid is not None:
+            while j + 1 < n and chunks[j + 1].seq_id == sid:
+                j += 1
+        # fwd block [i..j] maps to bwd block [pos..pos+(j-i)] reversed
+        blk = j - i + 1
+        for t in range(blk):
+            f2b[i + t] = pos + (blk - 1 - t)
+        pos += blk
+        i = j + 1
+    return f2b
+
+
+def window_limit(d_p: int, stage: int, n_split: int) -> int:
+    """Eq. 7: |W_p| = d_p - p + N_split (stage is 1-based)."""
+    return d_p - stage + n_split
+
+
+def _stage_op_order(n: int, d_p: int, stage: int, n_split: int,
+                    f2b: Sequence[int]) -> List[Tick]:
+    """Per-stage op order under the 1F1B policy with in-flight cap Eq. 7.
+
+    Forward ops run in fwd-index order; backward ops in bwd-index order; a
+    backward with bwd index j requires its fwd done at this stage. The stage
+    runs fwds until the in-flight cap, then strictly alternates B, F while
+    both remain, then drains the remaining Bs (cooldown).
+    """
+    cap = max(1, window_limit(d_p, stage, n_split))
+    b2f = [0] * n
+    for f, b in enumerate(f2b):
+        b2f[b] = f
+    order: List[Tick] = []
+    nf = nb = 0
+    resident: Set[int] = set()
+    while nb < n:
+        want_bwd = (nf - nb) >= cap or nf == n
+        if want_bwd and b2f[nb] in resident:
+            resident.discard(b2f[nb])
+            order.append(Tick(TickOp.BWD, b2f[nb]))
+            nb += 1
+        elif nf < n:
+            resident.add(nf)
+            order.append(Tick(TickOp.FWD, nf))
+            nf += 1
+        else:
+            # forced wait: next bwd's fwd not yet at this stage (cannot happen
+            # with in-order fwds since b2f[nb] < nf required; guard anyway)
+            if b2f[nb] in resident or b2f[nb] < nf:
+                resident.discard(b2f[nb])
+                order.append(Tick(TickOp.BWD, b2f[nb]))
+                nb += 1
+            else:  # pragma: no cover - defensive
+                raise RuntimeError("deadlocked schedule")
+    return order
+
+
+def build_schedule(n_chunks: int, d_p: int, n_split: int,
+                   f2b: Sequence[int]) -> List[List[Tick]]:
+    """Per-stage (1-based stages stored at index p-1) op order."""
+    return [
+        _stage_op_order(n_chunks, d_p, p, n_split, f2b)
+        for p in range(1, d_p + 1)
+    ]
+
+
+def enumerate_windows(n_chunks: int, d_p: int, n_split: int,
+                      f2b: Sequence[int]) -> List[List[FrozenSet[int]]]:
+    """Distinct chunks windows per stage: the resident set right after each
+    forward (the per-stage activation peaks Eq. 8 constrains)."""
+    out: List[List[FrozenSet[int]]] = []
+    for p in range(1, d_p + 1):
+        order = _stage_op_order(n_chunks, d_p, p, n_split, f2b)
+        resident: Set[int] = set()
+        seen: Set[FrozenSet[int]] = set()
+        windows: List[FrozenSet[int]] = []
+        for t in order:
+            if t.op is TickOp.FWD:
+                resident.add(t.chunk)
+                fs = frozenset(resident)
+                if fs not in seen:
+                    seen.add(fs)
+                    windows.append(fs)
+            else:
+                resident.discard(t.chunk)
+        out.append(windows)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulator.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    bubble_ratio: float                 # aggregate idle / (d_p * makespan)
+    per_stage_busy: List[float]
+    per_stage_peak_mem: List[float]     # bytes (activations + model states)
+    breakdown: Dict[str, float]         # compute / sp_comm / p2p / recompute / bubble
+    op_times: Dict[Tuple[int, str, int], Tuple[float, float]]  # (stage,op,chunk)->(t0,t1)
+
+    @property
+    def total_device_time(self) -> float:
+        return self.makespan * len(self.per_stage_busy)
+
+
+class PipelineSimulator:
+    """Cycle-accurate 1F1B simulation of one pipeline on ``d_p`` stages.
+
+    Durations come from the cost model (per-stage fwd / bwd + SP comm +
+    recompute per the ckpt table); stage boundaries add a P2P latency for the
+    boundary activation. ``stage_slowdowns`` in the cost model propagate here,
+    which is how straggler-aware replanning closes the loop.
+    """
+
+    def __init__(self, cm: CostModel, chunks: Sequence[Chunk],
+                 f2b: Sequence[int], n_split: int,
+                 ckpt: Optional[Sequence[Sequence[int]]] = None) -> None:
+        self.cm = cm
+        self.chunks = list(chunks)
+        self.f2b = list(f2b)
+        self.n_split = max(1, n_split)
+        self.d_p = cm.cluster.d_p
+        n = len(chunks)
+        self.ckpt = ([[0] * n for _ in range(self.d_p)]
+                     if ckpt is None else [list(r) for r in ckpt])
+        self.b2f = [0] * n
+        for f, b in enumerate(self.f2b):
+            self.b2f[b] = f
+
+    # -- durations ----------------------------------------------------------
+    def _p2p_time(self, chunk: Chunk) -> float:
+        m, cl = self.cm.model, self.cm.cluster
+        vol = m.bytes_per_act * m.d_model * chunk.tokens / cl.d_s
+        return vol / cl.ici_bw + 1e-6
+
+    def _dur(self, stage: int, op: TickOp, k: int) -> Tuple[float, float, float]:
+        """(compute_s, sp_comm_s, recompute_s) for chunk k at 1-based stage.
+
+        A straggler stage slows everything it executes — its compute AND the
+        collectives it participates in — so the stage slowdown multiplies the
+        whole op duration here.
+        """
+        c = self.chunks[k]
+        slow = self.cm._slowdown(stage)
+        if op is TickOp.FWD:
+            comp = self.cm.t_comp(c, per_stage=True, stage=stage)
+            comm = slow * self.cm.t_sp_comm(c, per_stage=True)
+            return comp, comm, 0.0
+        comp = self.cm.t_comp_bwd(c, per_stage=True, stage=stage)
+        comm = slow * 2.0 * self.cm.t_sp_comm(c, per_stage=True)
+        l = self.ckpt[stage - 1][k]
+        rec = slow * (self.cm.t_recompute(c, l) / self.d_p) if l else 0.0
+        return comp, comm, rec
+
+    # -- run ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        n = len(self.chunks)
+        d_p = self.d_p
+        orders = build_schedule(n, d_p, self.n_split, self.f2b)
+        ptr = [0] * d_p                       # next op index per stage
+        stage_free = [0.0] * d_p
+        fwd_done: Dict[Tuple[int, int], float] = {}   # (stage, chunk) -> t
+        bwd_done: Dict[Tuple[int, int], float] = {}
+        op_times: Dict[Tuple[int, str, int], Tuple[float, float]] = {}
+        busy = [0.0] * d_p
+        breakdown = {"compute": 0.0, "sp_comm": 0.0, "p2p": 0.0,
+                     "recompute": 0.0, "bubble": 0.0}
+
+        def ready_time(p: int, t: Tick) -> Optional[float]:
+            """Earliest start honoring cross-stage deps; None if dep missing."""
+            k = t.chunk
+            if t.op is TickOp.FWD:
+                if p == 0:
+                    return stage_free[p]
+                dep = fwd_done.get((p - 1, k))
+                if dep is None:
+                    return None
+                return max(stage_free[p], dep + self._p2p_time(self.chunks[k]))
+            # BWD: needs bwd at stage p+1 and own fwd at p
+            own = fwd_done.get((p, k))
+            if own is None:
+                return None
+            if p == d_p - 1:
+                return max(stage_free[p], own)
+            dep = bwd_done.get((p + 1, k))
+            if dep is None:
+                return None
+            return max(stage_free[p], own, dep + self._p2p_time(self.chunks[k]))
+
+        remaining = sum(len(o) for o in orders)
+        guard = 0
+        while remaining > 0:
+            guard += 1
+            if guard > 8 * remaining + 64 + 8 * n * d_p:
+                raise RuntimeError("simulator livelock — bad schedule")
+            progressed = False
+            # pick the stage whose next op can start earliest
+            best: Optional[Tuple[float, int]] = None
+            for p in range(d_p):
+                if ptr[p] >= len(orders[p]):
+                    continue
+                rt = ready_time(p, orders[p][ptr[p]])
+                if rt is None:
+                    continue
+                if best is None or rt < best[0]:
+                    best = (rt, p)
+            if best is None:  # pragma: no cover - defensive
+                raise RuntimeError("deadlock: no ready op")
+            rt, p = best
+            t = orders[p][ptr[p]]
+            comp, comm, rec = self._dur(p + 1, t.op, t.chunk)
+            dur = comp + comm + rec
+            start = rt
+            end = start + dur
+            breakdown["compute"] += comp
+            breakdown["sp_comm"] += comm
+            breakdown["recompute"] += rec
+            if (t.op is TickOp.FWD and p > 0) or (t.op is TickOp.BWD and p < d_p - 1):
+                breakdown["p2p"] += self._p2p_time(self.chunks[t.chunk])
+            busy[p] += dur
+            stage_free[p] = end
+            if t.op is TickOp.FWD:
+                fwd_done[(p, t.chunk)] = end
+            else:
+                bwd_done[(p, t.chunk)] = end
+            op_times[(p + 1, t.op.value, t.chunk)] = (start, end)
+            ptr[p] += 1
+            remaining -= 1
+            progressed = True
+            if not progressed:  # pragma: no cover
+                raise RuntimeError("no progress")
+
+        makespan = max(stage_free)
+        idle = sum(makespan - b for b in busy)
+        breakdown["bubble"] = idle
+        peak = self._peak_memory(orders)
+        return SimResult(
+            makespan=makespan,
+            bubble_ratio=idle / (d_p * makespan) if makespan > 0 else 0.0,
+            per_stage_busy=busy,
+            per_stage_peak_mem=peak,
+            breakdown=breakdown,
+            op_times=op_times,
+        )
+
+    def _peak_memory(self, orders: List[List[Tick]]) -> List[float]:
+        """Per-stage peak bytes under Eq. 8 with the solved ckpt table."""
+        peaks: List[float] = []
+        for p in range(1, self.d_p + 1):
+            ms = self.cm.m_model_states(p)
+            cur = ms
+            pk = ms
+            for t in orders[p - 1]:
+                l = self.ckpt[p - 1][t.chunk]
+                m = self.cm.m_act(p, self.chunks[t.chunk], l)
+                if t.op is TickOp.FWD:
+                    cur += m
+                    pk = max(pk, cur)
+                else:
+                    cur -= m
+            peaks.append(pk)
+        return peaks

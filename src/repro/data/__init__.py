@@ -1,0 +1,5 @@
+from .batching import ChunkBatch, materialize_chunks, materialize_plan
+from .synth import PRESETS, sample_corpus_batch, sample_lengths
+
+__all__ = ["ChunkBatch", "materialize_chunks", "materialize_plan",
+           "PRESETS", "sample_corpus_batch", "sample_lengths"]

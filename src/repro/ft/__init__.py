@@ -1,0 +1,3 @@
+from .failures import StragglerMonitor, replan_costmodel
+
+__all__ = ["StragglerMonitor", "replan_costmodel"]

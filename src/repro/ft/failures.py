@@ -1,0 +1,63 @@
+"""Fault tolerance: restart-from-checkpoint and straggler-aware replanning.
+
+Designed for thousands of nodes:
+
+* **Restart**: `launch/train.py --resume auto` finds the latest committed
+  checkpoint (partial saves are invisible — ckpt/checkpoint.py commits via
+  the manifest) and resumes; plans are NOT checkpointed — they are
+  deterministic functions of (data seed, step, mesh), so a restart on a
+  *different* mesh (elastic shrink after losing a pod) simply re-plans.
+* **Straggler mitigation**: the trainer records per-stage step times
+  (telemetry hook); when a stage's EWMA exceeds the median by
+  ``threshold``, the planner re-solves with per-stage slowdown multipliers
+  (CostModel.stage_slowdowns) — the chunking rebalances so the slow stage
+  receives proportionally lighter chunks. This is the EPP-native answer to
+  stragglers: reschedule work, don't wait.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import CostModel
+
+__all__ = ["StragglerMonitor", "replan_costmodel"]
+
+
+@dataclass
+class StragglerMonitor:
+    d_p: int
+    ewma: float = 0.3
+    threshold: float = 1.25            # x median => flagged
+    _t: Optional[np.ndarray] = None
+
+    def observe(self, per_stage_seconds: Sequence[float]) -> None:
+        x = np.asarray(per_stage_seconds, dtype=np.float64)
+        if self._t is None:
+            self._t = x
+        else:
+            self._t = (1 - self.ewma) * self._t + self.ewma * x
+
+    def slowdowns(self) -> Optional[List[float]]:
+        """Per-stage multipliers (>=1) if any straggler is flagged."""
+        if self._t is None:
+            return None
+        med = float(np.median(self._t))
+        if med <= 0:
+            return None
+        mult = np.maximum(self._t / med, 1.0)
+        if (mult < self.threshold).all():
+            return None
+        return [float(m) for m in mult]
+
+
+def replan_costmodel(cm: CostModel,
+                     monitor: StragglerMonitor) -> CostModel:
+    """Cost model for the next planning round, straggler-aware."""
+    slow = monitor.slowdowns()
+    if slow is None:
+        return cm
+    return cm.with_slowdowns(slow)

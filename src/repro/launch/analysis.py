@@ -1,0 +1,95 @@
+"""Dry-run artifact analysis helpers (NO jax/env side effects — safe to
+import from benchmarks)."""
+
+from __future__ import annotations
+
+import re
+
+def collective_scan(hlo: str) -> dict:
+    """Static per-occurrence operand bytes of every collective in the HLO.
+
+    Ops inside while loops appear once; the roofline multiplies by the known
+    scan trip counts (geometry), and the analytic model cross-checks.
+    """
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+    pat = re.compile(
+        r"(\w[\w.-]*) = (\w+)\[([\d,]*)\][^ ]* "
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"[ (]")
+    out: dict = {}
+    for m in pat.finditer(hlo):
+        dt, dims, kind = m.group(2), m.group(3), m.group(4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * dtype_bytes.get(dt, 4)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def analytic_collectives(cfg, geom, kind: str) -> dict:
+    """Exact per-step collective volume (bytes moved per device) from the
+    executor's own schedule — every collective in runtime/ is enumerated
+    here with its trip count."""
+    s = cfg.spec
+    e = 2  # bf16
+    d_s, d_p = geom.d_s, geom.d_p
+    out = {"ici_bytes": 0.0, "p2p_bytes": 0.0, "dcn_bytes": 0.0}
+    if kind in ("train", "prefill"):
+        n, cap = geom.n_chunks, geom.cap
+        cap_loc = cap // d_s
+        ticks = n + d_p - 1
+        L_s = geom.layers_per_stage
+        D = s.d_model
+        per_layer = 0.0
+        body = s.param_count() - s.vocab * D * (1 if s.tie_embeddings else 2)
+        if s.n_experts:
+            body -= s.n_layers * s.n_experts * 3 * D * s.d_ff_expert
+        zero_layer_vol = e * body / s.n_layers * (d_s - 1) / d_s
+        if getattr(geom, "zero3_mode", "per_tick") == "per_tick":
+            # ZeRO-3 param gather per layer PER TICK (skips EP experts)
+            per_layer += zero_layer_vol
+        if not s.attn_free:
+            if geom.policy == "ulysses":
+                per_layer += e * 2 * (s.d_head_total + s.d_kv) * cap / d_s
+            else:
+                per_layer += e * 2 * s.d_kv * cap * (d_s - 1) / d_s
+        if s.ssm_state:
+            per_layer += 4 * 2 * d_s * s.inner * s.ssm_state  # scan summaries
+        if s.n_experts:
+            per_layer += e * 2 * cap * D * (d_s - 1) / d_s  # EP gather+scatter
+        per_tick = L_s * per_layer
+        per_tick += e * cap * D * (d_s - 1) / d_s      # embed psum_scatter
+        per_tick += e * cap * D * (d_s - 1) / d_s      # CE hidden all-gather
+        out["ici_bytes"] = ticks * per_tick
+        out["p2p_bytes"] = ticks * e * cap_loc * D    # stage ppermute
+        if kind == "train":
+            # every forward collective transposes once in backward
+            # (all_gather <-> reduce_scatter, a2a <-> a2a); checkpointed
+            # layers re-run their forward gathers during recompute.
+            l_ck = getattr(geom, "l_ckpt", 0)
+            n_layers = max(s.n_layers, 1)
+            remat_frac = min(1.0, l_ck * d_p / n_layers)
+            out["ici_bytes"] *= (2.0 + remat_frac)
+            out["dcn_bytes"] = 2 * s.param_count() * 4 / max(d_s * d_p, 1)
+        if getattr(geom, "zero3_mode", "per_tick") == "per_step":
+            # one stage-wide gather (+ grad reduce-scatter in train)
+            once = L_s * zero_layer_vol * (2.0 if kind == "train" else 1.0)
+            out["ici_bytes"] += once
+    else:  # decode
+        nm, bm = geom.n_micro, geom.bm
+        ticks = nm + d_p - 1
+        L_s = geom.layers_per_stage
+        D = s.d_model
+        per_layer = e * (s.param_count() / s.n_layers) * (d_s - 1) / d_s
+        per_layer += 4 * bm * s.n_heads * (2 + s.head_dim)  # LSE psum merge
+        per_tick = L_s * per_layer + e * bm * D * 2
+        out["ici_bytes"] = ticks * per_tick
+        out["p2p_bytes"] = ticks * e * bm * D
+    return out
+
+

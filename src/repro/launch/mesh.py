@@ -1,0 +1,28 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state; the dry-run sets its
+placeholder-device XLA flag before any jax import (launch/dryrun.py).
+
+Axis semantics (DESIGN.md §2.2):
+  pod   — data parallel across pods (gradient all-reduce, optionally int8)
+  data  — pipeline stages d_p (stage-stacked params + ppermute)
+  model — SP/FSDP/EP d_s (ulysses / allgather-KV, ZeRO-3, expert parallel)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary meshes for tests/elastic rescale."""
+    import jax
+    return jax.make_mesh(shape, axes)

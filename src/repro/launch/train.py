@@ -1,0 +1,219 @@
+"""End-to-end EPP training driver (the paper's Fig. 4 runtime).
+
+Disaggregated solver/executor: while step i executes on devices, the host
+plans batch i+1 (the planner is pure NumPy). Plans are bucketed so compiled
+executables are reused; fault tolerance comes from CheckpointManager
+(restart) + StragglerMonitor (replanning with per-stage slowdowns).
+
+Runs end-to-end on CPU at reduced scale (examples/quickstart.py) and lowers
+unchanged for the production meshes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \\
+      --reduced --steps 20 --batch 16 --context 2048 --mesh 2x4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class TrainLoopConfig:
+    steps: int = 50
+    global_batch: int = 16
+    context: int = 2048
+    dataset: str = "github"
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 20
+    resume: bool = False
+    bucket_rounding: int = 256
+    compute_dtype: str = "bfloat16"
+
+
+def _bucket_key(plan, d_s: int) -> Tuple[int, int, int, int]:
+    """Bucket geometry: n_chunks rounds UP to a multiple of 8 (padding
+    chunks are fully masked) and ctx_cap to the capacity, so consecutive
+    iterations reuse one compiled executable."""
+    chunks = [c for p in plan.pipelines for c in p.chunks]
+    n = ((len(chunks) + 7) // 8) * 8
+    cap = ((plan.chunk_capacity + d_s - 1) // d_s) * d_s
+    max_ctx = max((c.context for c in chunks), default=0)
+    ctx_cap = ((max_ctx + cap + cap - 1) // cap) * cap
+    return (n, cap, ctx_cap, plan.uniform_ckpt())
+
+
+def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.ckpt import CheckpointManager
+    from repro.core import ClusterSpec, CostModel, PlannerConfig, plan_batch
+    from repro.data import materialize_plan, sample_corpus_batch
+    from repro.ft import StragglerMonitor, replan_costmodel
+    from repro.optim import init_opt_state
+    from repro.runtime import TrainStepBuilder, make_geometry
+    from repro.runtime.sharding import mesh_axis_names
+
+    pod, data, model = mesh_axis_names(mesh)
+    n_pods = mesh.shape[pod] if pod else 1
+    d_p, d_s = mesh.shape[data], mesh.shape[model]
+    dtype = jnp.bfloat16 if loop.compute_dtype == "bfloat16" else jnp.float32
+
+    base_cm = CostModel(cfg_arch.spec, ClusterSpec(d_p=d_p, d_s=d_s,
+                                                   n_pods=n_pods))
+    monitor = StragglerMonitor(d_p=d_p)
+    mgr = CheckpointManager(loop.ckpt_dir) if loop.ckpt_dir else None
+
+    step_cache: Dict[Tuple, Tuple] = {}
+    params = opt = None
+    start_step = 0
+
+    def plan_for(step: int):
+        cm = replan_costmodel(base_cm, monitor)
+        corpus = sample_corpus_batch(loop.dataset, loop.global_batch,
+                                     loop.context, cfg_arch.spec.vocab,
+                                     seed=loop.seed + step)
+        lengths = [len(v) for v in corpus.values()]
+        plan = plan_batch(cm, lengths,
+                          PlannerConfig(bucket_rounding=loop.bucket_rounding))
+        return plan, corpus
+
+    def get_step(plan):
+        nonlocal params, opt
+        key = _bucket_key(plan, d_s)
+        if key not in step_cache:
+            n_chunks, cap, ctx_cap, l_ckpt = key
+            geom = make_geometry(cfg_arch, mesh, n_chunks=n_chunks, cap=cap,
+                                 ctx_cap=ctx_cap, l_ckpt=l_ckpt,
+                                 compute_dtype=dtype)
+            builder = TrainStepBuilder(cfg_arch, mesh, geom,
+                                       param_dtype=dtype)
+            step_fn = builder.build()
+            step_cache[key] = (builder, step_fn)
+            log(f"[compile] bucket {key}")
+        return step_cache[key]
+
+    # --- bootstrap: plan step 0 to learn the first bucket ---
+    plan, corpus = plan_for(0)
+    builder, step_fn = get_step(plan)
+    params, opt, _ = builder.init_all(jax.random.PRNGKey(loop.seed))
+    def _restack(saved: np.ndarray, tmpl) -> Optional[np.ndarray]:
+        """Elastic reshard: stage-stacked [d_p_old, L_s_old, ...] leaves
+        restack for the current pipeline depth (strip old padding, re-pad)."""
+        if saved.ndim != len(tmpl.shape) or saved.ndim < 2 \
+                or tuple(saved.shape[2:]) != tuple(tmpl.shape[2:]):
+            return None
+        L = cfg_arch.spec.n_layers
+        flat = saved.reshape(saved.shape[0] * saved.shape[1],
+                             *saved.shape[2:])[:L]
+        new_dp, new_ls = tmpl.shape[0], tmpl.shape[1]
+        pad = new_dp * new_ls - L
+        if pad < 0:
+            return None
+        if pad:
+            flat = np.concatenate(
+                [flat, np.zeros((pad, *flat.shape[1:]), flat.dtype)])
+        return flat.reshape(new_dp, new_ls, *flat.shape[1:])
+
+    if mgr and loop.resume:
+        latest = mgr.latest_step()
+        if latest is not None:
+            (params, opt), extra = mgr.restore((params, opt),
+                                               adapt=_restack)
+            start_step = int(extra.get("step", latest)) + 1
+            log(f"[resume] from step {start_step - 1}")
+
+    def mat(plan, corpus, cap, n_chunks):
+        cb = materialize_plan(plan, corpus)
+        b = {k: np.asarray(v) for k, v in cb.as_dict().items()}
+        b["tokens"] = np.where(b["seg"] >= 0, b["tokens"], 0)
+        b["pos"] = np.where(b["seg"] >= 0, b["pos"], 0)
+        pad = cap - b["tokens"].shape[1]
+        if pad > 0:
+            for k, fill in (("tokens", 0), ("targets", -1), ("seg", -1),
+                            ("pos", 0)):
+                b[k] = np.pad(b[k], ((0, 0), (0, pad)),
+                              constant_values=fill)
+        padc = n_chunks - b["tokens"].shape[0]
+        if padc > 0:  # bucket padding: fully-masked empty chunks
+            for k, fill in (("tokens", 0), ("targets", -1), ("seg", -1),
+                            ("pos", 0)):
+                b[k] = np.pad(b[k], ((0, padc), (0, 0)),
+                              constant_values=fill)
+            b["ctx_len"] = np.pad(b["ctx_len"], (0, padc))
+        if n_pods > 1:
+            b = {k: v.reshape(n_pods, v.shape[0] // n_pods, *v.shape[1:])
+                 for k, v in b.items()}
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    history = []
+    next_plan, next_corpus = plan, corpus
+    for step in range(start_step, loop.steps):
+        plan, corpus = next_plan, next_corpus
+        builder, step_fn = get_step(plan)
+        n_chunks, cap = _bucket_key(plan, d_s)[:2]
+        batch = mat(plan, corpus, cap, n_chunks)
+        t0 = time.perf_counter()
+        params, opt, _err, metrics = step_fn(params, opt, None, batch)
+        # overlap: next iteration's plan solves while devices run
+        next_plan, next_corpus = plan_for(step + 1)
+        loss = float(metrics["loss"])
+        dt_step = time.perf_counter() - t0
+        history.append({"step": step, "loss": loss, "time": dt_step,
+                        "tokens": float(metrics["tokens"]),
+                        "solve_time": plan.solve_time})
+        log(f"step {step:5d} loss {loss:.4f} tokens "
+            f"{int(metrics['tokens'])} wall {dt_step:.2f}s "
+            f"(solver {plan.solve_time:.2f}s overlapped)")
+        if mgr and (step + 1) % loop.ckpt_every == 0:
+            mgr.save(step, (params, opt), extra={"step": step})
+    if mgr:
+        mgr.wait()
+    return params, opt, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--context", type=int, default=2048)
+    ap.add_argument("--dataset", default="github")
+    ap.add_argument("--mesh", default="2x4",
+                    help="DPxSP for CPU runs, e.g. 2x4 (needs "
+                         "xla_force_host_platform_device_count)")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+
+    from repro.configs import get_arch
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dp, ds = (int(x) for x in args.mesh.split("x"))
+    mesh = jax.make_mesh((dp, ds), ("data", "model"))
+    loop = TrainLoopConfig(steps=args.steps, global_batch=args.batch,
+                           context=args.context, dataset=args.dataset,
+                           ckpt_dir=args.ckpt_dir, resume=args.resume,
+                           compute_dtype="float32" if args.reduced
+                           else "bfloat16")
+    train(cfg, mesh, loop)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: every assigned architecture family as composable JAX modules."""
+
+from .config import ArchConfig, LayerKind
+from .model import DecoderLM, LayerCtx, kv_buffer_shape
+from .encdec import EncDecLM
+
+__all__ = ["ArchConfig", "LayerKind", "DecoderLM", "EncDecLM", "LayerCtx",
+           "kv_buffer_shape"]

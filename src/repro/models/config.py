@@ -1,0 +1,102 @@
+"""Architecture configuration shared by the model zoo, configs/ and launch/.
+
+``ArchConfig`` embeds the solver's :class:`repro.core.ModelSpec` (cost-model
+view) and adds the executor-facing details (rope, norms, layer patterns,
+modality frontends).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.plan import ModelSpec
+
+__all__ = ["ArchConfig", "LayerKind"]
+
+
+class LayerKind:
+    ATTN = "attn"            # attention + MLP block
+    MAMBA = "mamba"          # mamba mixer only (falcon-mamba: no MLP)
+    HYBRID = "hybrid"        # parallel attn + mamba heads, then MLP (hymba)
+    MOE = "moe"              # attention + MoE block
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    spec: ModelSpec
+    # --- attention details ---
+    rope_theta: float = 10000.0
+    rope_kind: str = "rope"        # "rope" | "mrope" | "none"
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w split of Dh/2
+    rms_eps: float = 1e-6
+    # sliding-window pattern: window size for "local" layers; 0 => all global
+    local_window: int = 0
+    local_global_ratio: int = 0    # N locals per 1 global; 0 => all global
+    # --- families ---
+    layer_kind: str = LayerKind.ATTN
+    # --- embeddings ---
+    tie_embeddings: bool = True
+    embed_scale: bool = False      # gemma multiplies embeddings by sqrt(D)
+    # --- modality frontend stub ("none" | "vision" | "audio") ---
+    frontend: str = "none"
+    # enc-dec only
+    is_encoder_decoder: bool = False
+    # serving behaviour
+    supports_long_decode: bool = False  # sub-quadratic => run long_500k
+
+    # ------------------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def layer_window(self, idx: int) -> int:
+        """Sliding window for layer ``idx`` (0 = full/global attention).
+
+        gemma3 pattern: ``ratio`` local layers followed by 1 global layer.
+        """
+        if self.local_window <= 0:
+            return 0
+        if self.local_global_ratio <= 0:
+            return self.local_window
+        period = self.local_global_ratio + 1
+        return 0 if (idx % period == period - 1) else self.local_window
+
+    def layer_windows(self) -> List[int]:
+        return [self.layer_window(i) for i in range(self.spec.n_layers)]
+
+    def reduced(self, *, n_layers: int = 4, d_model: int = 64,
+                n_heads: int = 4, head_dim: int = 16, vocab: int = 512
+                ) -> "ArchConfig":
+        """A small same-family config for CPU smoke tests."""
+        s = self.spec
+        kv = max(1, min(s.n_kv_heads, n_heads // 2)) if not s.attn_free else 0
+        if s.attn_free:
+            n_heads_r, kv = 0, 0
+        else:
+            n_heads_r = n_heads
+        new_spec = dataclasses.replace(
+            s,
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads_r if not s.attn_free else 4,
+            n_kv_heads=kv if not s.attn_free else 4,
+            head_dim=head_dim,
+            d_ff=0 if s.d_ff == 0 else d_model * 3,
+            vocab=vocab,
+            n_experts=4 if s.n_experts else 0,
+            n_shared_experts=1 if s.n_shared_experts else 0,
+            top_k=2 if s.top_k else 0,
+            d_ff_expert=d_model if s.n_experts else 0,
+            kv_lora_rank=16 if s.kv_lora_rank else 0,
+            qk_rope_dim=8 if s.kv_lora_rank else 0,
+            ssm_state=4 if s.ssm_state else 0,
+            d_inner=2 * d_model if s.ssm_state else 0,
+            n_encoder_layers=n_layers if s.is_encoder_decoder else 0,
+        )
+        return dataclasses.replace(
+            self, spec=new_spec,
+            local_window=min(self.local_window, 8) if self.local_window else 0,
+            mrope_sections=(4, 2, 2) if self.rope_kind == "mrope" else self.mrope_sections,
+        )

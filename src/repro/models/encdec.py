@@ -1,0 +1,197 @@
+"""Encoder-decoder backbone (seamless-m4t-v2): bidirectional encoder over
+(stub) audio-frame embeddings + causal decoder with cross-attention.
+
+Pipeline mapping (runtime): stages are split proportionally between encoder
+and decoder layers; a chunk's activation is the pair ``(hidden, memory)`` —
+encoder stages advance ``hidden`` over frames, the boundary stage promotes
+the encoder output to ``memory``, and decoder stages advance token hidden
+states while carrying ``memory`` for cross-attention (DESIGN.md §4).
+
+EPP applicability: the encoder is non-causal, so *splitting* its input would
+change the math — encoder chunks are packed only (batched). The decoder gets
+full EPP with a self-attention context carry like any decoder LM.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import blocked_flash_attention, streaming_cross_entropy
+
+from .attention import (attention_block, init_attention,
+                        make_local_attention_policy, project_qkv)
+from .config import ArchConfig
+from .layers import dense_init, embed_init, rms_norm, swiglu_apply, swiglu_init
+from .model import LayerCtx, kv_buffer_shape
+
+__all__ = ["EncDecLM"]
+
+
+def _init_cross(cfg: ArchConfig, key, dtype) -> Dict:
+    s = cfg.spec
+    D, Dh, Hq, Hkv = s.d_model, s.head_dim, s.n_heads, s.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, D, Hq * Dh, dtype),
+        "wk": dense_init(k2, D, Hkv * Dh, dtype),
+        "wv": dense_init(k3, D, Hkv * Dh, dtype),
+        "wo": dense_init(k4, Hq * Dh, D, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, *,
+                 flash_impl: Optional[Callable] = None,
+                 attn_policy: Optional[Callable] = None):
+        """``flash_impl``: raw flash core (cross/encoder attention);
+        ``attn_policy``: decoder self-attention policy (runtime-injectable)."""
+        assert cfg.spec.is_encoder_decoder
+        self.cfg = cfg
+        self.flash = flash_impl or blocked_flash_attention
+        self.attn_policy = attn_policy or make_local_attention_policy(self.flash)
+
+    # ------------------------------------------------------------------
+    def _init_enc_layer(self, key, dtype) -> Dict:
+        s = self.cfg.spec
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.zeros((s.d_model,), dtype),
+            "attn": init_attention(self.cfg, k1, dtype),
+            "ln2": jnp.zeros((s.d_model,), dtype),
+            "mlp": swiglu_init(k2, s.d_model, s.d_ff, dtype),
+        }
+
+    def _init_dec_layer(self, key, dtype) -> Dict:
+        s = self.cfg.spec
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.zeros((s.d_model,), dtype),
+            "attn": init_attention(self.cfg, k1, dtype),
+            "ln_x": jnp.zeros((s.d_model,), dtype),
+            "cross": _init_cross(self.cfg, k2, dtype),
+            "ln2": jnp.zeros((s.d_model,), dtype),
+            "mlp": swiglu_init(k3, s.d_model, s.d_ff, dtype),
+        }
+
+    def init(self, key, dtype=jnp.float32) -> Dict:
+        s = self.cfg.spec
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        enc_keys = jax.random.split(k1, s.n_encoder_layers)
+        dec_keys = jax.random.split(k2, s.n_layers)
+        return {
+            "embed": embed_init(k3, s.vocab, s.d_model, dtype),
+            "enc_layers": jax.vmap(
+                lambda k: self._init_enc_layer(k, dtype))(enc_keys),
+            "enc_norm": jnp.zeros((s.d_model,), dtype),
+            "dec_layers": jax.vmap(
+                lambda k: self._init_dec_layer(k, dtype))(dec_keys),
+            "final_norm": jnp.zeros((s.d_model,), dtype),
+        }
+
+    # ------------------------------------------------------------------
+    def enc_layer_apply(self, lp: Dict, x: jnp.ndarray, *,
+                        seg: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        out, _, _ = attention_block(
+            cfg, lp["attn"], h, pos=pos, seg=seg, ctx_k=None, ctx_v=None,
+            ctx_len=None, window=0, attn_fn=self._noncausal_policy)
+        x = x + out
+        h2 = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        return x + swiglu_apply(lp["mlp"], h2)
+
+    def _noncausal_policy(self, q, k, v, *, seg, pos, ctx_k, ctx_v, ctx_len,
+                          causal, window, scale, expand_fn=None):
+        out = self.flash(q, k, v, seg, seg, pos, pos,
+                         causal=False, window=0, scale=scale)
+        return out, None, None
+
+    def encode(self, params: Dict, frames: jnp.ndarray, seg: jnp.ndarray,
+               pos: jnp.ndarray) -> jnp.ndarray:
+        """frames: [S, D] precomputed frame embeddings (frontend stub)."""
+        def body(x, lp):
+            return self.enc_layer_apply(lp, x, seg=seg, pos=pos), None
+        x, _ = jax.lax.scan(body, frames, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], self.cfg.rms_eps)
+
+    # ------------------------------------------------------------------
+    def cross_attend(self, lp: Dict, h: jnp.ndarray, memory: jnp.ndarray, *,
+                     seg_q: jnp.ndarray, seg_mem: jnp.ndarray) -> jnp.ndarray:
+        cfg, s = self.cfg, self.cfg.spec
+        dt = h.dtype
+        Dh, Hq, Hkv = s.head_dim, s.n_heads, s.n_kv_heads
+        q = jnp.einsum("td,dh->th", h, lp["wq"].astype(dt)).reshape(-1, Hq, Dh)
+        k = jnp.einsum("sd,dh->sh", memory,
+                       lp["wk"].astype(dt)).reshape(-1, Hkv, Dh)
+        v = jnp.einsum("sd,dh->sh", memory,
+                       lp["wv"].astype(dt)).reshape(-1, Hkv, Dh)
+        zero_q = jnp.zeros(q.shape[0], jnp.int32)
+        zero_k = jnp.zeros(k.shape[0], jnp.int32)
+        out = self.flash(q, k, v, seg_q, seg_mem, zero_q, zero_k,
+                         causal=False, window=0,
+                         scale=1.0 / math.sqrt(Dh))
+        return jnp.einsum("th,hd->td", out.reshape(h.shape[0], -1),
+                          lp["wo"].astype(dt))
+
+    def dec_layer_apply(self, lp: Dict, x: jnp.ndarray, *,
+                        pos: jnp.ndarray, seg: jnp.ndarray,
+                        memory: jnp.ndarray, seg_mem: jnp.ndarray,
+                        ctx: LayerCtx, ctx_len: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, LayerCtx]:
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        attn_out, new_k, new_v = attention_block(
+            cfg, lp["attn"], h, pos=pos, seg=seg,
+            ctx_k=ctx.k, ctx_v=ctx.v, ctx_len=ctx_len, window=0,
+            attn_fn=self.attn_policy)
+        x = x + attn_out
+        hx = rms_norm(x, lp["ln_x"], cfg.rms_eps)
+        x = x + self.cross_attend(lp["cross"], hx, memory,
+                                  seg_q=seg, seg_mem=seg_mem)
+        h2 = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + swiglu_apply(lp["mlp"], h2)
+        return x, LayerCtx(new_k, new_v, None, None)
+
+    # ------------------------------------------------------------------
+    def init_ctx(self, cap: int, compute_dtype=jnp.bfloat16,
+                 n_layers: Optional[int] = None) -> LayerCtx:
+        s = self.cfg.spec
+        L = n_layers if n_layers is not None else s.n_layers
+        (ks, vs) = kv_buffer_shape(self.cfg, cap)
+        return LayerCtx(jnp.zeros((L, *ks), compute_dtype),
+                        jnp.zeros((L, *vs), compute_dtype), None, None)
+
+    def decode(self, params: Dict, tokens: jnp.ndarray, seg: jnp.ndarray,
+               pos: jnp.ndarray, memory: jnp.ndarray, seg_mem: jnp.ndarray, *,
+               ctx: Optional[LayerCtx] = None, ctx_len=0,
+               compute_dtype=jnp.bfloat16
+               ) -> Tuple[jnp.ndarray, Optional[LayerCtx]]:
+        x = params["embed"][tokens].astype(compute_dtype)
+        ctx_len = jnp.asarray(ctx_len, jnp.int32)
+        if ctx is None:
+            ctx = LayerCtx(None, None, None, None)
+
+        def body(x, per):
+            lp, lctx = per
+            x, new_ctx = self.dec_layer_apply(
+                lp, x, pos=pos, seg=seg, memory=memory, seg_mem=seg_mem,
+                ctx=lctx, ctx_len=ctx_len)
+            return x, new_ctx
+
+        x, new_ctx = jax.lax.scan(body, x, (params["dec_layers"], ctx))
+        return x, new_ctx
+
+    def loss(self, params: Dict, frames, seg_enc, pos_enc, tokens, targets,
+             seg, pos, *, compute_dtype=jnp.bfloat16):
+        memory = self.encode(params, frames.astype(compute_dtype),
+                             seg_enc, pos_enc)
+        hidden, _ = self.decode(params, tokens, seg, pos, memory, seg_enc,
+                                compute_dtype=compute_dtype)
+        h = rms_norm(hidden, params["final_norm"], self.cfg.rms_eps)
+        valid = (seg >= 0) & (targets >= 0)
+        return streaming_cross_entropy(h, params["embed"],
+                                       jnp.maximum(targets, 0), valid)

@@ -1,0 +1,54 @@
+"""Modality frontend STUBS (per the assignment: [vlm]/[audio] entries specify
+the transformer backbone only — ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+The stubs generate (a) random embeddings for smoke tests and (b)
+ShapeDtypeStruct stand-ins for the dry-run, plus the position metadata the
+backbone needs (M-RoPE 3D ids for qwen2-vl, frame positions for seamless).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+__all__ = ["vision_patch_stub", "audio_frame_stub", "mrope_positions_stub"]
+
+
+def mrope_positions_stub(n_text: int, n_patches: int, grid: Tuple[int, int]
+                         ) -> jnp.ndarray:
+    """[3, T] (t, h, w) position ids: image patches get 2-D coordinates at a
+    fixed temporal index, text continues sequentially after the image."""
+    gh, gw = grid
+    assert gh * gw == n_patches
+    t_img = jnp.zeros((n_patches,), jnp.int32)
+    h_img = jnp.repeat(jnp.arange(gh, dtype=jnp.int32), gw)
+    w_img = jnp.tile(jnp.arange(gw, dtype=jnp.int32), gh)
+    base = max(gh, gw)
+    t_txt = base + jnp.arange(n_text, dtype=jnp.int32)
+    pos3 = jnp.stack([
+        jnp.concatenate([t_img, t_txt]),
+        jnp.concatenate([h_img, t_txt]),
+        jnp.concatenate([w_img, t_txt]),
+    ])
+    return pos3
+
+
+def vision_patch_stub(cfg: ArchConfig, key, n_patches: int,
+                      dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Precomputed image-patch embeddings [n_patches, D] (the real model's
+    ViT tower output after the patch-merger)."""
+    return (jax.random.normal(key, (n_patches, cfg.spec.d_model)) * 0.02
+            ).astype(dtype)
+
+
+def audio_frame_stub(cfg: ArchConfig, key, n_frames: int,
+                     dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Precomputed audio-frame embeddings [n_frames, D] (the real model's
+    feature extractor + conformer adaptor output)."""
+    return (jax.random.normal(key, (n_frames, cfg.spec.d_model)) * 0.02
+            ).astype(dtype)

@@ -1,0 +1,129 @@
+"""Shared neural building blocks (pure JAX, init/apply style, no flax).
+
+Parameters are plain nested dicts of ``jnp.ndarray`` so they compose with
+pjit/shard_map PartitionSpecs and with the ZeRO-3 optimizer without any
+framework adapter.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "rms_norm", "layer_norm", "swiglu_init",
+           "swiglu_apply", "embed_init", "rope_freqs", "apply_rope",
+           "apply_mrope", "Params"]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out)) * s
+    return w.astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> jnp.ndarray:
+    w = jax.random.normal(key, (vocab, d_model)) * 0.02
+    return w.astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("td,df->tf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("td,df->tf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("tf,fd->td", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard, partial, and qwen2-vl's M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for half the head dim."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: [T, H, Dh(rot part)], angles: [T, Dh/2]."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, None, :].astype(jnp.float32)
+    sin = jnp.sin(angles)[:, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rot_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: [T, H, Dh]; positions: [T] int32. ``rot_dim`` < Dh => partial RoPE
+    (the leading rot_dim channels rotate, the rest pass through)."""
+    Dh = x.shape[-1]
+    rd = rot_dim or Dh
+    freqs = rope_freqs(rd, theta)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    if rd == Dh:
+        return _rotate(x, angles)
+    rot, rest = x[..., :rd], x[..., rd:]
+    return jnp.concatenate([_rotate(rot, angles), rest], axis=-1)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """qwen2-vl M-RoPE. ``positions3``: [3, T] (temporal, height, width ids —
+    all equal for text tokens). ``sections`` split the Dh/2 frequency bands
+    among the three axes."""
+    T = x.shape[0]
+    Dh = x.shape[-1]
+    half = Dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(Dh, theta)  # [half]
+    angles_parts = []
+    off = 0
+    for axis, sec in enumerate(sections):
+        f = freqs[off:off + sec]
+        p = positions3[axis].astype(jnp.float32)
+        angles_parts.append(p[:, None] * f[None, :])
+        off += sec
+    angles = jnp.concatenate(angles_parts, axis=-1)  # [T, half]
+    return _rotate(x, angles)

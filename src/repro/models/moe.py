@@ -1,0 +1,92 @@
+"""Mixture-of-Experts block: top-k router, routed + shared experts.
+
+Two execution paths share the same parameters:
+
+* :func:`moe_apply_dense` — reference path: computes every expert densely and
+  combines with the routing weights. Exact, differentiable, O(T * E * ff);
+  used for smoke tests, equivalence tests, and as the oracle for the EP path.
+* ``repro.runtime.ep.moe_apply_ep`` — expert-parallel path: experts are
+  sharded over the "model" mesh axis; tokens are dispatched with an
+  all-to-all under a capacity factor. Used by the distributed executor.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init
+
+__all__ = ["init_moe", "router_weights", "moe_apply_dense"]
+
+
+def init_moe(cfg: ArchConfig, key, dtype=jnp.float32) -> Dict:
+    s = cfg.spec
+    D, E, F = s.d_model, s.n_experts, s.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], D, E, dtype, scale=0.02),
+        # stacked expert weights: [E, D, F] / [E, F, D]
+        "w_gate": jax.vmap(lambda k: dense_init(k, D, F, dtype))(
+            jax.random.split(ks[1], E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, D, F, dtype))(
+            jax.random.split(ks[2], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, F, D, dtype))(
+            jax.random.split(ks[3], E)),
+    }
+    if s.n_shared_experts > 0:
+        Fs = F * s.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, D, Fs, dtype),
+            "w_up": dense_init(k2, D, Fs, dtype),
+            "w_down": dense_init(k3, Fs, D, dtype),
+        }
+    return p
+
+
+def router_weights(cfg: ArchConfig, p: Dict, x: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routing. Returns (weights [T, k], expert_ids [T, k]).
+
+    Softmax over the selected experts (renormalized), matching
+    OLMoE/DeepSeek practice."""
+    s = cfg.spec
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    top_w, top_i = jax.lax.top_k(logits, s.top_k)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+    return top_w, top_i
+
+
+def _expert_ffn(w_gate, w_up, w_down, x):
+    g = jnp.einsum("td,df->tf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("td,df->tf", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("tf,fd->td", h, w_down.astype(x.dtype))
+
+
+def moe_apply_dense(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Reference: dense one-hot combine over all experts."""
+    s = cfg.spec
+    T, D = x.shape
+    w, idx = router_weights(cfg, p, x)             # [T,k], [T,k]
+    combine = jnp.zeros((T, s.n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(T)[:, None], idx].add(w)
+    # per-expert dense computation, scan over experts to bound memory
+    def body(acc, ew):
+        wg, wu, wd, cw = ew
+        y = _expert_ffn(wg, wu, wd, x)
+        return acc + y.astype(jnp.float32) * cw[:, None], None
+    acc0 = jnp.zeros((T, D), jnp.float32)
+    acc, _ = jax.lax.scan(
+        body, acc0,
+        (p["w_gate"], p["w_up"], p["w_down"], combine.T))
+    out = acc.astype(x.dtype)
+    if s.n_shared_experts > 0:
+        sh = p["shared"]
+        out = out + _expert_ffn(sh["w_gate"], sh["w_up"], sh["w_down"], x)
+    return out

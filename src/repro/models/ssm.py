@@ -1,0 +1,177 @@
+"""Mamba-1 selective-scan mixer with packed-segment resets and O(1)
+cross-chunk state carry.
+
+Split-chunk context for an SSM layer is just ``(h, conv_tail)`` — a
+[d_inner, d_state] state plus the trailing ``d_conv-1`` conv inputs — which
+is why token-level PP is essentially free in memory for SSM/hybrid archs
+(DESIGN.md §4). Resets are encoded as ``a_t = 0`` at every sequence start
+(``pos == 0``), which simultaneously stops the carried state from leaking
+into packed neighbors.
+
+The scan runs as a *block-chunked associative scan*: within a block of
+``BLOCK`` timesteps a parallel ``associative_scan`` materializes
+[BLOCK, d_inner, d_state]; blocks chain sequentially. This bounds memory at
+long context (the same decomposition the Pallas kernel uses on TPU).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init
+
+__all__ = ["init_mamba", "mamba_apply", "ssm_state_shape"]
+
+BLOCK = 128
+
+
+def ssm_state_shape(cfg: ArchConfig) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    s = cfg.spec
+    return ((s.inner, s.ssm_state), (s.ssm_conv - 1, s.inner))
+
+
+def init_mamba(cfg: ArchConfig, key, dtype=jnp.float32) -> Dict:
+    s = cfg.spec
+    D, di, ds = s.d_model, s.inner, s.ssm_state
+    dt_rank = max(1, math.ceil(D / 16))
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :],
+                      (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.ssm_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": jnp.log(a_init).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, D, dtype),
+    }
+
+
+def dt_rank_of(cfg: ArchConfig) -> int:
+    return max(1, math.ceil(cfg.spec.d_model / 16))
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray, reset: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time with segment masking.
+
+    x: [T, di]; w: [K, di]; tail: [K-1, di] carried inputs preceding token 0;
+    reset: [T] bool, True where a new sequence starts. Window contributions
+    that cross a reset boundary are zeroed.
+    """
+    K = w.shape[0]
+    T = x.shape[0]
+    xp = jnp.concatenate([tail, x], axis=0)        # [T+K-1, di]
+    # block[i] counts resets up to token i (inclusive); a window element j
+    # may contribute to output t only if no reset occurred in (j, t]. The
+    # carried tail belongs to block 0: it is only reachable by tokens before
+    # the first in-chunk reset (i.e. when the chunk continues a sequence —
+    # if pos[0] == 0 then blk[0] == 1 and the tail is correctly blocked).
+    blk = jnp.cumsum(reset.astype(jnp.int32))      # [T]
+    blk_p = jnp.concatenate([jnp.zeros((K - 1,), jnp.int32), blk])
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(K):                             # K is small (4)
+        seg_ok = blk_p[j:j + T] == blk             # same block as output tok
+        contrib = xp[j:j + T].astype(jnp.float32) * w[j].astype(jnp.float32)
+        out = out + jnp.where(seg_ok[:, None], contrib, 0.0)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _blocked_ssm(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t * h_{t-1} + bx_t over T steps. a, bx: [T, di, ds].
+
+    Returns (h over time [T, di, ds], final state [di, ds]).
+    """
+    T = a.shape[0]
+    pad = (-T) % BLOCK
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((pad,) + a.shape[1:], a.dtype)])
+        bx = jnp.concatenate([bx, jnp.zeros((pad,) + bx.shape[1:], bx.dtype)])
+    nb = a.shape[0] // BLOCK
+    a_b = a.reshape(nb, BLOCK, *a.shape[1:])
+    bx_b = bx.reshape(nb, BLOCK, *bx.shape[1:])
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def block_step(h, inp):
+        ab, bb = inp
+        aa, hh = jax.lax.associative_scan(combine, (ab, bb), axis=0)
+        hh = hh + aa * h[None]
+        return hh[-1], hh
+
+    h_last, hs = jax.lax.scan(block_step, h0, (a_b, bx_b))
+    hs = hs.reshape(nb * BLOCK, *h0.shape)[:T]
+    return hs, h_last
+
+
+def mamba_apply(cfg: ArchConfig, p: Dict, x: jnp.ndarray, *,
+                pos: jnp.ndarray,
+                state: Optional[jnp.ndarray] = None,
+                conv_tail: Optional[jnp.ndarray] = None,
+                scan_fn=None,
+                tail_exchange=None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [T, D] packed tokens. Returns (out [T, D], h_final, conv_tail_out).
+
+    ``pos`` drives resets: a token with pos == 0 starts a fresh sequence.
+    ``scan_fn(a, bx, h0) -> (hs, h_last)`` and ``tail_exchange(xs, tail) ->
+    tail`` are the distributed-runtime injection points (sequence-parallel
+    prefix scan and cross-shard conv halo, repro.runtime.sp).
+    """
+    s = cfg.spec
+    di, ds = s.inner, s.ssm_state
+    T = x.shape[0]
+    dt = x.dtype
+    dt_rank = dt_rank_of(cfg)
+    if state is None:
+        state = jnp.zeros((di, ds), jnp.float32)
+    if conv_tail is None:
+        conv_tail = jnp.zeros((s.ssm_conv - 1, di), dt)
+    if scan_fn is None:
+        scan_fn = _blocked_ssm
+
+    xz = jnp.einsum("td,dh->th", x, p["in_proj"].astype(dt))
+    xs, z = xz[:, :di], xz[:, di:]
+    reset = pos == 0
+    if tail_exchange is not None:
+        conv_tail = tail_exchange(xs, conv_tail)
+    xc = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_tail, reset)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+
+    proj = jnp.einsum("td,dh->th", xc, p["x_proj"].astype(dt))
+    dt_in = proj[:, :dt_rank]
+    B = proj[:, dt_rank:dt_rank + ds].astype(jnp.float32)        # [T, ds]
+    C = proj[:, dt_rank + ds:dt_rank + 2 * ds].astype(jnp.float32)
+    delta = jax.nn.softplus(
+        jnp.einsum("tr,rd->td", dt_in, p["dt_proj"].astype(dt)
+                   ).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                      # [T, di]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                 # [di, ds]
+    a = jnp.exp(delta[:, :, None] * A[None])                     # [T, di, ds]
+    # reset: kill the recurrence into tokens that start a sequence
+    a = jnp.where(reset[:, None, None], 0.0, a)
+    bx = (delta[:, :, None] * B[:, None, :]) * \
+        xc.astype(jnp.float32)[:, :, None]                       # [T, di, ds]
+
+    hs, h_last = scan_fn(a, bx, state)
+    y = jnp.einsum("tds,ts->td", hs, C)                          # [T, di]
+    y = y + p["d_skip"].astype(jnp.float32)[None] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("td,dh->th", y.astype(dt), p["out_proj"].astype(dt))
+
+    K = s.ssm_conv
+    tail_src = jnp.concatenate([conv_tail, xs], axis=0)
+    new_tail = jax.lax.dynamic_slice_in_dim(tail_src, T, K - 1, axis=0)
+    return out, h_last, new_tail

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_update, global_norm, init_opt_state
+from .compression import compressed_psum, init_error_state
+
+__all__ = ["AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+           "compressed_psum", "init_error_state"]

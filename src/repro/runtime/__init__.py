@@ -1,0 +1,5 @@
+from .pipeline import PipelineGeometry, pipeline_loss_fn
+from .train_step import TrainStepBuilder, batch_struct, make_geometry, prepare_params
+
+__all__ = ["PipelineGeometry", "pipeline_loss_fn", "TrainStepBuilder",
+           "batch_struct", "make_geometry", "prepare_params"]

@@ -1,0 +1,320 @@
+"""Pipelined encoder-decoder executor (seamless-m4t backbone).
+
+Stage split: the first ``enc_stages = d_p * L_enc / (L_enc + L_dec)`` pipeline
+stages hold encoder layers; the rest hold decoder layers. A chunk's
+activation is the PAIR ``(h_enc, h_dec)``:
+
+* encoder stages advance ``h_enc`` over the (stub) frame embeddings —
+  non-causal, packed (batched chunks only; splitting a bidirectional
+  encoder would change the math, DESIGN.md §4);
+* the first decoder stage receives the finished ``h_enc`` as the
+  cross-attention MEMORY and injects the token embeddings into ``h_dec``;
+* decoder stages advance ``h_dec`` with causal self-attention (allgather-KV
+  policy, split-chunk context carry) + cross-attention to ``h_enc`` (which
+  keeps riding the ppermute unchanged) — so the memory reaches every
+  decoder stage with no extra collective.
+
+Layer-slot homogeneity: encoder layer params are embedded in the decoder
+layer structure (their cross/ln_x slots are zero and unused), so the
+stage-stacked tree has one uniform pytree — the price is ~4*D*HqDh dead
+bytes per encoder layer, recorded in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import blocked_flash_attention
+from repro.models import EncDecLM, LayerCtx
+from repro.models.config import ArchConfig
+from repro.models.layers import rms_norm, swiglu_apply
+
+from . import sp
+from .pipeline import PipelineGeometry, gather_layer_params
+from .sharding import mesh_axis_names
+
+__all__ = ["EncDecGeometry", "encdec_pipeline_loss_fn", "prepare_encdec_params",
+           "encdec_batch_struct", "encdec_stage_split"]
+
+
+@dataclass(frozen=True)
+class EncDecGeometry:
+    n_chunks: int
+    cap: int                  # decoder tokens per chunk
+    cap_enc: int              # encoder frames per chunk
+    ctx_cap: int
+    d_p: int
+    d_s: int
+    l_ckpt: int
+    enc_stages: int
+    layers_per_stage: int     # max(enc, dec) layers per stage
+    compute_dtype: Any = jnp.bfloat16
+    policy: str = "allgather_kv"
+
+
+def encdec_stage_split(cfg: ArchConfig, d_p: int) -> Tuple[int, int]:
+    s = cfg.spec
+    total = s.n_encoder_layers + s.n_layers
+    enc_stages = max(1, round(d_p * s.n_encoder_layers / total))
+    enc_stages = min(enc_stages, d_p - 1)
+    return enc_stages, d_p - enc_stages
+
+
+def make_encdec_geometry(cfg: ArchConfig, mesh, *, n_chunks: int, cap: int,
+                         cap_enc: int, ctx_cap: int, l_ckpt: int = 0,
+                         compute_dtype=jnp.bfloat16) -> EncDecGeometry:
+    pod, data, model = mesh_axis_names(mesh)
+    d_p, d_s = mesh.shape[data], mesh.shape[model]
+    enc_st, dec_st = encdec_stage_split(cfg, d_p)
+    L_ps = max(-(-cfg.spec.n_encoder_layers // enc_st),
+               -(-cfg.spec.n_layers // dec_st))
+    return EncDecGeometry(n_chunks=n_chunks, cap=cap, cap_enc=cap_enc,
+                          ctx_cap=ctx_cap, d_p=d_p, d_s=d_s, l_ckpt=l_ckpt,
+                          enc_stages=enc_st, layers_per_stage=L_ps,
+                          compute_dtype=compute_dtype)
+
+
+def prepare_encdec_params(cfg: ArchConfig, raw: Dict, geom: EncDecGeometry,
+                          param_dtype=jnp.bfloat16) -> Dict:
+    """Stack enc+dec layers into one homogeneous [d_p, L_ps, ...] tree.
+
+    Encoder layers borrow the decoder layer structure (zero cross/ln_x).
+    """
+    s = cfg.spec
+    d_p, L_ps = geom.d_p, geom.layers_per_stage
+    enc_st = geom.enc_stages
+    dec_st = d_p - enc_st
+    cast = lambda t: jax.tree.map(  # noqa: E731
+        lambda x: x.astype(param_dtype), t)
+    enc, dec = cast(raw["enc_layers"]), cast(raw["dec_layers"])
+    dec_tpl = jax.tree.map(lambda x: jnp.zeros_like(x[:1]), dec)
+
+    def pad_group(group, n_stages):
+        L = jax.tree.leaves(group)[0].shape[0]
+        pad = n_stages * L_ps - L
+
+        def _p(x, tpl):
+            if pad:
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
+            return x.reshape(n_stages, L_ps, *x.shape[1:])
+        return _p, pad
+
+    # embed encoder layers into the decoder structure
+    def lift_enc(x_dec_tpl_leaf, path_val):
+        return None  # placeholder, built below
+
+    enc_lifted = {}
+    for k, v in dec.items():
+        if k in enc:
+            enc_lifted[k] = enc[k]
+        else:
+            enc_lifted[k] = jax.tree.map(
+                lambda x: jnp.zeros((s.n_encoder_layers, *x.shape[1:]),
+                                    x.dtype), dec[k])
+
+    _pe, _ = pad_group(enc_lifted, enc_st)
+    _pd, _ = pad_group(dec, dec_st)
+    enc_stacked = jax.tree.map(lambda x: _pe(x, None), enc_lifted)
+    dec_stacked = jax.tree.map(lambda x: _pd(x, None), dec)
+    stages = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                          enc_stacked, dec_stacked)
+    vocab_pad = (-s.vocab) % geom.d_s
+    embed = cast(raw["embed"])
+    if vocab_pad:
+        embed = jnp.concatenate(
+            [embed, jnp.zeros((vocab_pad, embed.shape[1]), embed.dtype)])
+    return {
+        "stages": stages,
+        "embed": embed,
+        "enc_norm": cast(raw["enc_norm"]),
+        "final_norm": cast(raw["final_norm"]),
+    }
+
+
+def prepare_encdec_decode_params(cfg: ArchConfig, raw: Dict, d_p: int,
+                                 d_s: int, param_dtype=jnp.bfloat16) -> Dict:
+    """Decode-time layout: decoder layers only, stacked over ALL d_p stages
+    (the encoder ran at prefill; its output is the decode state's memory)."""
+    from .sharding import stack_stages
+    s = cfg.spec
+    cast = lambda t: jax.tree.map(  # noqa: E731
+        lambda x: x.astype(param_dtype), t)
+    embed = cast(raw["embed"])
+    pad = (-s.vocab) % d_s
+    if pad:
+        embed = jnp.concatenate(
+            [embed, jnp.zeros((pad, embed.shape[1]), embed.dtype)])
+    return {
+        "stages": stack_stages(cast(raw["dec_layers"]), d_p, s.n_layers),
+        "embed": embed,
+        "final_norm": cast(raw["final_norm"]),
+    }
+
+
+def encdec_batch_struct(geom: EncDecGeometry, cfg: ArchConfig,
+                        n_pods: int) -> Dict:
+    lead = (n_pods,) if n_pods > 1 else ()
+    n, cap, cape = geom.n_chunks, geom.cap, geom.cap_enc
+    i32 = jnp.int32
+    return {
+        "tokens": jax.ShapeDtypeStruct((*lead, n, cap), i32),
+        "targets": jax.ShapeDtypeStruct((*lead, n, cap), i32),
+        "seg": jax.ShapeDtypeStruct((*lead, n, cap), i32),
+        "pos": jax.ShapeDtypeStruct((*lead, n, cap), i32),
+        "ctx_len": jax.ShapeDtypeStruct((*lead, n), i32),
+        "frames": jax.ShapeDtypeStruct((*lead, n, cape, cfg.spec.d_model),
+                                       geom.compute_dtype),
+        "seg_enc": jax.ShapeDtypeStruct((*lead, n, cape), i32),
+        "pos_enc": jax.ShapeDtypeStruct((*lead, n, cape), i32),
+    }
+
+
+def encdec_pipeline_loss_fn(cfg: ArchConfig, geom: EncDecGeometry,
+                            shard_dims, *, pod_axis: Optional[str],
+                            data_axis: str = "data",
+                            model_axis: str = "model") -> Callable:
+    s = cfg.spec
+    d_p, d_s = geom.d_p, geom.d_s
+    L_ps = geom.layers_per_stage
+    enc_st = geom.enc_stages
+    dec_st = d_p - enc_st
+    dt = geom.compute_dtype
+    model = EncDecLM(cfg)
+    self_policy = sp.make_allgather_kv_policy(model_axis)
+    nc_policy = sp.make_allgather_kv_policy(model_axis)
+
+    import numpy as _np
+    act_enc = (_np.arange(enc_st * L_ps) < s.n_encoder_layers)
+    act_dec = (_np.arange(dec_st * L_ps) < s.n_layers)
+    active_all = jnp.asarray(
+        _np.concatenate([act_enc, act_dec]).reshape(d_p, L_ps))
+    scale = 1.0 / math.sqrt(s.head_dim)
+
+    def _cross(lp, h, memory, seg_q, seg_mem):
+        dtl = h.dtype
+        Dh, Hq, Hkv = s.head_dim, s.n_heads, s.n_kv_heads
+        q = jnp.einsum("td,dh->th", h, lp["wq"].astype(dtl)
+                       ).reshape(-1, Hq, Dh)
+        k = jnp.einsum("sd,dh->sh", memory, lp["wk"].astype(dtl)
+                       ).reshape(-1, Hkv, Dh)
+        v = jnp.einsum("sd,dh->sh", memory, lp["wv"].astype(dtl)
+                       ).reshape(-1, Hkv, Dh)
+        # memory is model-sharded on frames: gather KV (frames dim)
+        k = jax.lax.all_gather(k, model_axis, axis=0, tiled=True)
+        v = jax.lax.all_gather(v, model_axis, axis=0, tiled=True)
+        sm = jax.lax.all_gather(seg_mem, model_axis, axis=0, tiled=True)
+        z_q = jnp.zeros((q.shape[0],), jnp.int32)
+        z_k = jnp.zeros((k.shape[0],), jnp.int32)
+        out = blocked_flash_attention(q, k, v, seg_q, sm, z_q, z_k,
+                                      causal=False, window=0, scale=scale)
+        return jnp.einsum("th,hd->td", out.reshape(h.shape[0], -1),
+                          lp["wo"].astype(dtl))
+
+    def loss_local(params, batch):
+        p_idx = jax.lax.axis_index(data_axis)
+        stage_params = jax.tree.map(lambda x: x[0], params["stages"])
+        active = active_all[p_idx]
+        n = geom.n_chunks
+        cap_loc = batch["tokens"].shape[-1]
+        cape_loc = batch["frames"].shape[-2]
+        is_enc = p_idx < enc_st
+
+        head_w = params["embed"]
+        fn_gamma = params["final_norm"]
+        if fn_gamma.shape[0] != s.d_model:
+            fn_gamma = jax.lax.all_gather(fn_gamma, model_axis, axis=0, tiled=True)
+        en_gamma = params["enc_norm"]
+        if en_gamma.shape[0] != s.d_model:
+            en_gamma = jax.lax.all_gather(en_gamma, model_axis, axis=0, tiled=True)
+
+        kcap = geom.ctx_cap
+        ctx0 = LayerCtx(
+            jnp.zeros((L_ps, kcap, s.n_kv_heads, s.head_dim), dt),
+            jnp.zeros((L_ps, kcap, s.n_kv_heads, s.head_dim), dt),
+            None, None)
+
+        def tick(carry, t):
+            h_enc, h_dec, ctx, loss_acc, n_acc = carry
+            idx = t - p_idx
+            valid = (idx >= 0) & (idx < n)
+            idxc = jnp.clip(idx, 0, n - 1)
+            tokens = batch["tokens"][idxc]
+            seg = jnp.where(valid, batch["seg"][idxc], -1)
+            pos = batch["pos"][idxc]
+            tgt = batch["targets"][idxc]
+            ctx_len = jnp.where(valid, batch["ctx_len"][idxc], 0)
+            seg_e = jnp.where(valid, batch["seg_enc"][idxc], -1)
+            pos_e = batch["pos_enc"][idxc]
+
+            h_enc = jnp.where(p_idx == 0, batch["frames"][idxc], h_enc)
+            x_emb = sp.sharded_embed(params["embed"], tokens, model_axis, dt)
+            h_dec = jnp.where(p_idx == enc_st, x_emb, h_dec)
+            # the first decoder stage receives the FINISHED encoder output;
+            # normalize it once there
+            h_enc = jnp.where(p_idx == enc_st,
+                              rms_norm(h_enc, en_gamma, cfg.rms_eps), h_enc)
+
+            def layer_body(carry2, per_layer):
+                he, hd = carry2
+                lp, act, lctx = per_layer
+                lp = gather_layer_params(lp, shard_dims, model_axis)
+                # --- encoder path ---
+                h1 = rms_norm(he, lp["ln1"], cfg.rms_eps)
+                from repro.models.attention import attention_block
+                eo, _, _ = attention_block(
+                    cfg, lp["attn"], h1, pos=pos_e, seg=seg_e, ctx_k=None,
+                    ctx_v=None, ctx_len=None, window=0, attn_fn=nc_policy,
+                    causal=False)
+                he_new = he + eo
+                he_new = he_new + swiglu_apply(
+                    lp["mlp"], rms_norm(he_new, lp["ln2"], cfg.rms_eps))
+                # --- decoder path ---
+                d1 = rms_norm(hd, lp["ln1"], cfg.rms_eps)
+                do, nk, nv = attention_block(
+                    cfg, lp["attn"], d1, pos=pos, seg=seg, ctx_k=lctx.k,
+                    ctx_v=lctx.v, ctx_len=ctx_len, window=0,
+                    attn_fn=self_policy, causal=True)
+                hd_new = hd + do
+                hx = rms_norm(hd_new, lp["ln_x"], cfg.rms_eps)
+                hd_new = hd_new + _cross(lp["cross"], hx, h_enc, seg, seg_e)
+                hd_new = hd_new + swiglu_apply(
+                    lp["mlp"], rms_norm(hd_new, lp["ln2"], cfg.rms_eps))
+                # select by stage role and activity
+                he_out = jnp.where(act & is_enc, he_new, he)
+                hd_out = jnp.where(act & (~is_enc), hd_new, hd)
+                new_ctx = LayerCtx(
+                    jnp.where(act & (~is_enc), nk, lctx.k),
+                    jnp.where(act & (~is_enc), nv, lctx.v), None, None)
+                return (he_out, hd_out), new_ctx
+
+            (h_enc2, h_dec2), new_ctx = jax.lax.scan(
+                layer_body, (h_enc, h_dec), (stage_params, active, ctx))
+
+            h_last = rms_norm(h_dec2, fn_gamma, cfg.rms_eps)
+            ce_valid = (seg >= 0) & (tgt >= 0) & valid & (p_idx == d_p - 1)
+            l_sum, n_val = sp.sharded_ce(h_last, head_w,
+                                         jnp.maximum(tgt, 0), ce_valid,
+                                         model_axis, vocab_true=s.vocab)
+            loss_acc = loss_acc + l_sum
+            n_acc = n_acc + n_val
+            perm = [(i, i + 1) for i in range(d_p - 1)]
+            h_enc_s = jax.lax.ppermute(h_enc2, data_axis, perm)
+            h_dec_s = jax.lax.ppermute(h_dec2, data_axis, perm)
+            return (h_enc_s, h_dec_s, new_ctx, loss_acc, n_acc), None
+
+        he0 = jnp.zeros((cape_loc, s.d_model), dt)
+        hd0 = jnp.zeros((cap_loc, s.d_model), dt)
+        init = (he0, hd0, ctx0, jnp.float32(0), jnp.float32(0))
+        (he, hd, ctxf, loss, n_val), _ = jax.lax.scan(
+            tick, init, jnp.arange(n + d_p - 1))
+        loss = jax.lax.psum(loss, data_axis)
+        n_val = jax.lax.psum(n_val, data_axis)
+        return loss, n_val
+
+    return loss_local

@@ -1,0 +1,65 @@
+"""Expert parallelism over the "model" axis.
+
+Two dispatch strategies (selectable; both exact, no token dropping):
+
+* ``gather`` (default): all-gather the token block, compute the LOCAL
+  experts' contribution for every token, reduce-scatter the combined
+  output back to token shards. Perfectly load-balanced regardless of
+  routing skew; comm = one all-gather + one reduce-scatter of [T, D] per
+  MoE layer. The right choice when top_k*D_ff_expert is small relative to
+  D (olmoe: 8*1024 vs 2048; deepseek: 6*1408 vs 2048).
+* ``a2a``: capacity-based token dispatch with all-to-alls (Switch-style).
+  Lower comm volume when top_k/E is small, but pays capacity padding and
+  drops on overflow. Implemented as a hillclimb lever (EXPERIMENTS.md §Perf).
+
+Expert weights arrive EP-sharded: [E/d_s, D, F] local views (the ZeRO
+gather skips them — sharding.EP_PATH_RE). The router and shared experts are
+ordinary ZeRO parameters.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.moe import _expert_ffn, router_weights
+
+__all__ = ["make_moe_ep"]
+
+
+def make_moe_ep(axis: str, d_s: int, impl: str = "gather") -> Callable:
+    if impl != "gather":
+        raise NotImplementedError("a2a dispatch lands with the perf pass")
+
+    def moe_fn(cfg: ArchConfig, p: Dict, x_local: jnp.ndarray) -> jnp.ndarray:
+        s = cfg.spec
+        e_loc = p["w_gate"].shape[0]          # E / d_s
+        x_full = jax.lax.all_gather(x_local, axis, axis=0, tiled=True)
+        Tf = x_full.shape[0]
+        w, idx = router_weights(cfg, p, x_full)          # router is gathered
+        combine = jnp.zeros((Tf, s.n_experts), jnp.float32)
+        combine = combine.at[jnp.arange(Tf)[:, None], idx].add(w)
+        e_off = jax.lax.axis_index(axis) * e_loc
+        my_combine = jax.lax.dynamic_slice_in_dim(
+            combine, e_off, e_loc, axis=1)               # [Tf, E_loc]
+
+        def body(acc, per_e):
+            wg, wu, wd, cw = per_e
+            y = _expert_ffn(wg, wu, wd, x_full)
+            return acc + y.astype(jnp.float32) * cw[:, None], None
+
+        acc0 = jnp.zeros((Tf, s.d_model), jnp.float32)
+        acc, _ = jax.lax.scan(
+            body, acc0, (p["w_gate"], p["w_up"], p["w_down"], my_combine.T))
+        y_local = jax.lax.psum_scatter(acc, axis, scatter_dimension=0,
+                                       tiled=True).astype(x_local.dtype)
+        if s.n_shared_experts > 0:
+            sh = p["shared"]
+            y_local = y_local + _expert_ffn(
+                sh["w_gate"], sh["w_up"], sh["w_down"], x_local)
+        return y_local
+
+    return moe_fn

@@ -1,0 +1,328 @@
+"""The EPP pipeline executor: a statically-scheduled, scanned 1F1B pipeline
+expressed in XLA SPMD (DESIGN.md §2.1.1).
+
+Runs INSIDE ``shard_map`` over ("pod",) "data", "model":
+
+* the "data" axis carries pipeline stages; stage p's layer parameters are
+  the local shard of the stage-stacked tree;
+* forward is a ``lax.scan`` over ``n_chunks + d_p - 1`` ticks. Each tick a
+  stage (1) takes the embedded chunk (stage 0) or the ppermute'd activation
+  from its left neighbor, (2) runs its layers — with the solver-chosen
+  number of leading layers under ``jax.checkpoint`` (Eq. 9-11's layer-
+  granular remat), (3) the last stage folds the chunk into the streaming
+  vocab-parallel CE;
+* the split-chunk context (KV buffers per the SP policy's layout + SSM
+  state) is scan *carry* per stage, appended at offset ``ctx_len[k]``; a
+  chunk with ctx_len == 0 implicitly resets the buffers (overwrite from 0)
+  and the SSM state (explicit ``where``);
+* backward = the autodiff transpose of the scan: reverse tick order,
+  reversed ppermute, and the context-carry cotangent reproduces the paper's
+  dKV dependency (Eq. 5) exactly.
+
+Bubble ticks compute on garbage (seg = -1 masks attention and loss): the
+lockstep-SPMD analogue of pipeline bubbles. They inflate compiled HLO FLOPs
+by (n + d_p - 1)/n — the roofline's MODEL_FLOPS ratio surfaces this.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import DecoderLM, LayerCtx
+from repro.models.config import ArchConfig
+from repro.models.layers import rms_norm
+
+from . import sp
+from .sharding import EP_PATH_RE, tree_paths_map
+
+__all__ = ["PipelineGeometry", "pipeline_loss_fn", "gather_layer_params",
+           "init_stage_ctx"]
+
+
+@dataclass(frozen=True)
+class PipelineGeometry:
+    """Static geometry of one compiled executable (a plan bucket)."""
+    n_chunks: int            # chunks per pod
+    cap: int                 # tokens per chunk (global, pre-SP-sharding)
+    ctx_cap: int             # context buffer rows (policy layout dependent)
+    d_p: int
+    d_s: int
+    l_ckpt: int              # uniform remat: leading layers checkpointed
+    layers_per_stage: int
+    policy: str              # "ulysses" | "allgather_kv" | "none"
+    compute_dtype: Any = jnp.bfloat16
+    # ZeRO-3 gather cadence: "per_tick" re-gathers every layer's weights for
+    # every chunk (paper-faithful DeepSpeed ZeRO-3 semantics); "per_step"
+    # gathers the stage's weights ONCE per training step and keeps them
+    # resident (ZeRO-2-like compute path, ZeRO-3 storage) — the first
+    # beyond-paper optimization, see EXPERIMENTS.md §Perf.
+    zero3_mode: str = "per_tick"
+
+
+def gather_layer_params(lp, shard_dims, axis: str):
+    """ZeRO-3: materialize one layer's full parameters from "model" shards.
+
+    ``shard_dims`` is the precomputed tree of gather dims (full-shape
+    coordinates, including the [d_p, L_s] prefix — hence the -2). EP leaves
+    carry a marker dim but stay sharded (expert parallelism), which
+    ``sharding.EP_PATH_RE`` expresses by pointing at the expert dim; the
+    path check below skips them.
+    """
+    def _g(path, leaf):
+        if EP_PATH_RE.search(path):
+            return leaf
+        zd = _lookup(shard_dims, path)
+        if zd is None:
+            return leaf
+        return jax.lax.all_gather(leaf, axis, axis=zd - 2, tiled=True)
+    return tree_paths_map(_g, lp)
+
+
+def _lookup(tree, path: str):
+    node = tree
+    for key in path.split("/"):
+        node = node[key]
+    return node
+
+
+def gather_stage_params(stage_params, shard_dims, axis: str):
+    """ZeRO-3 'per_step' mode: gather the whole stage's stacked [L_s, ...]
+    tree once; leaves keep their L_s dim so the gather axis is zd - 1."""
+    def _g(path, leaf):
+        if EP_PATH_RE.search(path):
+            return leaf
+        zd = _lookup(shard_dims, path)
+        if zd is None:
+            return leaf
+        return jax.lax.all_gather(leaf, axis, axis=zd - 1, tiled=True)
+    return tree_paths_map(_g, stage_params)
+
+
+def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
+    """Per-stage context carry. KV layout depends on the SP policy:
+    ulysses => head-sharded [ctx_cap, Hkv/d_s, Dh]; allgather_kv =>
+    replicated [ctx_cap, Hkv, Dh] (or MLA cache rows [ctx_cap, 1, r+rr])."""
+    s = cfg.spec
+    L_s = geom.layers_per_stage
+    k = v = hh = tail = None
+    if not s.attn_free:
+        if s.kv_lora_rank > 0:
+            kshape = (geom.ctx_cap, 1, s.kv_lora_rank + s.qk_rope_dim)
+            vshape = (geom.ctx_cap, 1, 0)
+        elif geom.policy == "ulysses":
+            kshape = (geom.ctx_cap, s.n_kv_heads // geom.d_s, s.head_dim)
+            vshape = kshape
+        else:
+            kshape = (geom.ctx_cap, s.n_kv_heads, s.head_dim)
+            vshape = kshape
+        k = jnp.zeros((L_s, *kshape), geom.compute_dtype)
+        v = jnp.zeros((L_s, *vshape), geom.compute_dtype)
+    if s.ssm_state > 0:
+        di_loc = s.inner  # full: SSM is token-sharded, channels intact
+        hh = jnp.zeros((L_s, di_loc, s.ssm_state), jnp.float32)
+        tail = jnp.zeros((L_s, s.ssm_conv - 1, di_loc), geom.compute_dtype)
+    return LayerCtx(k, v, hh, tail)
+
+
+def _make_model(cfg: ArchConfig, geom: PipelineGeometry,
+                model_axis: str) -> DecoderLM:
+    if geom.policy == "ulysses":
+        attn = sp.make_ulysses_policy(model_axis, geom.d_s)
+    elif geom.policy == "allgather_kv":
+        attn = sp.make_allgather_kv_policy(model_axis)
+    else:
+        attn = None  # attn-free arch never calls it
+    moe_fn = None
+    if cfg.spec.n_experts > 0:
+        from .ep import make_moe_ep
+        moe_fn = make_moe_ep(model_axis, geom.d_s)
+    ssm_scan = ssm_tail = None
+    if cfg.spec.ssm_state > 0:
+        from repro.models.ssm import _blocked_ssm
+        ssm_scan = sp.make_sp_ssm_scan(model_axis, geom.d_s, _blocked_ssm)
+        ssm_tail = sp.make_sp_conv_tail_exchange(model_axis, geom.d_s)
+    return DecoderLM(cfg, attn_fn=attn, moe_fn=moe_fn,
+                     ssm_scan_fn=ssm_scan, ssm_tail_exchange=ssm_tail)
+
+
+def _run_stage_layers(model: DecoderLM, geom: PipelineGeometry,
+                      stage_params, shard_dims, x, ctx: LayerCtx, *,
+                      seg, pos, ctx_len, windows, active, model_axis: str):
+    """Scan this stage's layers with the solver's remat split: the first
+    ``l_ckpt`` layers recompute in backward (only their input + un-freeable
+    KV persist — Eq. 9), the rest keep activations. ``active`` masks padded
+    layer slots (non-divisible depths) into identity."""
+
+    def layer_body(x, per_layer):
+        lp, w, act, lctx = per_layer
+        lp_full = lp if geom.zero3_mode == "per_step" else \
+            gather_layer_params(lp, shard_dims, model_axis)
+        x_new, new_ctx = model.layer_apply(
+            lp_full, x, pos=pos, seg=seg, ctx=lctx, ctx_len=ctx_len,
+            window=w)
+        x_out = jnp.where(act, x_new, x)
+        new_ctx = jax.tree.map(
+            lambda new, old: jnp.where(act, new, old) if new is not None
+            else None, new_ctx, lctx, is_leaf=lambda t: t is None)
+        return x_out, new_ctx
+
+    L_s = geom.layers_per_stage
+    l_ck = max(0, min(geom.l_ckpt, L_s))
+
+    def split(tree, a, b):
+        return jax.tree.map(lambda t: t[a:b], tree)
+
+    ctx_parts = []
+    if l_ck > 0:
+        body_ck = jax.checkpoint(layer_body, prevent_cse=False)
+        x, ctx_a = jax.lax.scan(
+            body_ck, x, (split(stage_params, 0, l_ck),
+                         windows[:l_ck], active[:l_ck],
+                         split(ctx, 0, l_ck)))
+        ctx_parts.append(ctx_a)
+    if l_ck < L_s:
+        x, ctx_b = jax.lax.scan(
+            layer_body, x, (split(stage_params, l_ck, L_s),
+                            windows[l_ck:], active[l_ck:],
+                            split(ctx, l_ck, L_s)))
+        ctx_parts.append(ctx_b)
+    if len(ctx_parts) == 2:
+        new_ctx = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0) if a is not None
+            else None, ctx_parts[0], ctx_parts[1],
+            is_leaf=lambda t: t is None)
+    else:
+        new_ctx = ctx_parts[0]
+    return x, new_ctx
+
+
+def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
+                     shard_dims, *,
+                     pod_axis: Optional[str], data_axis: str = "data",
+                     model_axis: str = "model",
+                     mode: str = "train") -> Callable:
+    """Returns loss_local(params, batch) to be called inside shard_map.
+
+    params (local views):
+      {"stages": stage-stacked layer tree [1, L_s, ...shards...],
+       "embed": [V/d_s, D], "final_norm": [D or D/d_s],
+       "unembed": optional [V/d_s, D]}
+    batch (local views):
+      {"tokens"/"targets"/"seg"/"pos": [n_chunks, cap/d_s],
+       "ctx_len": [n_chunks]} (+ leading pod dim already sharded away)
+
+    Returns (sum_loss, n_valid) replicated over data/model (psum'd).
+    """
+    model = _make_model(cfg, geom, model_axis)
+    s = cfg.spec
+    L_pad = geom.d_p * geom.layers_per_stage
+    win_flat = [cfg.layer_window(i) for i in range(s.n_layers)]
+    win_flat += [0] * (L_pad - s.n_layers)
+    windows_all = jnp.asarray(win_flat, jnp.int32).reshape(
+        geom.d_p, geom.layers_per_stage)
+    import numpy as _np
+    active_all = jnp.asarray(
+        (_np.arange(L_pad) < s.n_layers).reshape(geom.d_p,
+                                                 geom.layers_per_stage))
+
+    def loss_local(params, batch):
+        p_idx = jax.lax.axis_index(data_axis)
+        stage_params = jax.tree.map(lambda x: x[0], params["stages"])
+        if geom.zero3_mode == "per_step":
+            stage_params = gather_stage_params(stage_params, shard_dims,
+                                               model_axis)
+        windows = windows_all[p_idx]
+        active = active_all[p_idx]
+        n, d_p = geom.n_chunks, geom.d_p
+        cap_loc = batch["tokens"].shape[-1]
+        dt = geom.compute_dtype
+
+        tokens_a = batch["tokens"].reshape(n, cap_loc)
+        targets_a = batch["targets"].reshape(n, cap_loc)
+        seg_a = batch["seg"].reshape(n, cap_loc)
+        pos_a = batch["pos"].reshape(n, cap_loc)
+        ctxlen_a = batch["ctx_len"].reshape(n)
+
+        # final-norm gamma may be feature-sharded; gather once
+        fn_gamma = params["final_norm"]
+        if fn_gamma.shape[0] != s.d_model:
+            fn_gamma = jax.lax.all_gather(fn_gamma, model_axis, axis=0,
+                                          tiled=True)
+        head_w = params.get("unembed", params["embed"])
+
+        ctx0 = init_stage_ctx(cfg, geom)
+        x0 = jnp.zeros((cap_loc, s.d_model), dt)
+
+        def tick(carry, t):
+            x_recv, ctx, acc0_c, acc1_c = carry
+            loss_acc = (acc0_c, acc1_c)
+            idx = t - p_idx
+            valid = (idx >= 0) & (idx < n)
+            idxc = jnp.clip(idx, 0, n - 1)
+            tokens = tokens_a[idxc]
+            seg = jnp.where(valid, seg_a[idxc], -1)
+            pos = pos_a[idxc]
+            tgt = targets_a[idxc]
+            ctx_len = jnp.where(valid, ctxlen_a[idxc], 0)
+
+            x_emb = sp.sharded_embed(params["embed"], tokens, model_axis, dt)
+            if cfg.embed_scale:
+                x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
+            x_in = jnp.where(p_idx == 0, x_emb, x_recv)
+
+            # SSM state resets at sequence starts (ctx_len == 0)
+            if ctx.ssm_h is not None:
+                hh = jnp.where(ctx_len == 0, 0.0, ctx.ssm_h)
+                ctx = ctx._replace(ssm_h=hh)
+
+            x_out, ctx = _run_stage_layers(
+                model, geom, stage_params, shard_dims, x_in, ctx,
+                seg=seg, pos=pos, ctx_len=ctx_len, windows=windows,
+                active=active, model_axis=model_axis)
+
+            h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
+            if mode == "train":
+                ce_valid = (seg >= 0) & (tgt >= 0) & valid \
+                    & (p_idx == d_p - 1)
+                l_sum, n_val = sp.sharded_ce(h_last, head_w,
+                                             jnp.maximum(tgt, 0), ce_valid,
+                                             model_axis, vocab_true=s.vocab)
+                out_acc = (loss_acc[0] + l_sum, loss_acc[1] + n_val)
+            else:
+                # prefill: greedy next-token ids per position (the KV fills
+                # the context carry — it IS the prefill cache)
+                ids = sp.sharded_greedy(h_last, head_w, model_axis,
+                                        vocab_true=s.vocab)
+                sel = valid & (p_idx == d_p - 1)
+                new_ids = jnp.where(sel, ids, loss_acc[0][idxc])
+                out_acc = (loss_acc[0].at[idxc].set(new_ids), loss_acc[1])
+
+            if d_p > 1:
+                x_send = jax.lax.ppermute(
+                    x_out, data_axis,
+                    [(i, i + 1) for i in range(d_p - 1)])
+            else:
+                x_send = x_out
+            return (x_send, ctx, out_acc[0], out_acc[1]), None
+
+        if mode == "train":
+            acc0: Tuple = (jnp.float32(0), jnp.float32(0))
+        else:
+            acc0 = (jnp.zeros((n, cap_loc), jnp.int32), jnp.float32(0))
+        init = (x0, ctx0, acc0[0], acc0[1])
+        (xf, ctxf, a0, a1), _ = jax.lax.scan(
+            tick, init, jnp.arange(n + d_p - 1))
+        if mode == "train":
+            # only the last stage accumulated loss; broadcast-sum over stages
+            loss = jax.lax.psum(a0, data_axis)
+            n_val = jax.lax.psum(a1, data_axis)
+            return loss, n_val
+        ids = jax.lax.psum(a0, data_axis)  # only last stage nonzero... see note
+        return ids, ctxf
+
+    return loss_local

@@ -1,0 +1,410 @@
+"""Serving: pipelined decode (one new token against a KV cache) and
+prefill (the forward pipeline whose context carry IS the cache).
+
+Decode maps the assignment's decode_32k / long_500k shapes:
+
+* the per-pod request batch splits into ``d_p`` microbatches that flow
+  through the stage pipeline exactly like training chunks (ppermute ticks),
+  so all stages stay busy — pipelined decode;
+* the KV cache is sharded: stage dim over "data", sequence dim over
+  "model"; decode attention is *flash-decode*: every "model" rank scores
+  its local cache rows and the partial (m, l, acc) merge with a psum-LSE
+  (works for any head count — kv=1 MQA included);
+* the new token's KV row is written by the rank owning position
+  ``cache_len``; SSM archs carry (h, conv_tail) instead — O(1) state;
+* sliding-window layers (gemma3) mask rows outside the window (the cache
+  is allocated full-length for shape uniformity; ring-buffer compaction is
+  a recorded hillclimb lever — EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.models import DecoderLM
+from repro.models.attention import mla_expand_ctx, project_qkv
+from repro.models.config import ArchConfig, LayerKind
+from repro.models.layers import rms_norm, swiglu_apply
+from repro.models.moe import moe_apply_dense
+from repro.models.ssm import dt_rank_of
+
+from . import sp
+from .pipeline import gather_layer_params
+from .sharding import mesh_axis_names, shard_dim_tree
+from .train_step import param_pspecs, prepare_params
+
+__all__ = ["DecodeGeometry", "decode_step_fn", "decode_state_struct",
+           "DecodeStepBuilder"]
+
+
+@dataclass(frozen=True)
+class DecodeGeometry:
+    batch_per_pod: int
+    cache_len: int                # S: current context size (static per bucket)
+    d_p: int
+    d_s: int
+    layers_per_stage: int
+    n_micro: int                  # microbatches (== d_p unless batch < d_p)
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def bm(self) -> int:
+        return max(1, self.batch_per_pod // self.n_micro)
+
+    @property
+    def s_cap(self) -> int:
+        """Cache capacity: one extra row per shard so the new token's KV
+        always has a home (position ``cache_len`` is written this step)."""
+        return self.cache_len + self.d_s
+
+    @property
+    def s_loc(self) -> int:
+        return self.s_cap // self.d_s
+
+
+def make_decode_geometry(cfg: ArchConfig, mesh: Mesh, *, batch_per_pod: int,
+                         cache_len: int,
+                         compute_dtype=jnp.bfloat16) -> DecodeGeometry:
+    pod, data, model = mesh_axis_names(mesh)
+    d_p, d_s = mesh.shape[data], mesh.shape[model]
+    n_micro = min(d_p, max(1, batch_per_pod))
+    return DecodeGeometry(
+        batch_per_pod=batch_per_pod, cache_len=cache_len, d_p=d_p, d_s=d_s,
+        layers_per_stage=-(-cfg.spec.n_layers // d_p), n_micro=n_micro,
+        compute_dtype=compute_dtype)
+
+
+def decode_state_struct(cfg: ArchConfig, geom: DecodeGeometry,
+                        n_pods: int) -> Dict:
+    """Global ShapeDtypeStructs for the serving state (cache etc.)."""
+    s = cfg.spec
+    lead = (n_pods,) if n_pods > 1 else ()
+    L_s, nm, bm = geom.layers_per_stage, geom.n_micro, geom.bm
+    dt = geom.compute_dtype
+    out: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((*lead, nm, bm), jnp.int32),
+    }
+    if s.is_encoder_decoder:
+        # stub memory: 1/4 of the decode context worth of encoder frames
+        s_mem = max(geom.d_s, (geom.cache_len // 4) // geom.d_s * geom.d_s)
+        out["memory"] = jax.ShapeDtypeStruct(
+            (*lead, nm, bm, s_mem, s.d_model), dt)
+    if not s.attn_free:
+        if s.kv_lora_rank > 0:
+            row = (s.kv_lora_rank + s.qk_rope_dim,)
+            out["cache_k"] = jax.ShapeDtypeStruct(
+                (*lead, geom.d_p, nm, L_s, bm, geom.s_cap, 1, *row), dt)
+        else:
+            out["cache_k"] = jax.ShapeDtypeStruct(
+                (*lead, geom.d_p, nm, L_s, bm, geom.s_cap,
+                 s.n_kv_heads, s.head_dim), dt)
+            out["cache_v"] = jax.ShapeDtypeStruct(out["cache_k"].shape, dt)
+    if s.ssm_state > 0:
+        out["ssm_h"] = jax.ShapeDtypeStruct(
+            (*lead, geom.d_p, nm, L_s, bm, s.inner, s.ssm_state), jnp.float32)
+        out["conv_tail"] = jax.ShapeDtypeStruct(
+            (*lead, geom.d_p, nm, L_s, bm, s.ssm_conv - 1, s.inner), dt)
+    return out
+
+
+def decode_state_specs(cfg: ArchConfig, geom: DecodeGeometry, *,
+                       pod: Optional[str], data: str, model: str) -> Dict:
+    s = cfg.spec
+    lead = (pod,) if pod else ()
+    out: Dict[str, Any] = {"tokens": P(*lead, None, None)}
+    if s.is_encoder_decoder:
+        # cross-attention memory [.., nm, bm, S_mem, D]: frames over model
+        out["memory"] = P(*lead, None, None, model, None)
+    if not s.attn_free:
+        # [.., d_p, nm, L_s, bm, S, Hkv, Dh]: stage over data, seq over model
+        out["cache_k"] = P(*lead, data, None, None, None, model, None, None)
+        if s.kv_lora_rank == 0:
+            out["cache_v"] = out["cache_k"]
+    if s.ssm_state > 0:
+        # channel dim over model
+        out["ssm_h"] = P(*lead, data, None, None, None, model, None)
+        out["conv_tail"] = P(*lead, data, None, None, None, None, model)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Flash-decode attention (sequence-sharded cache, LSE merge over "model").
+# ---------------------------------------------------------------------------
+
+def _flash_decode(q, k_loc, v_loc, *, valid_rows, scale, model_axis):
+    """q: [Bm, Hq, Dh]; k/v_loc: [Bm, S_loc, Hkv(+), Dh]; valid_rows:
+    [S_loc] bool. Returns [Bm, Hq, Dv]."""
+    Hq = q.shape[1]
+    Hkv = k_loc.shape[2]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k_loc = jnp.repeat(k_loc, rep, axis=2)
+        v_loc = jnp.repeat(v_loc, rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k_loc.astype(jnp.float32)) * scale
+    s = jnp.where(valid_rows[None, None, :], s, -1e30)
+    m = s.max(axis=-1)
+    m_g = jax.lax.pmax(m, model_axis)
+    p = jnp.exp(s - m_g[..., None])
+    l = jax.lax.psum(p.sum(axis=-1), model_axis)
+    acc = jnp.einsum("bhs,bshd->bhd", p, v_loc.astype(jnp.float32))
+    acc = jax.lax.psum(acc, model_axis)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.where(l[..., None] > 0, out, 0.0).astype(q.dtype)
+
+
+def decode_step_fn(cfg: ArchConfig, geom: DecodeGeometry, shard_dims, *,
+                   pod_axis: Optional[str], data_axis: str = "data",
+                   model_axis: str = "model") -> Callable:
+    """Returns step_local(params, state) -> (next_ids [nm, bm], new state);
+    call inside shard_map."""
+    s = cfg.spec
+    L_s, d_p, d_s = geom.layers_per_stage, geom.d_p, geom.d_s
+    nm, bm = geom.n_micro, geom.bm
+    dt = geom.compute_dtype
+    S, S_loc = geom.cache_len, geom.s_loc
+    L_pad = d_p * L_s
+    import numpy as _np
+    win_flat = [cfg.layer_window(i) for i in range(s.n_layers)]
+    win_flat += [0] * (L_pad - s.n_layers)
+    windows_all = jnp.asarray(win_flat, jnp.int32).reshape(d_p, L_s)
+    active_all = jnp.asarray(
+        (_np.arange(L_pad) < s.n_layers).reshape(d_p, L_s))
+    scale = 1.0 / math.sqrt(s.head_dim + (s.qk_rope_dim if s.kv_lora_rank
+                                          else 0)) if not s.attn_free else 0.0
+
+    moe_fn = None
+    if s.n_experts > 0:
+        from .ep import make_moe_ep
+        moe_fn = make_moe_ep(model_axis, d_s)
+
+    def _attn_decode(lp, h, cache_k_l, cache_v_l, window):
+        """One microbatch, one layer. h: [bm, D]."""
+        pos = jnp.full((bm,), S, jnp.int32)
+        q, k_new, v_new = project_qkv(cfg, lp, h, pos)
+        # write the new row into the shard owning position S
+        shard_off = jax.lax.axis_index(model_axis) * S_loc
+        loc = S - shard_off
+        ok = (loc >= 0) & (loc < S_loc)
+        locc = jnp.clip(loc, 0, S_loc - 1)
+        upd_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k_l, k_new[:, None].astype(cache_k_l.dtype), locc, axis=1)
+        cache_k_l = jnp.where(ok, upd_k, cache_k_l)
+        if cache_v_l is not None:
+            upd_v = jax.lax.dynamic_update_slice_in_dim(
+                cache_v_l, v_new[:, None].astype(cache_v_l.dtype), locc,
+                axis=1)
+            cache_v_l = jnp.where(ok, upd_v, cache_v_l)
+        rows = shard_off + jnp.arange(S_loc)
+        valid = rows <= S
+        big = jnp.int32(2 ** 30)
+        w = jnp.where(window > 0, window, big)
+        valid &= (S - rows) < w
+        if s.kv_lora_rank > 0:
+            kk, vv = jax.vmap(
+                lambda c: mla_expand_ctx(cfg, lp, c))(cache_k_l)
+            out = _flash_decode(q, kk, vv, valid_rows=valid, scale=scale,
+                                model_axis=model_axis)
+            out = out[..., :s.head_dim]
+        else:
+            out = _flash_decode(q, cache_k_l, cache_v_l, valid_rows=valid,
+                                scale=scale, model_axis=model_axis)
+        y = jnp.einsum("bh,hd->bd", out.reshape(bm, -1),
+                       lp["wo"].astype(h.dtype))
+        return y, cache_k_l, cache_v_l
+
+    def _mamba_decode(lp, h, h_state, tail):
+        """One-step SSM update; channels sharded over model.
+
+        h: [bm, D]; h_state: [bm, di_loc, ds]; tail: [bm, K-1, di_loc].
+        in/out projections are ZeRO-gathered full, so slice the local
+        channel block."""
+        di = s.inner
+        di_loc = h_state.shape[-2]
+        c_off = jax.lax.axis_index(model_axis) * di_loc
+        dtr = dt_rank_of(cfg)
+        xz = jnp.einsum("bd,dh->bh", h, lp["in_proj"].astype(h.dtype))
+        xs_f, z_f = xz[:, :di], xz[:, di:]
+        xs = jax.lax.dynamic_slice_in_dim(xs_f, c_off, di_loc, axis=1)
+        z = jax.lax.dynamic_slice_in_dim(z_f, c_off, di_loc, axis=1)
+        conv_w = jax.lax.dynamic_slice_in_dim(lp["conv_w"], c_off, di_loc, 1)
+        conv_b = jax.lax.dynamic_slice_in_dim(lp["conv_b"], c_off, di_loc, 0)
+        window = jnp.concatenate([tail, xs[:, None, :]], axis=1)  # [bm,K,dl]
+        xc = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                        conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+        xc = jax.nn.silu(xc).astype(h.dtype)
+        # x_proj/dt act on the full channel dim; gather local xc
+        xc_full = jax.lax.all_gather(xc, model_axis, axis=1, tiled=True)
+        proj = jnp.einsum("bd,dh->bh", xc_full, lp["x_proj"].astype(h.dtype))
+        delta_in = proj[:, :dtr]
+        Bv = proj[:, dtr:dtr + s.ssm_state].astype(jnp.float32)
+        Cv = proj[:, dtr + s.ssm_state:dtr + 2 * s.ssm_state].astype(jnp.float32)
+        delta_f = jax.nn.softplus(
+            jnp.einsum("br,rd->bd", delta_in,
+                       lp["dt_proj"].astype(h.dtype)).astype(jnp.float32)
+            + lp["dt_bias"].astype(jnp.float32))
+        delta = jax.lax.dynamic_slice_in_dim(delta_f, c_off, di_loc, axis=1)
+        A = -jnp.exp(jax.lax.dynamic_slice_in_dim(
+            lp["a_log"].astype(jnp.float32), c_off, di_loc, 0))
+        a = jnp.exp(delta[..., None] * A[None])
+        bx = (delta * xc.astype(jnp.float32))[..., None] * Bv[:, None, :]
+        h_new = a * h_state + bx
+        y = jnp.einsum("bds,bs->bd", h_new, Cv)
+        dskip = jax.lax.dynamic_slice_in_dim(
+            lp["d_skip"].astype(jnp.float32), c_off, di_loc, 0)
+        y = y + dskip[None] * xc.astype(jnp.float32)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y_full = jax.lax.all_gather(y.astype(h.dtype), model_axis, axis=1,
+                                    tiled=True)
+        out = jnp.einsum("bd,dh->bh", y_full, lp["out_proj"].astype(h.dtype))
+        new_tail = window[:, 1:, :].astype(tail.dtype)
+        return out, h_new, new_tail
+
+    def _cross_decode(lp, h, mem):
+        """Cross-attention for one decode token per sequence.
+        h: [bm, D]; mem: [bm, S_mem_loc, D] (frames sharded over model)."""
+        Dh, Hq, Hkv = s.head_dim, s.n_heads, s.n_kv_heads
+        dtl = h.dtype
+        q = jnp.einsum("bd,dh->bh", h, lp["wq"].astype(dtl)
+                       ).reshape(bm, Hq, Dh)
+        k = jnp.einsum("bsd,dh->bsh", mem, lp["wk"].astype(dtl)
+                       ).reshape(bm, -1, Hkv, Dh)
+        v = jnp.einsum("bsd,dh->bsh", mem, lp["wv"].astype(dtl)
+                       ).reshape(bm, -1, Hkv, Dh)
+        valid = jnp.ones((k.shape[1],), bool)
+        out = _flash_decode(q, k, v, valid_rows=valid,
+                            scale=1.0 / math.sqrt(Dh),
+                            model_axis=model_axis)
+        return jnp.einsum("bh,hd->bd", out.reshape(bm, -1),
+                          lp["wo"].astype(dtl))
+
+    def step_local(params, state):
+        p_idx = jax.lax.axis_index(data_axis)
+        stage_params = jax.tree.map(lambda x: x[0], params["stages"])
+        windows = windows_all[p_idx]
+        active = active_all[p_idx]
+        fn_gamma = params["final_norm"]
+        if fn_gamma.shape[0] != s.d_model:
+            fn_gamma = jax.lax.all_gather(fn_gamma, model_axis, axis=0,
+                                          tiled=True)
+        head_w = params.get("unembed", params["embed"])
+        tokens = state["tokens"].reshape(nm, bm)  # lead dims are 1
+
+        n_lead = (1 if pod_axis else 0) + 1  # (pod) + stage dims
+
+        def sq(name):
+            if name not in state:
+                return None
+            a = state[name]
+            return a.reshape(a.shape[n_lead:]) if a is not None else None
+
+        memory = None
+        if "memory" in state:
+            a = state["memory"]
+            memory = a.reshape(a.shape[-(4):]) if pod_axis is None \
+                else a.reshape(a.shape[-4:])
+        cache_k = sq("cache_k")      # [nm, L_s, bm, S_loc, Hkv, Dh]
+        cache_v = sq("cache_v")
+        ssm_h = sq("ssm_h")          # [nm, L_s, bm, di_loc, ds]
+        conv_tail = sq("conv_tail")
+
+        def tick(carry, t):
+            x_recv, ck, cv, hh, tl, out_ids = carry
+            idx = t - p_idx
+            valid = (idx >= 0) & (idx < nm)
+            idxc = jnp.clip(idx, 0, nm - 1)
+            tok = tokens[idxc]
+            x_emb = sp.sharded_embed(params["embed"], tok, model_axis, dt)
+            if cfg.embed_scale:
+                x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
+            x = jnp.where(p_idx == 0, x_emb, x_recv)
+
+            new_ck, new_cv = ck, cv
+            new_hh, new_tl = hh, tl
+            for l in range(L_s):
+                lp = gather_layer_params(
+                    jax.tree.map(lambda a: a[l], stage_params),
+                    shard_dims, model_axis)
+                act = active[l]
+                h_in = rms_norm(x, lp["ln1"], cfg.rms_eps)
+                mix = jnp.zeros_like(x)
+                if not s.attn_free and "attn" in lp:
+                    ckl = ck[idxc, l] if ck is not None else None
+                    cvl = cv[idxc, l] if cv is not None else None
+                    y, ckl2, cvl2 = _attn_decode(lp["attn"], h_in, ckl, cvl,
+                                                 windows[l])
+                    if s.is_encoder_decoder and "cross" in lp:
+                        hx = rms_norm(x + y, lp["ln_x"], cfg.rms_eps)
+                        y = y + _cross_decode(lp["cross"], hx,
+                                              memory[idxc])
+                    if ck is not None:
+                        new_ck = new_ck.at[idxc, l].set(
+                            jnp.where(act & valid, ckl2, ckl))
+                    if cv is not None:
+                        new_cv = new_cv.at[idxc, l].set(
+                            jnp.where(act & valid, cvl2, cvl))
+                if s.ssm_state > 0:
+                    y2, hh2, tl2 = _mamba_decode(lp["mamba"], h_in,
+                                                 hh[idxc, l], tl[idxc, l])
+                    if cfg.layer_kind == LayerKind.HYBRID:
+                        mix = 0.5 * (mix + y2)
+                    else:
+                        mix = y2
+                    new_hh = new_hh.at[idxc, l].set(
+                        jnp.where(act & valid, hh2, hh[idxc, l]))
+                    new_tl = new_tl.at[idxc, l].set(
+                        jnp.where(act & valid, tl2, tl[idxc, l]))
+                x_new = x + mix
+                if cfg.layer_kind != LayerKind.MAMBA:
+                    h2 = rms_norm(x_new, lp["ln2"], cfg.rms_eps)
+                    if s.n_experts > 0:
+                        x_new = x_new + moe_fn(cfg, lp["moe"], h2)
+                    else:
+                        x_new = x_new + swiglu_apply(lp["mlp"], h2)
+                x = jnp.where(act, x_new, x)
+                ck, cv, hh, tl = new_ck, new_cv, new_hh, new_tl
+
+            h_last = rms_norm(x, fn_gamma, cfg.rms_eps)
+            ids = sp.sharded_greedy(h_last, head_w, model_axis,
+                                    vocab_true=s.vocab)
+            sel = valid & (p_idx == d_p - 1)
+            out_ids = out_ids.at[idxc].set(
+                jnp.where(sel, ids, out_ids[idxc]))
+            if d_p > 1:
+                x_send = jax.lax.ppermute(
+                    x, data_axis, [(i, i + 1) for i in range(d_p - 1)])
+            else:
+                x_send = x
+            return (x_send, ck, cv, hh, tl, out_ids), None
+
+        x0 = jnp.zeros((bm, s.d_model), dt)
+        ids0 = jnp.zeros((nm, bm), jnp.int32)
+        carry0 = (x0, cache_k, cache_v, ssm_h, conv_tail, ids0)
+        (xf, ck, cv, hh, tl, out_ids), _ = jax.lax.scan(
+            tick, carry0, jnp.arange(nm + d_p - 1))
+        out_ids = jax.lax.psum(out_ids, data_axis)
+
+        new_state = dict(state)
+        new_state["tokens"] = out_ids.reshape(state["tokens"].shape)
+
+        def unsq(a, ref):
+            return a.reshape(ref.shape) if a is not None else None
+        if "cache_k" in state:
+            new_state["cache_k"] = unsq(ck, state["cache_k"])
+        if "cache_v" in state:
+            new_state["cache_v"] = unsq(cv, state["cache_v"])
+        if "ssm_h" in state:
+            new_state["ssm_h"] = unsq(hh, state["ssm_h"])
+        if "conv_tail" in state:
+            new_state["conv_tail"] = unsq(tl, state["conv_tail"])
+        return out_ids, new_state
+
+    return step_local

@@ -1,0 +1,151 @@
+"""Parameter/batch/optimizer sharding rules.
+
+Layout (mesh axes: optional "pod" (DP), "data" (pipeline stages), "model"
+(SP/FSDP/EP) — DESIGN.md §2.2):
+
+* layer parameters are stage-stacked: leaf [L, ...] -> [d_p, L/d_p, ...],
+  dim 0 sharded over "data";
+* every leaf is additionally ZeRO-3 sharded over "model" along its largest
+  divisible weight dim (the executor all-gathers per layer on use and the
+  autodiff transpose emits the matching reduce-scatter);
+* MoE expert weights are EP-sharded over "model" along the expert dim
+  and are NOT gathered (expert parallelism instead of ZeRO for those);
+* embedding / LM head are vocab-sharded over "model" (vocab-parallel
+  embed-psum + streaming-CE merge live in runtime/sp.py);
+* everything is replicated over "pod" (per-pod gradient psum once per step).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["EP_PATH_RE", "stack_stages", "stage_active_mask",
+           "unstack_stages", "zero3_dim", "shard_dim_tree",
+           "stage_param_specs", "head_param_specs", "batch_specs",
+           "tree_paths_map", "mesh_axis_names"]
+
+# expert-parallel leaves: sharded on their expert dim, never ZeRO-gathered
+EP_PATH_RE = re.compile(r"moe/(w_gate|w_up|w_down)$")
+
+
+def mesh_axis_names(mesh: Mesh) -> Tuple[Optional[str], str, str]:
+    """Returns (pod_axis | None, data_axis, model_axis)."""
+    names = mesh.axis_names
+    if len(names) == 3:
+        return names[0], names[1], names[2]
+    if len(names) == 2:
+        return None, names[0], names[1]
+    raise ValueError(f"expected 2 or 3 mesh axes, got {names}")
+
+
+def tree_paths_map(fn, tree):
+    """tree_map with a '/'-joined key path passed first."""
+    def _name(k) -> str:
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "idx"):
+            return str(k.idx)
+        return str(k)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn("/".join(_name(k) for k in path), leaf), tree)
+
+
+def stack_stages(layers_tree, d_p: int, n_layers: int):
+    """[L, ...] leaves -> [d_p, ceil(L/d_p), ...], zero-padded.
+
+    Non-divisible depths (gemma3: 26 over 16 stages) pad with inert layer
+    slots; :func:`stage_active_mask` marks them and the executor turns the
+    padded layers into identity (the compute waste is real and surfaces in
+    the roofline's MODEL_FLOPS ratio — DESIGN.md §2.1).
+    """
+    L_ps = -(-n_layers // d_p)
+
+    def _re(x):
+        pad = d_p * L_ps - x.shape[0]
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+        return x.reshape(d_p, L_ps, *x.shape[1:])
+    return jax.tree.map(_re, layers_tree)
+
+
+def stage_active_mask(d_p: int, n_layers: int):
+    """[d_p, ceil(L/d_p)] bool: True where a real layer lives."""
+    import numpy as np
+    L_ps = -(-n_layers // d_p)
+    flat = np.arange(d_p * L_ps) < n_layers
+    return jnp.asarray(flat.reshape(d_p, L_ps))
+
+
+def unstack_stages(layers_tree, n_layers: int):
+    def _re(x):
+        flat = x.reshape(x.shape[0] * x.shape[1], *x.shape[2:])
+        return flat[:n_layers]
+    return jax.tree.map(_re, layers_tree)
+
+
+def zero3_dim(path: str, shape: Tuple[int, ...], d_s: int,
+              first_dim: int = 2) -> Optional[int]:
+    """Pick the ZeRO-3 shard dim for a stage-stacked leaf [d_p, L_s, ...]:
+    the FIRST trailing dim divisible by d_s (None => replicated). Must be
+    called with FULL (unsharded) shapes — the executor receives the chosen
+    dims precomputed (shard_dim_tree) so local views can't disagree."""
+    if EP_PATH_RE.search(path):
+        return first_dim  # expert dim ([d_p, L_s, E, ...])
+    for d in range(first_dim, len(shape)):
+        if shape[d] % d_s == 0:
+            return d
+    return None
+
+
+def shard_dim_tree(stacked_tree, d_s: int):
+    """Pytree (same structure) of Optional[int] ZeRO gather dims, computed
+    from full stacked shapes."""
+    return tree_paths_map(
+        lambda path, leaf: zero3_dim(path, leaf.shape, d_s), stacked_tree)
+
+
+def stage_param_specs(stacked_tree, d_s: int, *, pod: Optional[str],
+                      data: str = "data", model: str = "model"):
+    """PartitionSpec tree for stage-stacked layer params."""
+    def _spec(path: str, leaf) -> P:
+        dims: List[Optional[str]] = [None] * leaf.ndim
+        dims[0] = data
+        zd = zero3_dim(path, leaf.shape, d_s)
+        if zd is not None:
+            dims[zd] = model
+        return P(*dims)
+    return tree_paths_map(_spec, stacked_tree)
+
+
+def head_param_specs(head_tree, d_s: int, *, model: str = "model"):
+    """Embed / unembed / final_norm: vocab (dim 0) or feature sharding."""
+    def _spec(path: str, leaf) -> P:
+        if leaf.ndim >= 2:          # [V, D] embed/unembed
+            return P(model, *([None] * (leaf.ndim - 1)))
+        if leaf.shape and leaf.shape[0] % d_s == 0:
+            return P(model)
+        return P()
+    return tree_paths_map(_spec, head_tree)
+
+
+def batch_specs(batch_tree, *, pod: Optional[str], model: str = "model"):
+    """Chunked batch arrays [(pods,) n_chunks, cap, ...]: chunk dim over pod
+    (if present), token dim over model."""
+    def _spec(leaf) -> P:
+        dims: List[Optional[str]] = [None] * leaf.ndim
+        i = 0
+        if pod is not None:
+            dims[0] = pod
+            i = 1
+        if leaf.ndim > i + 1:
+            dims[i + 1] = model   # token/capacity dim
+        return P(*dims)
+    return jax.tree.map(_spec, batch_tree)

@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device; only
+``launch/dryrun.py`` requests 512 placeholder devices (and only in its own
+process)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, CostModel, ModelSpec
+
+
+@pytest.fixture
+def tiny_model() -> ModelSpec:
+    return ModelSpec(name="tiny", n_layers=8, d_model=256, n_heads=8,
+                     n_kv_heads=4, head_dim=32, d_ff=1024, vocab=512)
+
+
+@pytest.fixture
+def small_cluster() -> ClusterSpec:
+    return ClusterSpec(d_p=4, d_s=4, flops_per_chip=197e12, hbm_bytes=16e9)
+
+
+@pytest.fixture
+def cost_model(tiny_model, small_cluster) -> CostModel:
+    return CostModel(tiny_model, small_cluster)
+
+
+@pytest.fixture
+def skewed_lengths():
+    rng = np.random.default_rng(42)
+    lens = np.clip(rng.lognormal(7.5, 1.1, 48).astype(int), 64, 65536)
+    lens[0] = 65536
+    return [int(x) for x in lens]

@@ -1,0 +1,103 @@
+"""Alg. 2 stage-aware chunk-level adaptive checkpointing tests."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterSpec, CostModel, ModelSpec, backward_order,
+                        chunk_sequences, diag_index, enumerate_windows,
+                        solve_checkpointing)
+
+
+def _setup(hbm=16e9, d_p=4, d_s=4, lengths=None, k=3):
+    m = ModelSpec(name="t", n_layers=16, d_model=1024, n_heads=16,
+                  n_kv_heads=8, head_dim=64, d_ff=4096, vocab=32000)
+    cm = CostModel(m, ClusterSpec(d_p=d_p, d_s=d_s, hbm_bytes=hbm))
+    lengths = lengths or [65536, 30000, 8000, 8000, 4000, 2000, 1000, 500]
+    res = chunk_sequences(cm, lengths, k)
+    f2b = backward_order(res.chunks)
+    ns = max(s.n_chunks for s in res.sequences)
+    return cm, res, f2b, ns
+
+
+def test_diag_index_ranges():
+    d_p, n = 4, 6
+    idxs = {diag_index(d_p, p, b) for p in range(1, d_p + 1)
+            for b in range(n)}
+    assert min(idxs) == 0 and max(idxs) == n + d_p - 2
+
+
+def test_no_ckpt_when_memory_ample():
+    cm, res, f2b, ns = _setup(hbm=16e9)
+    sol = solve_checkpointing(cm, res.chunks, f2b, ns)
+    assert sol.status in ("optimal", "feasible")
+    # tiny model, huge memory: nothing to checkpoint
+    assert sol.total_layers == 0
+    assert sol.recompute_time == 0.0
+
+
+def test_ckpt_activates_under_pressure():
+    # shrink memory until the ILP must checkpoint
+    cm, res, f2b, ns = _setup(hbm=16e9)
+    need = None
+    for frac in (0.2, 0.1, 0.05, 0.02, 0.01):
+        sol = solve_checkpointing(cm, res.chunks, f2b, ns,
+                                  capacity=cm.cluster.hbm_bytes * frac)
+        if sol.status in ("optimal", "feasible") and sol.total_layers > 0:
+            need = sol
+            break
+    assert need is not None
+    assert need.recompute_time > 0
+    # Eq. 16 structure: table[p][k] == diag[dp - p + f2b[k]]
+    d_p = cm.cluster.d_p
+    for p in range(1, d_p + 1):
+        for k in range(len(res.chunks)):
+            assert need.table[p - 1][k] == need.diag[diag_index(d_p, p, f2b[k])]
+    # bound: never more than the layers a stage owns
+    per_stage = cm.model.n_layers // d_p
+    assert all(v <= per_stage for v in need.diag)
+
+
+def test_solution_satisfies_memory_constraints():
+    cm, res, f2b, ns = _setup(hbm=16e9)
+    cap = None
+    for frac in (0.15, 0.08, 0.04):
+        sol = solve_checkpointing(cm, res.chunks, f2b, ns,
+                                  capacity=cm.cluster.hbm_bytes * frac)
+        if sol.status not in ("optimal", "feasible"):
+            continue
+        cap = cm.cluster.hbm_bytes * frac
+        d_p = cm.cluster.d_p
+        windows = enumerate_windows(len(res.chunks), d_p, ns, f2b)
+        for p in range(1, d_p + 1):
+            budget = cap - cm.m_model_states(p)
+            for w in windows[p - 1]:
+                tot = sum(cm.m_act(p, res.chunks[k], sol.table[p - 1][k])
+                          for k in w)
+                assert tot <= budget * (1 + 1e-9) + 1.0
+    assert cap is not None
+
+
+def test_infeasible_when_capacity_tiny():
+    cm, res, f2b, ns = _setup()
+    sol = solve_checkpointing(cm, res.chunks, f2b, ns, capacity=1e6)
+    assert sol.status == "infeasible"
+    assert math.isinf(sol.recompute_time)
+
+
+def test_stage_awareness_window_depth():
+    """Eq. 7: stage 1 keeps the deepest chunks window, so its no-ckpt peak
+    activation need exceeds the last stage's (streaming CE => no logits
+    blow-up on the last stage). This is the asymmetry the stage-aware ILP
+    exploits; the exact per-stage ckpt split is solution-degenerate, so we
+    assert the underlying need, and that the ILP's solution respects every
+    stage's own constraint set (checked in
+    test_solution_satisfies_memory_constraints)."""
+    cm, res, f2b, ns = _setup()
+    windows = enumerate_windows(len(res.chunks), cm.cluster.d_p, ns, f2b)
+    need = []
+    for p in (1, cm.cluster.d_p):
+        need.append(max(sum(cm.m_act(p, res.chunks[k], 0) for k in w)
+                        for w in windows[p - 1]))
+    assert need[0] >= need[1]

@@ -1,0 +1,117 @@
+"""Alg. 1 sequence-processor invariants (unit + hypothesis property)."""
+
+from collections import defaultdict
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ChunkKind, ClusterSpec, CostModel, ModelSpec,
+                        chunk_sequences)
+
+
+def _cm(d_p=4, d_s=4):
+    m = ModelSpec(name="t", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4,
+                  head_dim=32, d_ff=1024, vocab=512)
+    return CostModel(m, ClusterSpec(d_p=d_p, d_s=d_s))
+
+
+def _check_coverage(lengths, result):
+    """Every sequence covered exactly once by contiguous in-order slices."""
+    per_seq = defaultdict(list)
+    for c in result.chunks:
+        for s in c.slices:
+            per_seq[s.seq_id].append(s)
+    assert set(per_seq) == set(range(len(lengths)))
+    for sid, slices in per_seq.items():
+        slices.sort(key=lambda s: s.start)
+        off = 0
+        for i, s in enumerate(slices):
+            assert s.start == off
+            off += s.length
+            is_last = i == len(slices) - 1
+            assert s.is_tail == is_last
+        assert off == lengths[sid]
+
+
+def test_k1_is_pure_batch_level(cost_model, skewed_lengths):
+    res = chunk_sequences(cost_model, skewed_lengths, 1)
+    assert all(c.kind is ChunkKind.BATCHED for c in res.chunks)
+    _check_coverage(skewed_lengths, res)
+
+
+def test_long_sequence_is_split(cost_model, skewed_lengths):
+    res = chunk_sequences(cost_model, skewed_lengths, 4)
+    kinds = {c.kind for c in res.chunks}
+    assert ChunkKind.SPLIT in kinds
+    _check_coverage(skewed_lengths, res)
+    # split chunk context equals its slice's start offset
+    for c in res.chunks:
+        if c.kind in (ChunkKind.SPLIT, ChunkKind.HYBRID):
+            assert c.context == c.slices[0].start
+
+
+def test_no_two_tails_in_one_chunk(cost_model, skewed_lengths):
+    """Footnote 1: packing two tail slices is forbidden."""
+    for k in (2, 4, 8):
+        res = chunk_sequences(cost_model, skewed_lengths, k)
+        for c in res.chunks:
+            tails_of_long = [s for s in c.slices
+                             if s.is_tail and s.start > 0]
+            assert len(tails_of_long) <= 1
+
+
+def test_chunk_token_threshold(cost_model, skewed_lengths):
+    for k in (1, 3, 6):
+        res = chunk_sequences(cost_model, skewed_lengths, k)
+        for c in res.chunks:
+            assert c.tokens <= res.t_m
+
+
+def test_execution_order_longest_first(cost_model, skewed_lengths):
+    """§III-C1: longer sequences scheduled first; slices causally ordered."""
+    res = chunk_sequences(cost_model, skewed_lengths, 4)
+    seen_ctx = {}
+    for c in res.chunks:
+        if c.kind is ChunkKind.BATCHED:
+            continue
+        sid = c.seq_id
+        prev = seen_ctx.get(sid, -1)
+        assert c.context > prev  # slices of a sequence appear in order
+        seen_ctx[sid] = c.context
+
+
+def test_mesh_matches_paper_example():
+    """Paper §III-B: with mesh {8K,4K,2K}, a >12K sequence becomes 8K + 4K
+    slices plus a variable-length remainder."""
+    cm = _cm()
+    lengths = [14336, 13000, 9000, 5000, 1000]
+    res = chunk_sequences(cm, lengths, 3)
+    mesh = res.mesh
+    assert len(mesh) == 3 and sum(mesh) == 14336
+    per_seq = defaultdict(list)
+    for c in res.chunks:
+        for s in c.slices:
+            per_seq[s.seq_id].append(s)
+    s13k = sorted(per_seq[1], key=lambda s: s.start)
+    assert [s.length for s in s13k[:-1]] == [mesh[0], mesh[1]]
+    assert s13k[-1].length == 13000 - mesh[0] - mesh[1]
+    # the 5000 sequence is shorter than mesh[0] -> not split
+    assert len(per_seq[3]) == 1
+
+
+@given(st.lists(st.integers(min_value=16, max_value=30000),
+                min_size=1, max_size=40),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=50, deadline=None)
+def test_chunking_coverage_property(lengths, k):
+    cm = _cm()
+    res = chunk_sequences(cm, lengths, k)
+    _check_coverage(lengths, res)
+    assert sum(c.tokens for c in res.chunks) == sum(lengths)
+    # sequence infos agree with the chunks
+    for si in res.sequences:
+        assert si.length == lengths[si.seq_id]
+        assert si.n_chunks == len(si.chunk_ids)
+        for cid in si.chunk_ids:
+            assert any(s.seq_id == si.seq_id for s in res.chunks[cid].slices)

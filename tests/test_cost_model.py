@@ -1,0 +1,195 @@
+"""Unit + property tests for the Eq. 1-11 cost model."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Chunk, ChunkKind, ClusterSpec, CostModel, ModelSpec,
+                        Slice, analytic_coefficients, fit_coefficients)
+
+
+def _batched(*lengths, seq0=0):
+    return Chunk(kind=ChunkKind.BATCHED, context=0,
+                 slices=tuple(Slice(seq_id=seq0 + i, start=0, length=l,
+                                    is_tail=True)
+                              for i, l in enumerate(lengths)))
+
+
+def _split(length, context, tail=False, seq=0):
+    return Chunk(kind=ChunkKind.SPLIT, context=context,
+                 slices=(Slice(seq_id=seq, start=context, length=length,
+                               is_tail=tail),))
+
+
+def test_coefficients_positive(cost_model):
+    co = cost_model.coeffs
+    assert co.alpha1 > 0 and co.alpha2 > 0 and co.m_token > 0
+    assert co.m_logits == 16.0  # streaming fused CE: only per-token stats
+
+
+def test_ce_modes_order(tiny_model, small_cluster):
+    stream = CostModel(tiny_model, small_cluster, ce_mode="streaming")
+    inplace = CostModel(tiny_model, small_cluster, ce_mode="inplace")
+    naive = CostModel(tiny_model, small_cluster, ce_mode="naive")
+    assert (stream.coeffs.m_logits < inplace.coeffs.m_logits
+            < naive.coeffs.m_logits)
+
+
+def test_tcomp_monotone_in_tokens(cost_model):
+    prev = 0.0
+    for ln in (128, 512, 2048, 8192):
+        t = cost_model.t_comp(_batched(ln))
+        assert t > prev
+        prev = t
+
+
+def test_split_chunk_cost_grows_with_context(cost_model):
+    # same slice length, larger context => more attention work (causal)
+    t0 = cost_model.t_comp(_split(1024, 0))
+    t1 = cost_model.t_comp(_split(1024, 8192))
+    t2 = cost_model.t_comp(_split(1024, 32768))
+    assert t0 < t1 < t2
+
+
+def test_quadratic_context_identity(cost_model):
+    """Eq. 1: cost(C, s) - cost(0, s) must equal alpha1 * C * s / N exactly."""
+    co, cl = cost_model.coeffs, cost_model.cluster
+    s, C = 2048, 16384
+    a = cost_model.t_comp(_split(s, C))
+    b = cost_model.t_comp(_split(s, 0))
+    u = cost_model.utilization(_split(s, C))
+    expect = co.alpha1 * 0.5 * ((C + s) ** 2 - C ** 2 - s ** 2) / cl.n_devices / u
+    assert math.isclose(a - b, expect, rel_tol=1e-9)
+
+
+def test_utilization_saturates(cost_model):
+    u_small = cost_model.utilization(_batched(32))
+    u_big = cost_model.utilization(_batched(65536))
+    assert 0 < u_small < u_big <= 1.0
+
+
+def test_backward_is_2x_forward(cost_model):
+    c = _batched(4096)
+    assert math.isclose(cost_model.t_comp_bwd(c),
+                        2.0 * cost_model.t_comp(c), rel_tol=1e-12)
+
+
+def test_sp_policies_differ_and_positive(tiny_model, small_cluster):
+    ul = CostModel(tiny_model, small_cluster, sp_policy="ulysses")
+    ag = CostModel(tiny_model, small_cluster, sp_policy="allgather_kv")
+    c = _batched(4096)
+    assert ul.t_sp_comm(c) > 0 and ag.t_sp_comm(c) > 0
+    # GQA (4 kv heads vs 8 q heads): gathering KV moves less than 4 a2a's
+    assert ag.t_sp_comm(c) < ul.t_sp_comm(c)
+    assert ul.kv_replication == 1 and ag.kv_replication == small_cluster.d_s
+
+
+def test_auto_policy_head_divisibility(small_cluster):
+    divisible = ModelSpec(name="m", n_layers=4, d_model=256, n_heads=8,
+                          n_kv_heads=4, head_dim=32, d_ff=512, vocab=128)
+    odd = ModelSpec(name="m", n_layers=4, d_model=256, n_heads=7,
+                    n_kv_heads=7, head_dim=32, d_ff=512, vocab=128)
+    assert CostModel(divisible, small_cluster).sp_policy == "ulysses"
+    assert CostModel(odd, small_cluster).sp_policy == "allgather_kv"
+
+
+def test_mdkv_only_for_dependent_chunks(cost_model):
+    dep = _split(1024, 4096, tail=False)
+    tail = _split(1024, 4096, tail=True)
+    batched = _batched(1024)
+    assert cost_model.m_dkv(dep) > 0
+    assert cost_model.m_dkv(tail) == 0
+    assert cost_model.m_dkv(batched) == 0
+
+
+def test_mact_decreases_with_ckpt(cost_model):
+    c = _batched(8192)
+    vals = [cost_model.m_act(1, c, l) for l in range(3)]
+    assert vals[0] > vals[1] > vals[2] > 0
+
+
+def test_last_stage_carries_logits(cost_model):
+    c = _batched(8192)
+    assert (cost_model.m_act(cost_model.cluster.d_p, c)
+            > cost_model.m_act(1, c))
+
+
+def test_model_states_fit_reasonably(cost_model):
+    for p in range(1, cost_model.cluster.d_p + 1):
+        ms = cost_model.m_model_states(p)
+        assert 0 < ms < cost_model.cluster.hbm_bytes
+
+
+def test_token_capacity_positive(cost_model):
+    assert cost_model.token_capacity() > 4096
+
+
+def test_split_balanced_properties(cost_model):
+    for k in (1, 2, 3, 5, 8):
+        mesh = cost_model.split_balanced(65536, k)
+        assert sum(mesh) == 65536
+        assert len(mesh) <= k
+        # earlier slices longer (they lack context): non-increasing
+        assert all(a >= b for a, b in zip(mesh, mesh[1:]))
+        # workload balance: bwd cost of each slice within 25% of the mean
+        if k > 1:
+            costs = []
+            off = 0
+            for s in mesh:
+                costs.append(cost_model.t_comp(_split(s, off)))
+                off += s
+            mean = sum(costs) / len(costs)
+            assert max(costs) / mean < 1.35 and min(costs) / mean > 0.6
+
+
+@given(st.integers(min_value=64, max_value=200000),
+       st.integers(min_value=1, max_value=12))
+@settings(max_examples=60, deadline=None)
+def test_split_balanced_conserves_tokens(length, k):
+    m = ModelSpec(name="t", n_layers=4, d_model=128, n_heads=4, n_kv_heads=4,
+                  head_dim=32, d_ff=512, vocab=256)
+    cm = CostModel(m, ClusterSpec(d_p=2, d_s=2))
+    mesh = cm.split_balanced(length, k)
+    assert sum(mesh) == length
+    assert all(s > 0 for s in mesh)
+
+
+def test_fit_coefficients_recovers_ground_truth(cost_model):
+    """Generate synthetic timings from known coefficients, refit, compare."""
+    co, cl = cost_model.coeffs, cost_model.cluster
+    rng = np.random.default_rng(0)
+    samples = []
+    for _ in range(64):
+        ln = int(rng.integers(128, 16384))
+        ctx = int(rng.integers(0, 2)) * int(rng.integers(0, 16384))
+        ch = _split(ln, ctx)
+        C, s0 = float(ch.context), float(ch.s0)
+        quad = 0.5 * ((C + s0) ** 2 - C ** 2)
+        t = (co.alpha1 * quad + co.alpha2 * s0) / cl.n_devices + co.beta1 / cl.d_p
+        samples.append((ch, t))
+    fit = fit_coefficients(co, cl, samples)
+    assert math.isclose(fit.alpha1, co.alpha1, rel_tol=1e-6)
+    assert math.isclose(fit.alpha2, co.alpha2, rel_tol=1e-6)
+
+
+def test_straggler_slowdown_inflates_stage(cost_model):
+    slow = cost_model.with_slowdowns([1.0, 2.0, 1.0, 1.0])
+    c = _batched(4096)
+    assert math.isclose(slow.t_comp(c, stage=2), 2 * slow.t_comp(c, stage=1),
+                        rel_tol=1e-9)
+
+
+def test_param_count_families():
+    dense = ModelSpec(name="d", n_layers=28, d_model=3072, n_heads=24,
+                      n_kv_heads=8, head_dim=128, d_ff=8192, vocab=128256)
+    # llama3.2-3b is ~3.2B params
+    assert 2.5e9 < dense.param_count() < 4.0e9
+    moe = ModelSpec(name="m", n_layers=16, d_model=2048, n_heads=16,
+                    n_kv_heads=16, head_dim=128, d_ff=1024, vocab=50304,
+                    n_experts=64, top_k=8, d_ff_expert=1024)
+    # olmoe: ~6.9B total, ~1.3B active
+    assert 5.5e9 < moe.param_count() < 8.5e9
+    assert 0.9e9 < moe.active_param_count() < 2.2e9

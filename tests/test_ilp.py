@@ -1,0 +1,100 @@
+"""ILP solver tests: simplex correctness, greedy feasibility, and exactness
+of branch-and-bound vs brute force on small covering instances."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import greedy_cover, simplex_lp, solve_cover_ilp
+
+
+def _brute_force(A, b, ub):
+    best = None
+    ranges = [range(int(u) + 1) for u in ub]
+    for x in itertools.product(*ranges):
+        xa = np.array(x, dtype=float)
+        if (A @ xa - b >= -1e-9).all():
+            s = xa.sum()
+            if best is None or s < best:
+                best = s
+    return best
+
+
+def test_simplex_known_lp():
+    # min x0 + x1  s.t. 2x0 + x1 >= 4, x0 + 3x1 >= 6, 0<=x<=10
+    A = np.array([[2.0, 1.0], [1.0, 3.0]])
+    b = np.array([4.0, 6.0])
+    status, x, obj = simplex_lp(np.ones(2), A, b, np.full(2, 10.0))
+    assert status == "optimal"
+    # optimum at intersection: x = (6/5, 8/5), obj = 14/5
+    assert np.isclose(obj, 14.0 / 5.0, atol=1e-7)
+    assert (A @ x - b >= -1e-7).all()
+
+
+def test_simplex_infeasible():
+    # x0 >= 5 with ub 2 => infeasible
+    status, x, obj = simplex_lp(np.ones(1), np.array([[1.0]]),
+                                np.array([5.0]), np.array([2.0]))
+    assert status == "infeasible"
+
+
+def test_greedy_cover_feasible():
+    rng = np.random.default_rng(3)
+    A = rng.uniform(0, 2, size=(6, 5))
+    b = rng.uniform(1, 4, size=6)
+    ub = np.full(5, 10.0)
+    x = greedy_cover(A, b, ub)
+    assert x is not None
+    assert (A @ x - b >= -1e-9).all()
+    assert (x <= ub + 1e-9).all() and (x >= -1e-9).all()
+
+
+def test_ilp_trivial_cases():
+    r = solve_cover_ilp(np.zeros((0, 3)), np.zeros(0), np.full(3, 5.0))
+    assert r.status == "optimal" and r.objective == 0
+    # satisfied constraints only
+    r = solve_cover_ilp(np.array([[1.0, 1.0]]), np.array([-3.0]),
+                        np.full(2, 5.0))
+    assert r.status == "optimal" and r.objective == 0
+
+
+def test_ilp_infeasible():
+    r = solve_cover_ilp(np.array([[1.0]]), np.array([10.0]), np.array([3.0]))
+    assert r.status == "infeasible"
+
+
+def test_ilp_matches_brute_force_fixed():
+    A = np.array([[1.0, 0.0, 2.0],
+                  [0.0, 1.0, 1.0],
+                  [1.0, 1.0, 0.0]])
+    b = np.array([3.0, 2.0, 2.0])
+    ub = np.array([3.0, 3.0, 3.0])
+    r = solve_cover_ilp(A, b, ub, gap=0.0)
+    expect = _brute_force(A, b, ub)
+    assert r.status in ("optimal", "feasible")
+    assert r.objective == expect
+    assert (A @ r.x - b >= -1e-9).all()
+
+
+@given(st.integers(min_value=1, max_value=4),     # vars
+       st.integers(min_value=1, max_value=5),     # constraints
+       st.integers(min_value=0, max_value=10**6)) # seed
+@settings(max_examples=60, deadline=None)
+def test_ilp_matches_brute_force_random(nv, nc, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(0, 4, size=(nc, nv)).astype(float)
+    b = rng.integers(0, 8, size=nc).astype(float)
+    ub = rng.integers(1, 4, size=nv).astype(float)
+    r = solve_cover_ilp(A, b, ub, gap=0.0)
+    expect = _brute_force(A, b, ub)
+    if expect is None:
+        assert r.status == "infeasible"
+    else:
+        assert r.x is not None
+        assert (A @ r.x - b >= -1e-7).all()
+        assert (r.x <= ub + 1e-9).all()
+        # exact optimality required at gap=0 (integral objective)
+        assert r.objective == pytest.approx(expect)

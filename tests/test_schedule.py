@@ -1,0 +1,148 @@
+"""1F1B schedule, chunks-window, and simulator tests."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Chunk, ChunkKind, ClusterSpec, CostModel, ModelSpec,
+                        PipelineSimulator, Slice, TickOp, backward_order,
+                        build_schedule, chunk_sequences, enumerate_windows,
+                        window_limit)
+
+
+def _mk_chunks(seq_layout):
+    """seq_layout: list of n_slices per long sequence (1 => batched)."""
+    chunks = []
+    for sid, n in enumerate(seq_layout):
+        if n == 1:
+            chunks.append(Chunk(kind=ChunkKind.BATCHED, context=0,
+                                slices=(Slice(sid, 0, 1024, True),)))
+        else:
+            off = 0
+            for i in range(n):
+                chunks.append(Chunk(
+                    kind=ChunkKind.SPLIT, context=off,
+                    slices=(Slice(sid, off, 1024, i == n - 1),)))
+                off += 1024
+    return chunks
+
+
+def test_backward_order_reverses_within_sequence():
+    chunks = _mk_chunks([3, 1, 2])
+    f2b = backward_order(chunks)
+    # fwd: A1 A2 A3 | B | C1 C2  ->  bwd: A3 A2 A1 | B | C2 C1
+    assert f2b == [2, 1, 0, 3, 5, 4]
+
+
+def test_schedule_complete_and_in_order():
+    n, d_p, ns = 7, 4, 3
+    chunks = _mk_chunks([3, 1, 1, 1, 1])
+    f2b = backward_order(chunks)
+    sched = build_schedule(n, d_p, ns, f2b)
+    assert len(sched) == d_p
+    for row in sched:
+        fs = [t.chunk for t in row if t.op is TickOp.FWD]
+        bs = [t.chunk for t in row if t.op is TickOp.BWD]
+        assert fs == list(range(n))                     # fwd in order
+        assert [f2b[k] for k in bs] == sorted(f2b[k] for k in bs)  # bwd order
+        # every bwd after its own fwd at this stage
+        seen_f = set()
+        for t in row:
+            if t.op is TickOp.FWD:
+                seen_f.add(t.chunk)
+            else:
+                assert t.chunk in seen_f
+
+
+@given(st.lists(st.integers(min_value=1, max_value=4), min_size=1,
+                max_size=8),
+       st.integers(min_value=2, max_value=8))
+@settings(max_examples=50, deadline=None)
+def test_window_limit_eq7(seq_layout, d_p):
+    """Eq. 7: resident chunks at stage p never exceed d_p - p + N_split."""
+    chunks = _mk_chunks(seq_layout)
+    n = len(chunks)
+    ns = max(seq_layout)
+    f2b = backward_order(chunks)
+    windows = enumerate_windows(n, d_p, ns, f2b)
+    for p in range(1, d_p + 1):
+        cap = min(window_limit(d_p, p, ns), n)
+        assert max((len(w) for w in windows[p - 1]), default=0) <= cap
+        # deepest stage (p=1) actually reaches the cap when enough chunks
+        if p == 1 and n >= cap:
+            assert max(len(w) for w in windows[0]) == cap
+
+
+def _sim(seq_layout, d_p=4, ckpt=None):
+    m = ModelSpec(name="t", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4,
+                  head_dim=32, d_ff=1024, vocab=512)
+    cm = CostModel(m, ClusterSpec(d_p=d_p, d_s=4))
+    chunks = _mk_chunks(seq_layout)
+    f2b = backward_order(chunks)
+    sim = PipelineSimulator(cm, chunks, f2b, max(seq_layout), ckpt)
+    return cm, chunks, f2b, sim.run()
+
+
+def test_simulator_dependencies_respected():
+    d_p = 4
+    cm, chunks, f2b, res = _sim([3, 1, 1, 1, 1], d_p)
+    ot = res.op_times
+    n = len(chunks)
+    for k in range(n):
+        for p in range(2, d_p + 1):
+            assert ot[(p, "F", k)][0] >= ot[(p - 1, "F", k)][1] - 1e-12
+        for p in range(1, d_p):
+            assert ot[(p, "B", k)][0] >= ot[(p + 1, "B", k)][1] - 1e-12
+        # bwd after own fwd on the same stage
+        for p in range(1, d_p + 1):
+            assert ot[(p, "B", k)][0] >= ot[(p, "F", k)][1] - 1e-12
+    # token-level PP: slice i's bwd after slice i+1's bwd (same stage)
+    for p in range(1, d_p + 1):
+        assert ot[(p, "B", 0)][0] >= ot[(p, "B", 1)][1] - 1e-12
+        assert ot[(p, "B", 1)][0] >= ot[(p, "B", 2)][1] - 1e-12
+
+
+def test_simulator_bubble_sane():
+    _, _, _, res = _sim([1] * 32, d_p=4)
+    assert 0.0 <= res.bubble_ratio < 0.5  # many chunks => low bubble
+    _, _, _, few = _sim([1, 1], d_p=4)
+    assert few.bubble_ratio > res.bubble_ratio  # few chunks => more bubble
+
+
+def test_simulator_makespan_lower_bound():
+    cm, chunks, f2b, res = _sim([2, 1, 1, 1])
+    # makespan >= total per-stage work of any single stage
+    per_stage = sum(cm.t_tot(c, per_stage=True)
+                    + cm.t_tot(c, bwd=True, per_stage=True) for c in chunks)
+    assert res.makespan >= per_stage - 1e-9
+
+
+def test_recompute_increases_makespan():
+    layout = [2, 1, 1, 1]
+    n = sum(layout) if False else len(_mk_chunks(layout))
+    _, _, _, base = _sim(layout)
+    full = [[2] * n for _ in range(4)]
+    _, _, _, ck = _sim(layout, ckpt=full)
+    assert ck.makespan > base.makespan
+    assert ck.breakdown["recompute"] > 0
+
+
+def test_straggler_slows_pipeline():
+    m = ModelSpec(name="t", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4,
+                  head_dim=32, d_ff=1024, vocab=512)
+    cm = CostModel(m, ClusterSpec(d_p=4, d_s=4))
+    chunks = _mk_chunks([1] * 12)
+    f2b = backward_order(chunks)
+    base = PipelineSimulator(cm, chunks, f2b, 1).run()
+    slow_cm = cm.with_slowdowns([1.0, 1.0, 1.6, 1.0])
+    slow = PipelineSimulator(slow_cm, chunks, f2b, 1).run()
+    assert slow.makespan > base.makespan * 1.2
+
+
+def test_peak_memory_monotone_in_ckpt():
+    layout = [2, 1, 1, 1]
+    chunks = _mk_chunks(layout)
+    n = len(chunks)
+    _, _, _, no = _sim(layout)
+    _, _, _, full = _sim(layout, ckpt=[[2] * n for _ in range(4)])
+    assert max(full.per_stage_peak_mem) < max(no.per_stage_peak_mem)
