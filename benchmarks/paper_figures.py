@@ -248,3 +248,46 @@ def fig13_convergence(steps=8) -> List[Dict]:
                  "loss": "decreasing" if rows[-1]["loss"] < rows[0]["loss"]
                  else "NOT-DECREASING"})
     return rows
+
+
+def cache_bucket_reuse(steps=24, batch=48, ctx=49152, seed=0) -> List[Dict]:
+    """Plan-bucket reuse across a training run (§III: bucketed chunk
+    geometry => the compiled program is reused). Plans ``steps`` consecutive
+    batches, maps each through ``ExecutionPlan.bucket_key`` and a
+    :class:`~repro.runtime.compile_cache.CompileCache` with a stub builder —
+    the hit rate IS the fraction of steps that skip XLA compilation. Swept
+    over the capacity quantum: long-context batches fragment the bucket
+    space at fine quanta, so coarser quanta trade masked padding tokens for
+    executable reuse."""
+    from repro.runtime.compile_cache import CompileCache
+
+    cfg = llama_7b()
+    cm = _cm(cfg)
+    d_s = cm.cluster.d_s
+    quanta = (0, 4096, 16384)  # 0 => the d_s-rounded default
+    caches = {q: CompileCache(name=f"bench-bucket-reuse-q{q}")
+              for q in quanta}
+    slot_tokens = {q: 0 for q in quanta}
+    real_tokens = 0
+    rows = []
+    for step in range(steps):
+        lens = sample_lengths("github", batch, ctx, seed + step)
+        t0 = time.perf_counter()
+        plan = plan_batch(cm, lens, PlannerConfig())
+        real_tokens += plan.total_tokens
+        row = {"figure": "cache", "step": step,
+               "plan_s": round(time.perf_counter() - t0, 3)}
+        for q in quanta:
+            key = plan.bucket_key(d_s, cap_quantum=q)
+            caches[q].get(key, lambda k=key: k)  # stub build
+            slot_tokens[q] += key[0] * key[1]
+            row[f"bucket_q{q}"] = list(key)
+        rows.append(row)
+    for q in quanta:
+        stats = caches[q].stats.as_dict()
+        rows.append({"figure": "cache", "step": f"summary_q{q}",
+                     "cap_quantum": q, **stats,
+                     "distinct_buckets": len(caches[q]),
+                     "padded_token_frac": round(
+                         1 - real_tokens / max(1, slot_tokens[q]), 4)})
+    return rows

@@ -31,6 +31,8 @@ def main() -> None:
         "fig11_cost_model_accuracy": pf.fig11_cost_model_accuracy,
         "fig12_solver_scaling": pf.fig12_solver_scaling,
         "fig13_convergence": pf.fig13_convergence,
+        "cache_bucket_reuse": lambda: pf.cache_bucket_reuse(
+            steps=8 if args.quick else 24),
     }
     only = {x.strip() for x in args.only.split(",") if x.strip()}
 
@@ -64,6 +66,19 @@ def main() -> None:
         derived = f"unavailable({e!r})"
     print(f"roofline,{(time.perf_counter() - t0) * 1e6:.0f},{derived}")
 
+    # compile-cache statistics across every step built this process
+    t0 = time.perf_counter()
+    try:
+        from repro.launch.analysis import (compile_cache_report,
+                                           format_cache_report)
+        cache_stats = compile_cache_report()
+        derived = format_cache_report(cache_stats)
+    except Exception as e:  # noqa: BLE001
+        cache_stats = {"error": repr(e)}
+        derived = f"unavailable({e!r})"
+    print(f"compile_cache,{(time.perf_counter() - t0) * 1e6:.0f},{derived}")
+    all_rows["compile_cache"] = [cache_stats]
+
     print("\n=== full records ===")
     for name, rows in all_rows.items():
         for r in rows:
@@ -88,6 +103,12 @@ def _derived(name: str, rows) -> str:
         return f"overlapped={all(r['overlapped'] for r in rows)}"
     if name.startswith("fig13"):
         return str(rows[-1]["loss"])
+    if name.startswith("cache"):
+        summaries = [r for r in rows
+                     if str(r.get("step", "")).startswith("summary")]
+        return ";".join(f"q{s['cap_quantum']}:hit={s['hit_rate']:.2f}"
+                        f",pad={s['padded_token_frac']:.2f}"
+                        for s in summaries)
     return "ok"
 
 

@@ -419,6 +419,33 @@ class ExecutionPlan:
                     best = max(best, v)
         return best
 
+    def bucket_key(self, d_s: int, *, chunk_rounding: int = 8,
+                   cap_quantum: int = 0) -> Tuple[int, int, int, int]:
+        """The compiled-executable bucket this plan lands in:
+        ``(n_chunks, cap, ctx_cap, l_ckpt)``.
+
+        n_chunks rounds UP to a multiple of ``chunk_rounding`` (padding
+        chunks are fully masked — zero loss/grad), cap to the SP degree
+        ``d_s`` (token sharding), and ctx_cap to the capacity, so
+        consecutive iterations reuse one compiled executable
+        (runtime/compile_cache.py).
+
+        ``cap_quantum`` optionally coarsens the capacity grid beyond the
+        planner's bucket_rounding: long-context batches produce widely
+        varying chunk capacities, so a coarser quantum trades masked
+        padding tokens for executable reuse (benchmarks/run.py's
+        ``cache_bucket_reuse`` measures the curve).
+        """
+        chunks = [c for p in self.pipelines for c in p.chunks]
+        n = -(-len(chunks) // chunk_rounding) * chunk_rounding
+        # the quantum itself must respect d_s alignment or cap would break
+        # token sharding (cap_loc = cap // d_s)
+        q = -(-max(d_s, cap_quantum) // d_s) * d_s
+        cap = -(-self.chunk_capacity // q) * q
+        max_ctx = max((c.context for c in chunks), default=0)
+        ctx_cap = -(-(max_ctx + cap) // cap) * cap
+        return (n, cap, ctx_cap, self.uniform_ckpt())
+
     def to_json(self) -> Dict[str, Any]:
         return {
             "pipelines": [p.to_json() for p in self.pipelines],

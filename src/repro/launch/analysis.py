@@ -31,6 +31,21 @@ def collective_scan(hlo: str) -> dict:
     return out
 
 
+def compile_cache_report() -> dict:
+    """Process-wide compile-cache statistics (buckets compiled, hit rate,
+    compile seconds) in the shape the train-loop log and benchmarks/run.py
+    emit. Lazy import keeps this module jax-free at import time."""
+    from repro.runtime.compile_cache import global_cache_stats
+    return global_cache_stats()
+
+
+def format_cache_report(stats: dict) -> str:
+    """One-line human summary of :func:`compile_cache_report` output."""
+    return (f"buckets={stats['buckets_compiled']} hits={stats['hits']} "
+            f"hit_rate={stats['hit_rate']:.2%} "
+            f"compile_s={stats['compile_seconds']:.2f}")
+
+
 def analytic_collectives(cfg, geom, kind: str) -> dict:
     """Exact per-step collective volume (bytes moved per device) from the
     executor's own schedule — every collective in runtime/ is enumerated

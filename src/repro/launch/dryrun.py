@@ -42,6 +42,13 @@ def _cell_skip_reason(cfg, shape) -> str:
 
 
 from repro.launch.analysis import analytic_collectives, collective_scan
+from repro.runtime.compile_cache import CompileCache
+
+# one executable per geometry bucket across cells: identical buckets
+# (e.g. two shapes landing on the same plan geometry) compile once.
+# Bounded: compiled 256+-device programs are large, and cross-cell hits
+# are the exception — don't retain the whole sweep in host memory.
+_CELL_CACHE = CompileCache(name="dryrun-cell", capacity=2)
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
@@ -60,7 +67,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
                                           decode_state_struct,
                                           decode_step_fn,
                                           make_decode_geometry)
-    from repro.runtime.sharding import mesh_axis_names, shard_dim_tree
+    from repro.runtime.sharding import (mesh_axis_names, shard_dim_tree,
+                                        shard_map_compat)
     from repro.runtime.pipeline import pipeline_loss_fn
 
     cfg = get_arch(arch)
@@ -123,7 +131,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
                 if pod:
                     batch = jax.tree.map(lambda x: x[0], batch)
                 return fn(params, batch)
-            mapped = jax.shard_map(prefill, mesh=mesh,
+            mapped = shard_map_compat(prefill, mesh=mesh,
                                    in_specs=(pspecs, bspecs),
                                    out_specs=(P(None, model),
                                               _ctx_specs(cfg, geom,
@@ -157,7 +165,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
                             data_axis=data, model_axis=model)
         sspecs = decode_state_specs(cfg, geom, pod=pod, data=data,
                                     model=model)
-        mapped = jax.shard_map(fn, mesh=mesh,
+        mapped = shard_map_compat(fn, mesh=mesh,
                                in_specs=(pspecs, sspecs),
                                out_specs=(P(), sspecs),
                                check_vma=False)
@@ -166,7 +174,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             params_shape, sstruct)
 
     t_lower = time.perf_counter()
-    compiled = lowered.compile()
+    compiled = _CELL_CACHE.get(
+        (arch, shape.kind, geom, zero3_mode, rec["mesh"]), lowered.compile)
     t_compile = time.perf_counter()
 
     mem = compiled.memory_analysis()
@@ -190,6 +199,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
         "bytes_accessed": float(dict(cost).get("bytes accessed", 0.0)),
         "hlo_collectives_static": collective_scan(hlo),
         "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "compile_cache": _CELL_CACHE.stats.as_dict(),
     })
     kind = shape.kind
     gg = geom
@@ -216,7 +226,8 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
                                                make_encdec_geometry,
                                                prepare_encdec_params)
     from repro.runtime.sharding import (batch_specs, mesh_axis_names,
-                                        shard_dim_tree, stage_param_specs)
+                                        shard_dim_tree, shard_map_compat,
+                                        stage_param_specs)
     import time as _time
 
     pod, data, model = mesh_axis_names(mesh)
@@ -274,7 +285,7 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
                                            gnorm=jnp.float32(1.0))
             return new_p, new_o, loss / jnp.maximum(n, 1)
 
-        mapped = jax.shard_map(step, mesh=mesh,
+        mapped = shard_map_compat(step, mesh=mesh,
                                in_specs=(pspecs, ospecs, bspecs),
                                out_specs=(pspecs, ospecs, P()),
                                check_vma=False)
@@ -286,12 +297,14 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
             if pod:
                 batch = jax.tree.map(lambda x: x[0], batch)
             return fn(params, batch)
-        mapped = jax.shard_map(fwd, mesh=mesh, in_specs=(pspecs, bspecs),
+        mapped = shard_map_compat(fwd, mesh=mesh, in_specs=(pspecs, bspecs),
                                out_specs=(P(), P()), check_vma=False)
         lowered = jax.jit(mapped).lower(params_shape, bstruct)
 
     t_lower = _time.perf_counter()
-    compiled = lowered.compile()
+    compiled = _CELL_CACHE.get(
+        (rec["arch"], shape.kind, geom, "encdec", rec["mesh"]),
+        lowered.compile)
     t_compile = _time.perf_counter()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -310,6 +323,7 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
         "bytes_accessed": float(dict(cost).get("bytes accessed", 0.0)),
         "hlo_collectives_static": collective_scan(hlo),
         "n_devices": int(_np.prod(list(mesh.shape.values()))),
+        "compile_cache": _CELL_CACHE.stats.as_dict(),
         "analytic_collectives": analytic_collectives(cfg, geom, shape.kind),
         "geometry": {"n_chunks": geom.n_chunks, "cap": geom.cap,
                      "cap_enc": geom.cap_enc,
@@ -404,6 +418,7 @@ def main():
                      if rec["status"] == "ok" else
                      f" {rec.get('reason', rec.get('error', ''))[:200]}"),
                   flush=True)
+    print(f"[compile-cache] {_CELL_CACHE.stats.summary()}")
     sys.exit(1 if failures else 0)
 
 

@@ -29,12 +29,14 @@ def main():
     from jax.sharding import PartitionSpec as P
 
     from repro.configs import get_arch
-    from repro.runtime import TrainStepBuilder, make_geometry
+    from repro.runtime import CompileCache, TrainStepBuilder, make_geometry
+    from repro.runtime.compile_cache import decode_bucket_key
     from repro.runtime.serve_step import (decode_state_specs,
                                           decode_state_struct,
                                           decode_step_fn,
                                           make_decode_geometry)
-    from repro.runtime.sharding import mesh_axis_names, shard_dim_tree
+    from repro.runtime.sharding import (mesh_axis_names, shard_dim_tree,
+                                        shard_map_compat)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -50,11 +52,17 @@ def main():
     params, _, _ = builder.init_all(jax.random.PRNGKey(0))
     pspecs, _, _ = builder.specs(jax.eval_shape(lambda: params))
     shard_dims = shard_dim_tree(params["stages"], mesh.shape[model])
-    fn = decode_step_fn(cfg, geom, shard_dims, pod_axis=pod,
-                        data_axis=data, model_axis=model)
-    sspecs = decode_state_specs(cfg, geom, pod=pod, data=data, model=model)
-    step = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(pspecs, sspecs),
-                                 out_specs=(P(), sspecs), check_vma=False))
+    cache = CompileCache(name="decode-step", log=print)
+
+    def build_step():
+        fn = decode_step_fn(cfg, geom, shard_dims, pod_axis=pod,
+                            data_axis=data, model_axis=model)
+        sspecs = decode_state_specs(cfg, geom, pod=pod, data=data,
+                                    model=model)
+        return jax.jit(shard_map_compat(
+            fn, mesh=mesh, in_specs=(pspecs, sspecs),
+            out_specs=(P(), sspecs), check_vma=False))
+
     struct = decode_state_struct(cfg, geom, 1)
     rng = np.random.default_rng(0)
     state = {k: jnp.asarray(rng.normal(0, 0.3, v.shape).astype(
@@ -63,8 +71,12 @@ def main():
                            rng.normal(0, 0.3, v.shape))
         , dtype=v.dtype) for k, v in struct.items()}
     for i in range(args.decode_steps):
+        # per-step lookup, as a serving loop would do per request batch:
+        # the first step compiles the bucket, the rest hit the cache
+        step = cache.get(decode_bucket_key(geom), build_step)
         ids, state = step(params, state)
         print(f"decode step {i}: ids[0,:8] = {np.asarray(ids)[0, :8]}")
+    print(f"[compile-cache] {cache.stats.summary()}")
     print("serve OK")
 
 

@@ -19,7 +19,7 @@ import argparse
 import time
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
@@ -38,18 +38,6 @@ class TrainLoopConfig:
     compute_dtype: str = "bfloat16"
 
 
-def _bucket_key(plan, d_s: int) -> Tuple[int, int, int, int]:
-    """Bucket geometry: n_chunks rounds UP to a multiple of 8 (padding
-    chunks are fully masked) and ctx_cap to the capacity, so consecutive
-    iterations reuse one compiled executable."""
-    chunks = [c for p in plan.pipelines for c in p.chunks]
-    n = ((len(chunks) + 7) // 8) * 8
-    cap = ((plan.chunk_capacity + d_s - 1) // d_s) * d_s
-    max_ctx = max((c.context for c in chunks), default=0)
-    ctx_cap = ((max_ctx + cap + cap - 1) // cap) * cap
-    return (n, cap, ctx_cap, plan.uniform_ckpt())
-
-
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     import jax
     import jax.numpy as jnp
@@ -59,7 +47,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     from repro.data import materialize_plan, sample_corpus_batch
     from repro.ft import StragglerMonitor, replan_costmodel
     from repro.optim import init_opt_state
-    from repro.runtime import TrainStepBuilder, make_geometry
+    from repro.runtime import CompileCache, TrainStepBuilder, make_geometry
     from repro.runtime.sharding import mesh_axis_names
 
     pod, data, model = mesh_axis_names(mesh)
@@ -72,7 +60,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     monitor = StragglerMonitor(d_p=d_p)
     mgr = CheckpointManager(loop.ckpt_dir) if loop.ckpt_dir else None
 
-    step_cache: Dict[Tuple, Tuple] = {}
+    step_cache = CompileCache(name="train-step", log=log)
     params = opt = None
     start_step = 0
 
@@ -87,19 +75,17 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         return plan, corpus
 
     def get_step(plan):
-        nonlocal params, opt
-        key = _bucket_key(plan, d_s)
-        if key not in step_cache:
+        key = plan.bucket_key(d_s)
+
+        def build():
             n_chunks, cap, ctx_cap, l_ckpt = key
             geom = make_geometry(cfg_arch, mesh, n_chunks=n_chunks, cap=cap,
                                  ctx_cap=ctx_cap, l_ckpt=l_ckpt,
                                  compute_dtype=dtype)
             builder = TrainStepBuilder(cfg_arch, mesh, geom,
                                        param_dtype=dtype)
-            step_fn = builder.build()
-            step_cache[key] = (builder, step_fn)
-            log(f"[compile] bucket {key}")
-        return step_cache[key]
+            return builder, builder.build()
+        return step_cache.get(key, build)
 
     # --- bootstrap: plan step 0 to learn the first bucket ---
     plan, corpus = plan_for(0)
@@ -159,7 +145,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     for step in range(start_step, loop.steps):
         plan, corpus = next_plan, next_corpus
         builder, step_fn = get_step(plan)
-        n_chunks, cap = _bucket_key(plan, d_s)[:2]
+        n_chunks, cap = plan.bucket_key(d_s)[:2]
         batch = mat(plan, corpus, cap, n_chunks)
         t0 = time.perf_counter()
         params, opt, _err, metrics = step_fn(params, opt, None, batch)
@@ -177,6 +163,9 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
             mgr.save(step, (params, opt), extra={"step": step})
     if mgr:
         mgr.wait()
+    log(f"[compile-cache] {step_cache.stats.summary()}")
+    if history:
+        history[-1]["compile_cache"] = step_cache.stats.as_dict()
     return params, opt, history
 
 

@@ -1,5 +1,28 @@
-from .pipeline import PipelineGeometry, pipeline_loss_fn
-from .train_step import TrainStepBuilder, batch_struct, make_geometry, prepare_params
+"""Runtime package. The compile cache (and the StageProgram IR) are
+jax-free and import eagerly; everything that pulls in jax + the model
+stack resolves lazily so host-side callers (launch/analysis.py,
+benchmarks) can use the cache on installs without a device runtime."""
+
+from .compile_cache import CompileCache, global_cache_stats
+from .program import StageProgram, TickContext
 
 __all__ = ["PipelineGeometry", "pipeline_loss_fn", "TrainStepBuilder",
-           "batch_struct", "make_geometry", "prepare_params"]
+           "batch_struct", "make_geometry", "prepare_params",
+           "StageProgram", "TickContext", "CompileCache",
+           "global_cache_stats"]
+
+_LAZY = {
+    "PipelineGeometry": ".pipeline",
+    "pipeline_loss_fn": ".pipeline",
+    "TrainStepBuilder": ".train_step",
+    "batch_struct": ".train_step",
+    "make_geometry": ".train_step",
+    "prepare_params": ".train_step",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name], __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,153 @@
+"""First-class plan-bucket compile cache.
+
+The planner emits a fresh :class:`~repro.core.plan.ExecutionPlan` every
+step, but plans land in a small number of *buckets* — chunk-count rounded
+up, capacity rounded to the SP degree, context capacity rounded to the
+capacity (§III: "emit bucketed chunk geometry so the compiled program is
+reused"). One bucket = one compiled executable; this module owns the
+bucket-key -> executable mapping that used to live as private helpers in
+``launch/train.py``, and is reused by ``launch/serve.py`` and
+``launch/dryrun.py``.
+
+Deliberately jax-free: keys are plain tuples (from
+``ExecutionPlan.bucket_key()`` or :func:`decode_bucket_key`) and values are
+whatever the builder returns (a jit'd step, a (builder, step) pair, a
+compiled lowering). Hit/miss/eviction/compile-time statistics are kept per
+cache and aggregated process-wide (:func:`global_cache_stats`) so the
+train-loop log, ``launch/analysis.py`` and ``benchmarks/run.py`` can all
+surface them.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+__all__ = ["CacheStats", "CompileCache", "decode_bucket_key",
+           "global_cache_stats", "reset_global_caches"]
+
+# every live cache registers here so process-wide stats can be aggregated
+_REGISTRY: List["CompileCache"] = []
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    compile_seconds: float = 0.0
+    compile_seconds_per_key: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "buckets_compiled": self.misses,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": round(self.hit_rate, 4),
+            "compile_seconds": round(self.compile_seconds, 3),
+        }
+
+    def summary(self) -> str:
+        return (f"buckets={self.misses} hits={self.hits} "
+                f"hit_rate={self.hit_rate:.2%} "
+                f"evictions={self.evictions} "
+                f"compile_s={self.compile_seconds:.2f}")
+
+
+class CompileCache:
+    """LRU cache from bucket key -> compiled artifact, with stats.
+
+    ``capacity=None`` means unbounded (the train loop's default — bucket
+    geometry converges to a handful of keys). A bounded cache evicts the
+    least-recently-used executable, which XLA then garbage-collects with
+    the last reference.
+    """
+
+    def __init__(self, name: str = "default",
+                 capacity: Optional[int] = None,
+                 log: Optional[Callable[[str], None]] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.name = name
+        self.capacity = capacity
+        self.log = log
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        _REGISTRY.append(self)
+
+    # ------------------------------------------------------------------
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys(self) -> Tuple[Hashable, ...]:
+        return tuple(self._entries.keys())
+
+    # ------------------------------------------------------------------
+    def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached artifact for ``key``, building (and timing)
+        it on a miss."""
+        if key in self._entries:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        value = build()
+        dt = time.perf_counter() - t0
+        self.stats.compile_seconds += dt
+        self.stats.compile_seconds_per_key[repr(key)] = round(dt, 3)
+        self._entries[key] = value
+        if self.log:
+            self.log(f"[compile:{self.name}] bucket {key} ({dt:.2f}s)")
+        if self.capacity is not None:
+            while len(self._entries) > self.capacity:
+                evicted, _ = self._entries.popitem(last=False)
+                self.stats.evictions += 1
+                if self.log:
+                    self.log(f"[compile:{self.name}] evict {evicted}")
+        return value
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+def decode_bucket_key(geom) -> Tuple:
+    """Bucket key for a pipelined-decode executable: the static decode
+    geometry (one compiled program per (batch, cache-length) bucket)."""
+    return ("decode", geom.batch_per_pod, geom.cache_len, geom.d_p,
+            geom.d_s, geom.n_micro)
+
+
+def global_cache_stats() -> Dict[str, Any]:
+    """Aggregate stats over every cache created in this process, plus the
+    per-cache breakdown — the shape benchmarks/run.py emits as JSON."""
+    agg = CacheStats()
+    per_cache = {}
+    for c in _REGISTRY:
+        agg.hits += c.stats.hits
+        agg.misses += c.stats.misses
+        agg.evictions += c.stats.evictions
+        agg.compile_seconds += c.stats.compile_seconds
+        per_cache[c.name] = c.stats.as_dict()
+    out = agg.as_dict()
+    out["caches"] = per_cache
+    return out
+
+
+def reset_global_caches() -> None:
+    """Drop the registry (tests; a fresh train run in the same process)."""
+    _REGISTRY.clear()

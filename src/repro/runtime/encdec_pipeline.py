@@ -1,8 +1,9 @@
-"""Pipelined encoder-decoder executor (seamless-m4t backbone).
+"""Pipelined encoder-decoder executor (seamless-m4t backbone): a thin
+adapter over the shared stage-program executor (runtime/executor.py).
 
 Stage split: the first ``enc_stages = d_p * L_enc / (L_enc + L_dec)`` pipeline
 stages hold encoder layers; the rest hold decoder layers. A chunk's
-activation is the PAIR ``(h_enc, h_dec)``:
+streamed activation is the PAIR ``(h_enc, h_dec)``:
 
 * encoder stages advance ``h_enc`` over the (stub) frame embeddings —
   non-causal, packed (batched chunks only; splitting a bidirectional
@@ -34,9 +35,10 @@ from repro.models import EncDecLM, LayerCtx
 from repro.models.config import ArchConfig
 from repro.models.layers import rms_norm, swiglu_apply
 
-from . import sp
-from .pipeline import PipelineGeometry, gather_layer_params
-from .sharding import mesh_axis_names
+from . import executor, sp
+from .program import StageProgram
+from .sharding import (gather_layer_params, mesh_axis_names,
+                       stack_grouped_stages)
 
 __all__ = ["EncDecGeometry", "encdec_pipeline_loss_fn", "prepare_encdec_params",
            "encdec_batch_struct", "encdec_stage_split"]
@@ -83,32 +85,18 @@ def prepare_encdec_params(cfg: ArchConfig, raw: Dict, geom: EncDecGeometry,
                           param_dtype=jnp.bfloat16) -> Dict:
     """Stack enc+dec layers into one homogeneous [d_p, L_ps, ...] tree.
 
-    Encoder layers borrow the decoder layer structure (zero cross/ln_x).
+    Encoder layers borrow the decoder layer structure (zero cross/ln_x);
+    the grouped stage-stacking itself is runtime/sharding.py's.
     """
     s = cfg.spec
-    d_p, L_ps = geom.d_p, geom.layers_per_stage
+    L_ps = geom.layers_per_stage
     enc_st = geom.enc_stages
-    dec_st = d_p - enc_st
+    dec_st = geom.d_p - enc_st
     cast = lambda t: jax.tree.map(  # noqa: E731
         lambda x: x.astype(param_dtype), t)
     enc, dec = cast(raw["enc_layers"]), cast(raw["dec_layers"])
-    dec_tpl = jax.tree.map(lambda x: jnp.zeros_like(x[:1]), dec)
-
-    def pad_group(group, n_stages):
-        L = jax.tree.leaves(group)[0].shape[0]
-        pad = n_stages * L_ps - L
-
-        def _p(x, tpl):
-            if pad:
-                x = jnp.concatenate(
-                    [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
-            return x.reshape(n_stages, L_ps, *x.shape[1:])
-        return _p, pad
 
     # embed encoder layers into the decoder structure
-    def lift_enc(x_dec_tpl_leaf, path_val):
-        return None  # placeholder, built below
-
     enc_lifted = {}
     for k, v in dec.items():
         if k in enc:
@@ -118,12 +106,8 @@ def prepare_encdec_params(cfg: ArchConfig, raw: Dict, geom: EncDecGeometry,
                 lambda x: jnp.zeros((s.n_encoder_layers, *x.shape[1:]),
                                     x.dtype), dec[k])
 
-    _pe, _ = pad_group(enc_lifted, enc_st)
-    _pd, _ = pad_group(dec, dec_st)
-    enc_stacked = jax.tree.map(lambda x: _pe(x, None), enc_lifted)
-    dec_stacked = jax.tree.map(lambda x: _pd(x, None), dec)
-    stages = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
-                          enc_stacked, dec_stacked)
+    stages = stack_grouped_stages([(enc_lifted, enc_st), (dec, dec_st)],
+                                  L_ps)
     vocab_pad = (-s.vocab) % geom.d_s
     embed = cast(raw["embed"])
     if vocab_pad:
@@ -239,25 +223,24 @@ def encdec_pipeline_loss_fn(cfg: ArchConfig, geom: EncDecGeometry,
             jnp.zeros((L_ps, kcap, s.n_kv_heads, s.head_dim), dt),
             None, None)
 
-        def tick(carry, t):
-            h_enc, h_dec, ctx, loss_acc, n_acc = carry
-            idx = t - p_idx
-            valid = (idx >= 0) & (idx < n)
-            idxc = jnp.clip(idx, 0, n - 1)
+        def tick(tc, streams, ctx, acc):
+            h_enc, h_dec = streams
+            idxc = tc.idxc
             tokens = batch["tokens"][idxc]
-            seg = jnp.where(valid, batch["seg"][idxc], -1)
+            seg = jnp.where(tc.valid, batch["seg"][idxc], -1)
             pos = batch["pos"][idxc]
             tgt = batch["targets"][idxc]
-            ctx_len = jnp.where(valid, batch["ctx_len"][idxc], 0)
-            seg_e = jnp.where(valid, batch["seg_enc"][idxc], -1)
+            ctx_len = jnp.where(tc.valid, batch["ctx_len"][idxc], 0)
+            seg_e = jnp.where(tc.valid, batch["seg_enc"][idxc], -1)
             pos_e = batch["pos_enc"][idxc]
 
-            h_enc = jnp.where(p_idx == 0, batch["frames"][idxc], h_enc)
+            h_enc = jnp.where(tc.is_first_stage, batch["frames"][idxc],
+                              h_enc)
             x_emb = sp.sharded_embed(params["embed"], tokens, model_axis, dt)
-            h_dec = jnp.where(p_idx == enc_st, x_emb, h_dec)
+            h_dec = jnp.where(tc.p_idx == enc_st, x_emb, h_dec)
             # the first decoder stage receives the FINISHED encoder output;
             # normalize it once there
-            h_enc = jnp.where(p_idx == enc_st,
+            h_enc = jnp.where(tc.p_idx == enc_st,
                               rms_norm(h_enc, en_gamma, cfg.rms_eps), h_enc)
 
             def layer_body(carry2, per_layer):
@@ -293,28 +276,22 @@ def encdec_pipeline_loss_fn(cfg: ArchConfig, geom: EncDecGeometry,
                     jnp.where(act & (~is_enc), nv, lctx.v), None, None)
                 return (he_out, hd_out), new_ctx
 
-            (h_enc2, h_dec2), new_ctx = jax.lax.scan(
-                layer_body, (h_enc, h_dec), (stage_params, active, ctx))
+            (h_enc2, h_dec2), new_ctx = executor.run_stage_layers(
+                layer_body, (h_enc, h_dec), (stage_params, active, ctx),
+                l_ckpt=geom.l_ckpt, n_layers=L_ps)
 
             h_last = rms_norm(h_dec2, fn_gamma, cfg.rms_eps)
-            ce_valid = (seg >= 0) & (tgt >= 0) & valid & (p_idx == d_p - 1)
-            l_sum, n_val = sp.sharded_ce(h_last, head_w,
-                                         jnp.maximum(tgt, 0), ce_valid,
-                                         model_axis, vocab_true=s.vocab)
-            loss_acc = loss_acc + l_sum
-            n_acc = n_acc + n_val
-            perm = [(i, i + 1) for i in range(d_p - 1)]
-            h_enc_s = jax.lax.ppermute(h_enc2, data_axis, perm)
-            h_dec_s = jax.lax.ppermute(h_dec2, data_axis, perm)
-            return (h_enc_s, h_dec_s, new_ctx, loss_acc, n_acc), None
+            acc = executor.fold_streaming_ce(
+                tc, h_last, head_w, tgt, seg, acc,
+                model_axis=model_axis, vocab_true=s.vocab)
+            return (h_enc2, h_dec2), new_ctx, acc
 
         he0 = jnp.zeros((cape_loc, s.d_model), dt)
         hd0 = jnp.zeros((cap_loc, s.d_model), dt)
-        init = (he0, hd0, ctx0, jnp.float32(0), jnp.float32(0))
-        (he, hd, ctxf, loss, n_val), _ = jax.lax.scan(
-            tick, init, jnp.arange(n + d_p - 1))
-        loss = jax.lax.psum(loss, data_axis)
-        n_val = jax.lax.psum(n_val, data_axis)
+        program = StageProgram(n_items=n, d_p=d_p, data_axis=data_axis,
+                               tick=tick, psum_acc=True)
+        _, ctxf, (loss, n_val) = executor.run_stage_program(
+            program, (he0, hd0), ctx0, (jnp.float32(0), jnp.float32(0)))
         return loss, n_val
 
     return loss_local

@@ -1,0 +1,150 @@
+"""The shared stage-program executor core.
+
+One engine runs every scanned 1F1B pipeline in the repo. Backends
+(`runtime/pipeline.py`, `runtime/encdec_pipeline.py`,
+`runtime/serve_step.py`) are thin adapters that build a
+:class:`~repro.runtime.program.StageProgram` with a backend-specific
+``tick`` hook; everything schedule-shaped lives here:
+
+* :func:`run_stage_program` — the ``lax.scan`` tick loop over
+  ``n_items + d_p - 1`` ticks and the left-neighbor ``ppermute`` stage
+  hand-off (backward = the autodiff transpose: reverse tick order,
+  reversed ppermute, context-carry cotangents — the paper's dKV
+  dependency, Eq. 5);
+* :func:`run_stage_layers` — remat-split per-stage layer execution: the
+  solver-chosen leading ``l_ckpt`` layers run under ``jax.checkpoint``
+  (layer-granular recomputation, Eq. 9-11), the rest keep activations;
+* :func:`reset_ssm_at_boundary` — the split-chunk context-carry rule: a
+  chunk with ``ctx_len == 0`` starts a new sequence, so SSM state resets
+  (KV buffers reset implicitly by overwriting from offset 0);
+* :func:`fold_streaming_ce` / :func:`fold_greedy_ids` — last-stage output
+  folding into the scan accumulator (streaming vocab-parallel CE for
+  training; greedy next-token ids for prefill/decode).
+
+Bubble ticks compute on garbage (seg = -1 masks attention and loss): the
+lockstep-SPMD analogue of pipeline bubbles. They inflate compiled HLO FLOPs
+by (n + d_p - 1)/n — the roofline's MODEL_FLOPS ratio surfaces this.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sp
+from .program import StageProgram, TickContext
+
+__all__ = ["run_stage_program", "run_stage_layers", "ppermute_streams",
+           "reset_ssm_at_boundary", "fold_streaming_ce", "fold_greedy_ids"]
+
+
+def ppermute_streams(streams, data_axis: str, d_p: int):
+    """Left-neighbor hand-off: every stream leaf moves stage p -> p + 1."""
+    if d_p <= 1:
+        return streams
+    perm = [(i, i + 1) for i in range(d_p - 1)]
+    return jax.tree.map(
+        lambda x: jax.lax.ppermute(x, data_axis, perm), streams)
+
+
+def run_stage_program(program: StageProgram, init_streams, init_state,
+                      init_acc) -> Tuple[Any, Any, Any]:
+    """Run one stage program: the scanned tick loop all backends share.
+
+    Returns the final ``(streams, state, acc)``; ``acc`` is psummed over
+    the pipeline axis when ``program.psum_acc`` (only the last stage folds
+    real output, the rest contribute zeros / stale rows).
+    """
+    n, d_p = program.n_items, program.d_p
+
+    def _tick(carry, t):
+        streams, state, acc = carry
+        p_idx = jax.lax.axis_index(program.data_axis)
+        idx = t - p_idx
+        valid = (idx >= 0) & (idx < n)
+        idxc = jnp.clip(idx, 0, n - 1)
+        tc = TickContext(t=t, idx=idx, idxc=idxc, valid=valid, p_idx=p_idx,
+                         n_items=n, d_p=d_p)
+        streams, state, acc = program.tick(tc, streams, state, acc)
+        streams = ppermute_streams(streams, program.data_axis, d_p)
+        return (streams, state, acc), None
+
+    (streams, state, acc), _ = jax.lax.scan(
+        _tick, (init_streams, init_state, init_acc),
+        jnp.arange(program.n_ticks))
+    if program.psum_acc:
+        acc = jax.tree.map(
+            lambda a: jax.lax.psum(a, program.data_axis), acc)
+    return streams, state, acc
+
+
+def run_stage_layers(layer_body: Callable, carry, xs, *, l_ckpt: int,
+                     n_layers: int):
+    """Scan one stage's layers with the solver's remat split.
+
+    ``layer_body(carry, per_layer) -> (carry, y)`` advances the chunk
+    activation(s) through one layer; ``xs`` is any pytree whose leaves have
+    leading dim ``n_layers`` (stacked layer params, per-layer context
+    slices, masks). The first ``l_ckpt`` layers recompute in backward —
+    only their input + un-freeable KV persist (Eq. 9) — the rest keep
+    activations. Returns ``(carry, ys)`` with the two partial scans' ys
+    concatenated back to leading dim ``n_layers`` (None leaves pass
+    through).
+    """
+    l_ck = max(0, min(l_ckpt, n_layers))
+
+    def split(a, b):
+        return jax.tree.map(lambda t: t[a:b], xs)
+
+    ys_parts = []
+    if l_ck > 0:
+        body_ck = jax.checkpoint(layer_body, prevent_cse=False)
+        carry, ys = jax.lax.scan(body_ck, carry, split(0, l_ck))
+        ys_parts.append(ys)
+    if l_ck < n_layers:
+        carry, ys = jax.lax.scan(layer_body, carry, split(l_ck, n_layers))
+        ys_parts.append(ys)
+    if len(ys_parts) == 2:
+        ys = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0) if a is not None
+            else None, ys_parts[0], ys_parts[1],
+            is_leaf=lambda t: t is None)
+    else:
+        ys = ys_parts[0]
+    return carry, ys
+
+
+def reset_ssm_at_boundary(ctx, ctx_len):
+    """SSM state resets at sequence starts (``ctx_len == 0``); KV buffers
+    reset implicitly by appending from offset 0."""
+    if getattr(ctx, "ssm_h", None) is None:
+        return ctx
+    return ctx._replace(ssm_h=jnp.where(ctx_len == 0, 0.0, ctx.ssm_h))
+
+
+def fold_streaming_ce(tc: TickContext, h_last, head_w, tgt, seg, acc, *,
+                      model_axis: str, vocab_true: int):
+    """Fold one chunk into the streaming vocab-parallel CE accumulator.
+
+    Only the last stage on a valid tick contributes; bubbles and earlier
+    stages fold a fully-masked chunk (exactly zero loss and zero grad).
+    ``acc`` is ``(loss_sum, n_valid)``.
+    """
+    ce_valid = (seg >= 0) & (tgt >= 0) & tc.valid & tc.is_last_stage
+    l_sum, n_val = sp.sharded_ce(h_last, head_w, jnp.maximum(tgt, 0),
+                                 ce_valid, model_axis,
+                                 vocab_true=vocab_true)
+    return acc[0] + l_sum, acc[1] + n_val
+
+
+def fold_greedy_ids(tc: TickContext, h_last, head_w, ids_acc, *,
+                    model_axis: str, vocab_true: int):
+    """Fold one item's greedy next-token ids into ``ids_acc`` at row
+    ``tc.idxc`` (prefill and pipelined decode share this)."""
+    ids = sp.sharded_greedy(h_last, head_w, model_axis,
+                            vocab_true=vocab_true)
+    sel = tc.valid & tc.is_last_stage
+    new_ids = jnp.where(sel, ids, ids_acc[tc.idxc])
+    return ids_acc.at[tc.idxc].set(new_ids)

@@ -1,34 +1,25 @@
-"""The EPP pipeline executor: a statically-scheduled, scanned 1F1B pipeline
-expressed in XLA SPMD (DESIGN.md §2.1.1).
+"""Decoder-only EPP pipeline: a thin adapter over the shared stage-program
+executor (DESIGN.md §2.1.1, runtime/executor.py).
 
 Runs INSIDE ``shard_map`` over ("pod",) "data", "model":
 
 * the "data" axis carries pipeline stages; stage p's layer parameters are
   the local shard of the stage-stacked tree;
-* forward is a ``lax.scan`` over ``n_chunks + d_p - 1`` ticks. Each tick a
-  stage (1) takes the embedded chunk (stage 0) or the ppermute'd activation
-  from its left neighbor, (2) runs its layers — with the solver-chosen
-  number of leading layers under ``jax.checkpoint`` (Eq. 9-11's layer-
-  granular remat), (3) the last stage folds the chunk into the streaming
-  vocab-parallel CE;
-* the split-chunk context (KV buffers per the SP policy's layout + SSM
-  state) is scan *carry* per stage, appended at offset ``ctx_len[k]``; a
-  chunk with ctx_len == 0 implicitly resets the buffers (overwrite from 0)
-  and the SSM state (explicit ``where``);
+* the tick loop, ppermute hand-off, remat split and streaming-CE folding
+  are the executor core's; this module supplies the decoder-only hooks:
+  embed injection at stage 0, per-layer ZeRO-3 gather + ``layer_apply``,
+  and the split-chunk KV/SSM context carry appended at offset
+  ``ctx_len[k]`` (a chunk with ctx_len == 0 implicitly resets the buffers
+  and — explicitly — the SSM state);
 * backward = the autodiff transpose of the scan: reverse tick order,
   reversed ppermute, and the context-carry cotangent reproduces the paper's
   dKV dependency (Eq. 5) exactly.
-
-Bubble ticks compute on garbage (seg = -1 masks attention and loss): the
-lockstep-SPMD analogue of pipeline bubbles. They inflate compiled HLO FLOPs
-by (n + d_p - 1)/n — the roofline's MODEL_FLOPS ratio surfaces this.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +28,12 @@ from repro.models import DecoderLM, LayerCtx
 from repro.models.config import ArchConfig
 from repro.models.layers import rms_norm
 
-from . import sp
-from .sharding import EP_PATH_RE, tree_paths_map
+from . import executor, sp
+from .program import StageProgram
+from .sharding import gather_layer_params, gather_stage_params
 
 __all__ = ["PipelineGeometry", "pipeline_loss_fn", "gather_layer_params",
-           "init_stage_ctx"]
+           "gather_stage_params", "init_stage_ctx"]
 
 
 @dataclass(frozen=True)
@@ -62,45 +54,6 @@ class PipelineGeometry:
     # resident (ZeRO-2-like compute path, ZeRO-3 storage) — the first
     # beyond-paper optimization, see EXPERIMENTS.md §Perf.
     zero3_mode: str = "per_tick"
-
-
-def gather_layer_params(lp, shard_dims, axis: str):
-    """ZeRO-3: materialize one layer's full parameters from "model" shards.
-
-    ``shard_dims`` is the precomputed tree of gather dims (full-shape
-    coordinates, including the [d_p, L_s] prefix — hence the -2). EP leaves
-    carry a marker dim but stay sharded (expert parallelism), which
-    ``sharding.EP_PATH_RE`` expresses by pointing at the expert dim; the
-    path check below skips them.
-    """
-    def _g(path, leaf):
-        if EP_PATH_RE.search(path):
-            return leaf
-        zd = _lookup(shard_dims, path)
-        if zd is None:
-            return leaf
-        return jax.lax.all_gather(leaf, axis, axis=zd - 2, tiled=True)
-    return tree_paths_map(_g, lp)
-
-
-def _lookup(tree, path: str):
-    node = tree
-    for key in path.split("/"):
-        node = node[key]
-    return node
-
-
-def gather_stage_params(stage_params, shard_dims, axis: str):
-    """ZeRO-3 'per_step' mode: gather the whole stage's stacked [L_s, ...]
-    tree once; leaves keep their L_s dim so the gather axis is zd - 1."""
-    def _g(path, leaf):
-        if EP_PATH_RE.search(path):
-            return leaf
-        zd = _lookup(shard_dims, path)
-        if zd is None:
-            return leaf
-        return jax.lax.all_gather(leaf, axis, axis=zd - 1, tiled=True)
-    return tree_paths_map(_g, stage_params)
 
 
 def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
@@ -153,10 +106,9 @@ def _make_model(cfg: ArchConfig, geom: PipelineGeometry,
 def _run_stage_layers(model: DecoderLM, geom: PipelineGeometry,
                       stage_params, shard_dims, x, ctx: LayerCtx, *,
                       seg, pos, ctx_len, windows, active, model_axis: str):
-    """Scan this stage's layers with the solver's remat split: the first
-    ``l_ckpt`` layers recompute in backward (only their input + un-freeable
-    KV persist — Eq. 9), the rest keep activations. ``active`` masks padded
-    layer slots (non-divisible depths) into identity."""
+    """This backend's layer body under the executor's remat split:
+    ZeRO-3 gather (per-tick mode), ``layer_apply`` with the context carry,
+    and ``active`` masking padded layer slots into identity."""
 
     def layer_body(x, per_layer):
         lp, w, act, lctx = per_layer
@@ -171,34 +123,9 @@ def _run_stage_layers(model: DecoderLM, geom: PipelineGeometry,
             else None, new_ctx, lctx, is_leaf=lambda t: t is None)
         return x_out, new_ctx
 
-    L_s = geom.layers_per_stage
-    l_ck = max(0, min(geom.l_ckpt, L_s))
-
-    def split(tree, a, b):
-        return jax.tree.map(lambda t: t[a:b], tree)
-
-    ctx_parts = []
-    if l_ck > 0:
-        body_ck = jax.checkpoint(layer_body, prevent_cse=False)
-        x, ctx_a = jax.lax.scan(
-            body_ck, x, (split(stage_params, 0, l_ck),
-                         windows[:l_ck], active[:l_ck],
-                         split(ctx, 0, l_ck)))
-        ctx_parts.append(ctx_a)
-    if l_ck < L_s:
-        x, ctx_b = jax.lax.scan(
-            layer_body, x, (split(stage_params, l_ck, L_s),
-                            windows[l_ck:], active[l_ck:],
-                            split(ctx, l_ck, L_s)))
-        ctx_parts.append(ctx_b)
-    if len(ctx_parts) == 2:
-        new_ctx = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0) if a is not None
-            else None, ctx_parts[0], ctx_parts[1],
-            is_leaf=lambda t: t is None)
-    else:
-        new_ctx = ctx_parts[0]
-    return x, new_ctx
+    return executor.run_stage_layers(
+        layer_body, x, (stage_params, windows, active, ctx),
+        l_ckpt=geom.l_ckpt, n_layers=geom.layers_per_stage)
 
 
 def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
@@ -258,27 +185,19 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
         ctx0 = init_stage_ctx(cfg, geom)
         x0 = jnp.zeros((cap_loc, s.d_model), dt)
 
-        def tick(carry, t):
-            x_recv, ctx, acc0_c, acc1_c = carry
-            loss_acc = (acc0_c, acc1_c)
-            idx = t - p_idx
-            valid = (idx >= 0) & (idx < n)
-            idxc = jnp.clip(idx, 0, n - 1)
-            tokens = tokens_a[idxc]
-            seg = jnp.where(valid, seg_a[idxc], -1)
-            pos = pos_a[idxc]
-            tgt = targets_a[idxc]
-            ctx_len = jnp.where(valid, ctxlen_a[idxc], 0)
+        def tick(tc, x_recv, ctx, acc):
+            tokens = tokens_a[tc.idxc]
+            seg = jnp.where(tc.valid, seg_a[tc.idxc], -1)
+            pos = pos_a[tc.idxc]
+            tgt = targets_a[tc.idxc]
+            ctx_len = jnp.where(tc.valid, ctxlen_a[tc.idxc], 0)
 
             x_emb = sp.sharded_embed(params["embed"], tokens, model_axis, dt)
             if cfg.embed_scale:
                 x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
-            x_in = jnp.where(p_idx == 0, x_emb, x_recv)
+            x_in = jnp.where(tc.is_first_stage, x_emb, x_recv)
 
-            # SSM state resets at sequence starts (ctx_len == 0)
-            if ctx.ssm_h is not None:
-                hh = jnp.where(ctx_len == 0, 0.0, ctx.ssm_h)
-                ctx = ctx._replace(ssm_h=hh)
+            ctx = executor.reset_ssm_at_boundary(ctx, ctx_len)
 
             x_out, ctx = _run_stage_layers(
                 model, geom, stage_params, shard_dims, x_in, ctx,
@@ -287,42 +206,30 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
 
             h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
             if mode == "train":
-                ce_valid = (seg >= 0) & (tgt >= 0) & valid \
-                    & (p_idx == d_p - 1)
-                l_sum, n_val = sp.sharded_ce(h_last, head_w,
-                                             jnp.maximum(tgt, 0), ce_valid,
-                                             model_axis, vocab_true=s.vocab)
-                out_acc = (loss_acc[0] + l_sum, loss_acc[1] + n_val)
+                acc = executor.fold_streaming_ce(
+                    tc, h_last, head_w, tgt, seg, acc,
+                    model_axis=model_axis, vocab_true=s.vocab)
             else:
                 # prefill: greedy next-token ids per position (the KV fills
                 # the context carry — it IS the prefill cache)
-                ids = sp.sharded_greedy(h_last, head_w, model_axis,
-                                        vocab_true=s.vocab)
-                sel = valid & (p_idx == d_p - 1)
-                new_ids = jnp.where(sel, ids, loss_acc[0][idxc])
-                out_acc = (loss_acc[0].at[idxc].set(new_ids), loss_acc[1])
-
-            if d_p > 1:
-                x_send = jax.lax.ppermute(
-                    x_out, data_axis,
-                    [(i, i + 1) for i in range(d_p - 1)])
-            else:
-                x_send = x_out
-            return (x_send, ctx, out_acc[0], out_acc[1]), None
+                ids = executor.fold_greedy_ids(
+                    tc, h_last, head_w, acc[0],
+                    model_axis=model_axis, vocab_true=s.vocab)
+                acc = (ids, acc[1])
+            return x_out, ctx, acc
 
         if mode == "train":
             acc0: Tuple = (jnp.float32(0), jnp.float32(0))
         else:
             acc0 = (jnp.zeros((n, cap_loc), jnp.int32), jnp.float32(0))
-        init = (x0, ctx0, acc0[0], acc0[1])
-        (xf, ctxf, a0, a1), _ = jax.lax.scan(
-            tick, init, jnp.arange(n + d_p - 1))
+        program = StageProgram(n_items=n, d_p=d_p, data_axis=data_axis,
+                               tick=tick, psum_acc=(mode == "train"))
+        xf, ctxf, acc = executor.run_stage_program(program, x0, ctx0, acc0)
         if mode == "train":
-            # only the last stage accumulated loss; broadcast-sum over stages
-            loss = jax.lax.psum(a0, data_axis)
-            n_val = jax.lax.psum(a1, data_axis)
+            # only the last stage accumulated loss; psum'd by the executor
+            loss, n_val = acc
             return loss, n_val
-        ids = jax.lax.psum(a0, data_axis)  # only last stage nonzero... see note
+        ids = jax.lax.psum(acc[0], data_axis)  # only last stage nonzero
         return ids, ctxf
 
     return loss_local

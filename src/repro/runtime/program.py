@@ -1,0 +1,80 @@
+"""StageProgram IR: the backend-independent description of one scanned
+1F1B stage program.
+
+Every EPP executable in this repo — decoder-only training/prefill
+(``runtime/pipeline.py``), pipelined encoder-decoder training
+(``runtime/encdec_pipeline.py``) and pipelined decode
+(``runtime/serve_step.py``) — is the *same* machine: a ``lax.scan`` over
+``n_items + d_p - 1`` ticks in which every pipeline stage
+
+  1. selects its work item for this tick (``idx = t - p_idx``; out-of-range
+     ticks are bubbles computing on masked garbage),
+  2. runs its stage body (inject first-stage input, advance the per-stage
+     state — KV/SSM context carry or decode cache),
+  3. folds the last stage's output into an accumulator (streaming CE,
+     greedy ids), and
+  4. hands its streamed activations to the right neighbor via a
+     left-to-right ``ppermute``.
+
+``StageProgram`` captures exactly that decomposition; the engine that runs
+it lives in ``runtime/executor.py``. Backends differ only in their ``tick``
+hook — which streams flow between stages (one hidden state; an
+(h_enc, h_dec) pair), what the per-stage state is, and what gets folded.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+__all__ = ["TickContext", "StageProgram"]
+
+
+@dataclass(frozen=True)
+class TickContext:
+    """Per-tick coordinates handed to the backend's ``tick`` hook.
+
+    ``t``/``idx``/``idxc``/``valid``/``p_idx`` are traced scalars inside the
+    scan; ``n_items``/``d_p`` are the static geometry they derive from.
+    """
+
+    t: Any            # global tick index in [0, n_items + d_p - 1)
+    idx: Any          # this stage's item index: t - p_idx (may be out of range)
+    idxc: Any         # idx clipped to [0, n_items) — safe to gather with
+    valid: Any        # bool: idx in range (False => bubble tick)
+    p_idx: Any        # this stage's index along the pipeline ("data") axis
+    n_items: int      # chunks (train/prefill) or microbatches (decode)
+    d_p: int          # pipeline depth
+
+    @property
+    def is_first_stage(self):
+        return self.p_idx == 0
+
+    @property
+    def is_last_stage(self):
+        return self.p_idx == self.d_p - 1
+
+
+@dataclass(frozen=True)
+class StageProgram:
+    """One compiled stage program (a plan bucket's executable schedule).
+
+    tick(tc, streams, state, acc) -> (streams, state, acc)
+      * ``streams``: the pytree that rides the stage-to-stage ppermute
+        (hidden state(s) of the chunk in flight). The engine permutes every
+        leaf left-to-right after the hook returns.
+      * ``state``: per-stage resident state that does NOT move between
+        stages (split-chunk KV/SSM context carry, decode caches).
+      * ``acc``: the output accumulator (streaming-CE partial sums, decoded
+        ids). Psummed over the pipeline axis at the end when ``psum_acc``.
+    """
+
+    n_items: int
+    d_p: int
+    data_axis: str
+    tick: Callable[..., Any]
+    psum_acc: bool = True
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_items + self.d_p - 1

@@ -36,9 +36,9 @@ from repro.models.layers import rms_norm, swiglu_apply
 from repro.models.moe import moe_apply_dense
 from repro.models.ssm import dt_rank_of
 
-from . import sp
-from .pipeline import gather_layer_params
-from .sharding import mesh_axis_names, shard_dim_tree
+from . import executor, sp
+from .program import StageProgram
+from .sharding import gather_layer_params, mesh_axis_names, shard_dim_tree
 from .train_step import param_pspecs, prepare_params
 
 __all__ = ["DecodeGeometry", "decode_step_fn", "decode_state_struct",
@@ -316,16 +316,14 @@ def decode_step_fn(cfg: ArchConfig, geom: DecodeGeometry, shard_dims, *,
         ssm_h = sq("ssm_h")          # [nm, L_s, bm, di_loc, ds]
         conv_tail = sq("conv_tail")
 
-        def tick(carry, t):
-            x_recv, ck, cv, hh, tl, out_ids = carry
-            idx = t - p_idx
-            valid = (idx >= 0) & (idx < nm)
-            idxc = jnp.clip(idx, 0, nm - 1)
+        def tick(tc, x_recv, state, out_ids):
+            ck, cv, hh, tl = state
+            idxc, valid = tc.idxc, tc.valid
             tok = tokens[idxc]
             x_emb = sp.sharded_embed(params["embed"], tok, model_axis, dt)
             if cfg.embed_scale:
                 x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
-            x = jnp.where(p_idx == 0, x_emb, x_recv)
+            x = jnp.where(tc.is_first_stage, x_emb, x_recv)
 
             new_ck, new_cv = ck, cv
             new_hh, new_tl = hh, tl
@@ -373,24 +371,17 @@ def decode_step_fn(cfg: ArchConfig, geom: DecodeGeometry, shard_dims, *,
                 ck, cv, hh, tl = new_ck, new_cv, new_hh, new_tl
 
             h_last = rms_norm(x, fn_gamma, cfg.rms_eps)
-            ids = sp.sharded_greedy(h_last, head_w, model_axis,
-                                    vocab_true=s.vocab)
-            sel = valid & (p_idx == d_p - 1)
-            out_ids = out_ids.at[idxc].set(
-                jnp.where(sel, ids, out_ids[idxc]))
-            if d_p > 1:
-                x_send = jax.lax.ppermute(
-                    x, data_axis, [(i, i + 1) for i in range(d_p - 1)])
-            else:
-                x_send = x
-            return (x_send, ck, cv, hh, tl, out_ids), None
+            out_ids = executor.fold_greedy_ids(
+                tc, h_last, head_w, out_ids,
+                model_axis=model_axis, vocab_true=s.vocab)
+            return x, (ck, cv, hh, tl), out_ids
 
         x0 = jnp.zeros((bm, s.d_model), dt)
         ids0 = jnp.zeros((nm, bm), jnp.int32)
-        carry0 = (x0, cache_k, cache_v, ssm_h, conv_tail, ids0)
-        (xf, ck, cv, hh, tl, out_ids), _ = jax.lax.scan(
-            tick, carry0, jnp.arange(nm + d_p - 1))
-        out_ids = jax.lax.psum(out_ids, data_axis)
+        program = StageProgram(n_items=nm, d_p=d_p, data_axis=data_axis,
+                               tick=tick, psum_acc=True)
+        xf, (ck, cv, hh, tl), out_ids = executor.run_stage_program(
+            program, x0, (cache_k, cache_v, ssm_h, conv_tail), ids0)
 
         new_state = dict(state)
         new_state["tokens"] = out_ids.reshape(state["tokens"].shape)

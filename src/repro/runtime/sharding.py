@@ -25,10 +25,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["EP_PATH_RE", "stack_stages", "stage_active_mask",
+__all__ = ["EP_PATH_RE", "stack_stages", "stack_grouped_stages",
+           "stage_active_mask",
            "unstack_stages", "zero3_dim", "shard_dim_tree",
            "stage_param_specs", "head_param_specs", "batch_specs",
-           "tree_paths_map", "mesh_axis_names"]
+           "tree_paths_map", "mesh_axis_names", "shard_map_compat",
+           "gather_layer_params", "gather_stage_params", "gather_params"]
 
 # expert-parallel leaves: sharded on their expert dim, never ZeRO-gathered
 EP_PATH_RE = re.compile(r"moe/(w_gate|w_up|w_down)$")
@@ -44,6 +46,19 @@ def mesh_axis_names(mesh: Mesh) -> Tuple[Optional[str], str, str]:
     raise ValueError(f"expected 2 or 3 mesh axes, got {names}")
 
 
+def shard_map_compat(f, *, mesh: Mesh, in_specs, out_specs,
+                     check_vma: bool = False):
+    """``jax.shard_map`` across jax versions: new releases expose it at the
+    top level (``check_vma``); older ones only under ``jax.experimental``
+    (same knob named ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
 def tree_paths_map(fn, tree):
     """tree_map with a '/'-joined key path passed first."""
     def _name(k) -> str:
@@ -57,6 +72,17 @@ def tree_paths_map(fn, tree):
         lambda path, leaf: fn("/".join(_name(k) for k in path), leaf), tree)
 
 
+def _stack_one(layers_tree, n_stages: int, L_ps: int):
+    """[L, ...] leaves -> [n_stages, L_ps, ...], zero-padded layer slots."""
+    def _re(x):
+        pad = n_stages * L_ps - x.shape[0]
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+        return x.reshape(n_stages, L_ps, *x.shape[1:])
+    return jax.tree.map(_re, layers_tree)
+
+
 def stack_stages(layers_tree, d_p: int, n_layers: int):
     """[L, ...] leaves -> [d_p, ceil(L/d_p), ...], zero-padded.
 
@@ -65,15 +91,25 @@ def stack_stages(layers_tree, d_p: int, n_layers: int):
     padded layers into identity (the compute waste is real and surfaces in
     the roofline's MODEL_FLOPS ratio — DESIGN.md §2.1).
     """
-    L_ps = -(-n_layers // d_p)
+    return _stack_one(layers_tree, d_p, -(-n_layers // d_p))
 
-    def _re(x):
-        pad = d_p * L_ps - x.shape[0]
-        if pad:
-            x = jnp.concatenate(
-                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
-        return x.reshape(d_p, L_ps, *x.shape[1:])
-    return jax.tree.map(_re, layers_tree)
+
+def stack_grouped_stages(groups, L_ps: int):
+    """Stack several homogeneous layer groups into one stage-stacked tree.
+
+    ``groups`` is a list of ``(layers_tree, n_stages)``: each tree's
+    ``[L, ...]`` leaves pad to ``n_stages * L_ps`` inert slots and reshape
+    to ``[n_stages, L_ps, ...]``; the groups then concatenate along the
+    stage dim (used by the enc-dec pipeline, whose encoder stages precede
+    the decoder stages in one uniform pytree)."""
+    stacked = [_stack_one(tree, n_stages, L_ps) for tree, n_stages in groups]
+    if len(stacked) == 1:
+        return stacked[0]
+    out = stacked[0]
+    for nxt in stacked[1:]:
+        out = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                           out, nxt)
+    return out
 
 
 def stage_active_mask(d_p: int, n_layers: int):
@@ -89,6 +125,46 @@ def unstack_stages(layers_tree, n_layers: int):
         flat = x.reshape(x.shape[0] * x.shape[1], *x.shape[2:])
         return flat[:n_layers]
     return jax.tree.map(_re, layers_tree)
+
+
+def _lookup_path(tree, path: str):
+    node = tree
+    for key in path.split("/"):
+        node = node[key]
+    return node
+
+
+def gather_params(tree, shard_dims, axis: str, *, dim_offset: int):
+    """ZeRO-3: materialize full parameters from "model" shards.
+
+    ``shard_dims`` is the precomputed tree of gather dims in FULL-shape
+    coordinates (including the [d_p, L_s] stacking prefix); ``dim_offset``
+    subtracts the prefix dims already stripped from ``tree``'s leaves
+    (2 for a single layer's tree, 1 for a whole stage's [L_s, ...] tree).
+    EP leaves carry a marker dim but stay sharded (expert parallelism),
+    which :data:`EP_PATH_RE` expresses by pointing at the expert dim; the
+    path check below skips them.
+    """
+    def _g(path, leaf):
+        if EP_PATH_RE.search(path):
+            return leaf
+        zd = _lookup_path(shard_dims, path)
+        if zd is None:
+            return leaf
+        return jax.lax.all_gather(leaf, axis, axis=zd - dim_offset,
+                                  tiled=True)
+    return tree_paths_map(_g, tree)
+
+
+def gather_layer_params(lp, shard_dims, axis: str):
+    """ZeRO-3 'per_tick' mode: gather one layer's full parameters."""
+    return gather_params(lp, shard_dims, axis, dim_offset=2)
+
+
+def gather_stage_params(stage_params, shard_dims, axis: str):
+    """ZeRO-3 'per_step' mode: gather the whole stage's stacked [L_s, ...]
+    tree once; leaves keep their L_s dim so the gather axis is zd - 1."""
+    return gather_params(stage_params, shard_dims, axis, dim_offset=1)
 
 
 def zero3_dim(path: str, shape: Tuple[int, ...], d_s: int,

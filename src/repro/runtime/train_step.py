@@ -32,8 +32,8 @@ from repro.optim import (AdamWConfig, adamw_update, compressed_psum,
 from . import sp
 from .pipeline import PipelineGeometry, pipeline_loss_fn
 from .sharding import (batch_specs, head_param_specs, mesh_axis_names,
-                       shard_dim_tree, stack_stages, stage_param_specs,
-                       tree_paths_map)
+                       shard_dim_tree, shard_map_compat, stack_stages,
+                       stage_param_specs, tree_paths_map)
 
 __all__ = ["TrainStepBuilder", "prepare_params", "make_geometry",
            "batch_struct"]
@@ -218,7 +218,7 @@ class TrainStepBuilder:
 
         mspec = {"loss": P(), "tokens": P(), "grad_norm": P(), "lr": P()}
         fn = functools.partial(self._step_local, shard_dims, norm_factors)
-        mapped = jax.shard_map(
+        mapped = shard_map_compat(
             fn, mesh=self.mesh,
             in_specs=(pspecs, ospecs,
                       pspecs if self.compress_pod_grads else None,

@@ -217,8 +217,11 @@ def test_mamba_scan_matches_oracle(dtype, T, DI, DS):
         B.astype(jnp.float32)[:, None, :]
     hs, h_r = ref.mamba_scan_reference(a, bx, h0.astype(jnp.float32))
     y_r = jnp.einsum("tds,ts->td", hs, C.astype(jnp.float32))
+    # bf16 scan outputs accumulate like the carried state: same 3e-2 bound
     np.testing.assert_allclose(np.asarray(y_p, np.float32),
-                               np.asarray(y_r, np.float32), **TOL[dtype])
+                               np.asarray(y_r, np.float32),
+                               rtol=2e-5 if dtype == jnp.float32 else 3e-2,
+                               atol=2e-5 if dtype == jnp.float32 else 3e-2)
     np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r),
                                rtol=1e-4 if dtype == jnp.float32 else 3e-2,
                                atol=1e-4 if dtype == jnp.float32 else 3e-2)

@@ -27,7 +27,7 @@ _COMMON = textwrap.dedent("""
     from repro.models import DecoderLM, LayerCtx
     from repro.runtime import TrainStepBuilder, make_geometry
     from repro.runtime.pipeline import pipeline_loss_fn
-    from repro.runtime.sharding import shard_dim_tree, mesh_axis_names
+    from repro.runtime.sharding import shard_dim_tree, mesh_axis_names, shard_map_compat
     from repro.runtime.train_step import prepare_params, param_pspecs, batch_specs, batch_struct
 
     def reference_loss(cfg, raw_params, chunks, corpus, cap, ctx_cap):
@@ -102,7 +102,7 @@ _COMMON = textwrap.dedent("""
         shard_dims = shard_dim_tree(params["stages"], 4)
 
         loss_fn = pipeline_loss_fn(cfg, geom, shard_dims, pod_axis=None)
-        mapped = jax.jit(jax.shard_map(
+        mapped = jax.jit(shard_map_compat(
             loss_fn, mesh=mesh, in_specs=(pspecs, bspecs),
             out_specs=(P(), P()), check_vma=False))
         loss_d, n_d = mapped(params, batch)
@@ -172,7 +172,7 @@ def test_pipeline_with_remat_matches():
             builder = TrainStepBuilder(cfg, mesh, geom, param_dtype=jnp.float32)
             pspecs, _, bspecs = builder.specs(jax.eval_shape(lambda: params))
             loss_fn = pipeline_loss_fn(cfg, geom, shard_dims, pod_axis=None)
-            mapped = jax.jit(jax.shard_map(
+            mapped = jax.jit(shard_map_compat(
                 loss_fn, mesh=mesh, in_specs=(pspecs, bspecs),
                 out_specs=(P(), P()), check_vma=False))
             # also check gradients flow under remat
