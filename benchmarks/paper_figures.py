@@ -21,6 +21,9 @@ from repro.data import sample_lengths
 
 from .baselines import BASELINES
 
+# strong refs for benchmark-local CompileCaches (the cache registry is weak)
+_LIVE_BENCH_CACHES: list = []
+
 
 def _cm(arch_cfg, ce_mode="inplace", **kw):
     return CostModel(arch_cfg.spec, paper_cluster(**kw), ce_mode=ce_mode)
@@ -267,6 +270,10 @@ def cache_bucket_reuse(steps=24, batch=48, ctx=49152, seed=0) -> List[Dict]:
     quanta = (0, 4096, 16384)  # 0 => the d_s-rounded default
     caches = {q: CompileCache(name=f"bench-bucket-reuse-q{q}")
               for q in quanta}
+    # the registry holds caches weakly; keep THIS sweep's caches alive so
+    # the process-wide compile_cache row in benchmarks/run.py still sees
+    # them, dropping any previous sweep's (no unbounded growth)
+    _LIVE_BENCH_CACHES[:] = caches.values()
     slot_tokens = {q: 0 for q in quanta}
     real_tokens = 0
     rows = []
@@ -280,7 +287,8 @@ def cache_bucket_reuse(steps=24, batch=48, ctx=49152, seed=0) -> List[Dict]:
         for q in quanta:
             key = plan.bucket_key(d_s, cap_quantum=q)
             caches[q].get(key, lambda k=key: k)  # stub build
-            slot_tokens[q] += key[0] * key[1]
+            _sched, _v, n_slots, cap_slots = key[:4]
+            slot_tokens[q] += n_slots * cap_slots
             row[f"bucket_q{q}"] = list(key)
         rows.append(row)
     for q in quanta:

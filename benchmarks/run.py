@@ -18,6 +18,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json-out", default="",
+                    help="also write the full per-figure records (incl. the "
+                         "compile_cache stats block) to this JSON file — "
+                         "CI uploads it as an artifact")
     args = ap.parse_args()
 
     from . import paper_figures as pf
@@ -83,6 +87,9 @@ def main() -> None:
     for name, rows in all_rows.items():
         for r in rows:
             print(json.dumps({"bench": name, **r}))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(all_rows, f, indent=1)
 
 
 def _derived(name: str, rows) -> str:

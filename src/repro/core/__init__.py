@@ -11,8 +11,11 @@ from .chunking import ChunkingResult, chunk_sequences, seq_workload
 from .ilp import IlpResult, greedy_cover, simplex_lp, solve_cover_ilp
 from .checkpointing import CkptSolution, diag_index, solve_checkpointing
 from .grouping import GroupingResult, group_sequences
-from .schedule import (PipelineSimulator, SimResult, backward_order,
-                       build_schedule, enumerate_windows, window_limit)
+from .schedule import (Occupancy, PipelineSimulator, ScheduleSpec, SimResult,
+                       available_schedules, backward_order, build_schedule,
+                       choose_schedule, enumerate_windows, get_schedule,
+                       register_schedule, simulate_occupancy,
+                       simulate_schedule, window_limit)
 from .planner import PlannerConfig, plan_batch
 
 __all__ = [
@@ -23,7 +26,10 @@ __all__ = [
     "IlpResult", "greedy_cover", "simplex_lp", "solve_cover_ilp",
     "CkptSolution", "diag_index", "solve_checkpointing",
     "GroupingResult", "group_sequences",
-    "PipelineSimulator", "SimResult", "backward_order", "build_schedule",
-    "enumerate_windows", "window_limit",
+    "Occupancy", "PipelineSimulator", "ScheduleSpec", "SimResult",
+    "available_schedules", "backward_order", "build_schedule",
+    "choose_schedule", "enumerate_windows", "get_schedule",
+    "register_schedule", "simulate_occupancy", "simulate_schedule",
+    "window_limit",
     "PlannerConfig", "plan_batch",
 ]

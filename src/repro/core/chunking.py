@@ -11,7 +11,9 @@ of §III-A.1:
 * short sequences are packed Best-Fit-Decreasing under a time threshold
   ``T_t`` and a token threshold ``T_m``, preferring the bucket with the
   lowest ``tot_time / tot_tokens`` (pairs long-ish shorts with cheap tails);
-  ``T_t`` is loosened when ``T_m`` cannot otherwise be met.
+  ``T_t`` is loosened *per placement* when ``T_m`` cannot otherwise be met
+  (the forced short lands in the cheapest feasible bucket and the threshold
+  is restored for the rest of the batch).
 
 The output order is the pipeline execution order: longest sequences first
 (§III-C1's fundamental scheduling rule), slices in causal order, the hybrid
@@ -65,7 +67,8 @@ class ChunkingResult:
     chunks: List[Chunk]                  # pipeline execution order
     sequences: List[SequenceInfo]
     mesh: List[int]                      # Alg. 1's slice-length mesh
-    t_t: float                           # final (possibly loosened) T_t
+    t_t: float                           # T_t (line-1 value; loosening is
+                                         # per-placement and never persists)
     t_m: int                             # token threshold
     k_split: int
 
@@ -154,15 +157,24 @@ def chunk_sequences(cm: CostModel, lengths: Sequence[int], k: int, *,
                     placed = True
                     break
             if not placed:
-                # line 14: loosen T_t to the cheapest feasible placement
+                # line 14: T_m cannot otherwise be met, so loosen T_t — for
+                # THIS placement only. Force the short into the cheapest
+                # token-feasible bucket (min tot_time, metric tie-break);
+                # T_t itself stays put, so one outlier does not relax the
+                # time threshold for every subsequent short (which would
+                # silently degrade workload balance across the batch).
                 feas = [b for b in buckets if b.tot_tokens + s.length <= t_m]
                 if not feas:
                     nb = _Bucket()
                     nb.add(s, t_s)
                     buckets.append(nb)
-                    placed = True
                 else:
-                    t_t = min(b.tot_time for b in feas) + t_s
+                    t_min = min(b.tot_time for b in feas)
+                    best = min((b for b in feas
+                                if b.tot_time <= t_min + 1e-18),
+                               key=lambda b: b.metric)
+                    best.add(s, t_s)
+                placed = True
 
     # ---- line 15-16: transform & order -------------------------------------
     chunks: List[Chunk] = []

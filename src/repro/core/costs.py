@@ -293,6 +293,27 @@ class CostModel:
         return (self.t_tot(chunk) + self.t_tot(chunk, bwd=True)
                 + self.t_recompute(chunk, l_ckpt))
 
+    def avg_stage_times(self, chunks: Sequence[Chunk]
+                        ) -> Tuple[float, float]:
+        """Mean per-stage ``(t_fwd, t_bwd)`` tick durations over a chunk set
+        — the inputs to the schedule backends' bubble model
+        (:meth:`repro.core.schedule.ScheduleSpec.bubble_time`); the W-grad
+        share of ``t_bwd`` is ``schedule.WGRAD_FRACTION``."""
+        if not chunks:
+            return 0.0, 0.0
+        t_f = sum(self.t_tot(c, per_stage=True) for c in chunks)
+        t_b = sum(self.t_tot(c, bwd=True, per_stage=True) for c in chunks)
+        return t_f / len(chunks), t_b / len(chunks)
+
+    def t_p2p(self, chunk: Chunk) -> float:
+        """Stage-boundary activation hand-off for one chunk: the (token-
+        sharded) hidden state over ICI plus a launch latency. The pipeline
+        simulator charges it per stage crossing; the schedule picker
+        charges interleaving's extra ring trips with it."""
+        m, cl = self.model, self.cluster
+        vol = m.bytes_per_act * m.d_model * chunk.tokens / cl.d_s
+        return vol / cl.ici_bw + 1e-6
+
     # ------------------------------------------------------------------
     # Eq. 11: recompute cost of checkpointing l_ckpt layers (per stage).
     # ------------------------------------------------------------------

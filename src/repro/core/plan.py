@@ -348,6 +348,10 @@ class PipelinePlan:
     est_time: float = 0.0     # simulator makespan estimate (s)
     est_recompute: float = 0.0
     est_peak_mem: List[float] = field(default_factory=list)  # per stage (bytes)
+    # schedule backend the bubble model prefers for THIS pipeline
+    # (core/schedule.py registry name + virtual-stage count)
+    sched_backend: str = "gpipe-1f1b"
+    v_stages: int = 1
 
     @property
     def n_chunks(self) -> int:
@@ -371,6 +375,8 @@ class PipelinePlan:
             "est_recompute": self.est_recompute,
             "est_peak_mem": self.est_peak_mem,
             "schedule": [[(t.op.value, t.chunk) for t in row] for row in self.schedule],
+            "sched_backend": self.sched_backend,
+            "v_stages": self.v_stages,
         }
 
     @staticmethod
@@ -385,6 +391,8 @@ class PipelinePlan:
             est_time=d["est_time"],
             est_recompute=d["est_recompute"],
             est_peak_mem=list(d["est_peak_mem"]),
+            sched_backend=d.get("sched_backend", "gpipe-1f1b"),
+            v_stages=d.get("v_stages", 1),
         )
 
 
@@ -400,6 +408,11 @@ class ExecutionPlan:
     est_total_time: float = 0.0
     solve_time: float = 0.0
     remat_mode: str = "uniform"        # "uniform" | "per_chunk"
+    # schedule backend the executor runs (one compiled program covers every
+    # pipeline of the plan, so this is the cross-pipeline consensus pick;
+    # per-pipeline preferences live on PipelinePlan.sched_backend)
+    schedule: str = "gpipe-1f1b"
+    v_stages: int = 1                  # virtual stages per device (interleaved)
     meta: Dict[str, Any] = field(default_factory=dict)
 
     @property
@@ -420,9 +433,15 @@ class ExecutionPlan:
         return best
 
     def bucket_key(self, d_s: int, *, chunk_rounding: int = 8,
-                   cap_quantum: int = 0) -> Tuple[int, int, int, int]:
+                   cap_quantum: int = 0
+                   ) -> Tuple[str, int, int, int, int, int]:
         """The compiled-executable bucket this plan lands in:
-        ``(n_chunks, cap, ctx_cap, l_ckpt)``.
+        ``(schedule, v_stages, n_chunks, cap, ctx_cap, l_ckpt)``.
+
+        The schedule backend leads the key: tick count, stream routing and
+        layer stacking are all schedule-shaped, so two plans that agree on
+        geometry but not on schedule must NOT share an executable (a
+        cross-schedule cache hit would run the wrong program).
 
         n_chunks rounds UP to a multiple of ``chunk_rounding`` (padding
         chunks are fully masked — zero loss/grad), cap to the SP degree
@@ -444,7 +463,8 @@ class ExecutionPlan:
         cap = -(-self.chunk_capacity // q) * q
         max_ctx = max((c.context for c in chunks), default=0)
         ctx_cap = -(-(max_ctx + cap) // cap) * cap
-        return (n, cap, ctx_cap, self.uniform_ckpt())
+        return (self.schedule, self.v_stages, n, cap, ctx_cap,
+                self.uniform_ckpt())
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -456,6 +476,8 @@ class ExecutionPlan:
             "est_total_time": self.est_total_time,
             "solve_time": self.solve_time,
             "remat_mode": self.remat_mode,
+            "schedule": self.schedule,
+            "v_stages": self.v_stages,
             "meta": self.meta,
         }
 
@@ -474,5 +496,7 @@ class ExecutionPlan:
             est_total_time=d["est_total_time"],
             solve_time=d["solve_time"],
             remat_mode=d.get("remat_mode", "uniform"),
+            schedule=d.get("schedule", "gpipe-1f1b"),
+            v_stages=d.get("v_stages", 1),
             meta=d.get("meta", {}),
         )

@@ -26,7 +26,7 @@ from .chunking import ChunkingResult, chunk_sequences
 from .costs import CostModel
 from .grouping import GroupingResult, group_sequences
 from .plan import ClusterSpec, ExecutionPlan, ModelSpec
-from .schedule import build_schedule
+from .schedule import build_schedule, choose_schedule
 
 __all__ = ["plan_batch", "PlannerConfig"]
 
@@ -43,7 +43,14 @@ class PlannerConfig:
     fixed_k: Optional[int] = None     # pin K (Seq1F1B-style baselines)
     uniform_split: bool = False       # ablate: evenly split (w/o wbc)
     disable_ckpt: bool = False        # ablate: no checkpointing
-    full_ckpt: bool = False           # ablate: checkpoint everything
+    full_ckpt: bool = False          # ablate: checkpoint everything
+    # schedule backend: None => pick per plan from the bubble model
+    # (core/schedule.choose_schedule); a registry name pins it. v_stages=0
+    # lets the picker choose the virtual-stage count (interleaved only),
+    # a value pins it. Training runs MUST pin after the first plan — the
+    # interleaved layer stacking bakes v into the parameter layout.
+    schedule: Optional[str] = None
+    v_stages: int = 0
 
 
 def _round_up(v: int, q: int) -> int:
@@ -133,6 +140,7 @@ def plan_batch(cm: CostModel, lengths: Sequence[int],
     cap = _round_up(max(chunking.max_chunk_tokens, 1), cfg.bucket_rounding)
     for p in grouping.pipelines:
         p.schedule = build_schedule(len(p.chunks), d_p, p.n_split, p.f2b)
+    sched_name, v_stages = _pick_schedules(cm, grouping.pipelines, cfg)
     plan = ExecutionPlan(
         pipelines=grouping.pipelines,
         sequences=chunking.sequences,
@@ -142,10 +150,58 @@ def plan_batch(cm: CostModel, lengths: Sequence[int],
         est_total_time=total,
         solve_time=time.perf_counter() - t0,
         remat_mode=cfg.remat_mode,
+        schedule=sched_name,
+        v_stages=v_stages,
         meta={"k_sweep": {str(k): v for k, v in tried.items()},
               "sp_policy": cm.sp_policy},
     )
     return plan
+
+
+def _pick_schedules(cm: CostModel, pipelines, cfg: PlannerConfig
+                    ) -> Tuple[str, int]:
+    """Schedule-backend selection from the bubble model.
+
+    Each pipeline records its own preferred backend
+    (``PipelinePlan.sched_backend``); the plan-level pick — the one the
+    single compiled executable actually runs, and the one ``bucket_key()``
+    carries — minimizes the summed *realized* executor bubble across
+    pipelines (so zero-bubble-h1, whose W-grad fill stays fused in this
+    executor's HLO, never shadows interleaving's real gain; pin it to run
+    it). A pinned ``cfg.schedule`` restricts the candidates to that backend
+    (with the ``v`` sweep still running for interleaved unless ``v_stages``
+    pins it too); a pinned ``v_stages`` — including an explicit 1 — is
+    honored, and one that cannot divide the stage's layer block is an
+    error, not a silent fallback.
+    """
+    from .schedule import (candidate_schedules, rank_schedule,
+                           schedule_tiebreak)
+
+    d_p = cm.cluster.d_p
+    l_s = max(1, -(-cm.model.n_layers // d_p))
+    if cfg.v_stages > 1 and l_s % cfg.v_stages:
+        raise ValueError(
+            f"v_stages={cfg.v_stages} does not divide layers_per_stage="
+            f"{l_s} (n_layers={cm.model.n_layers}, d_p={d_p})")
+    candidates = candidate_schedules(l_s, schedule=cfg.schedule,
+                                     v_stages=cfg.v_stages)
+
+    times = [cm.avg_stage_times(p.chunks) for p in pipelines]
+    p2ps = [sum(cm.t_p2p(c) for c in p.chunks) / max(len(p.chunks), 1)
+            for p in pipelines]
+    for p, tfb, t_p in zip(pipelines, times, p2ps):
+        best = choose_schedule(cm, p.chunks, layers_per_stage=l_s,
+                               candidates=candidates, avg_times=tfb,
+                               avg_p2p=t_p)
+        p.sched_backend, p.v_stages = best.name, best.v
+
+    def total_cost(spec) -> Tuple[float, int, str]:
+        tot = sum(rank_schedule(spec, len(p.chunks), d_p, t_f, t_b, t_p)[0]
+                  for p, (t_f, t_b), t_p in zip(pipelines, times, p2ps))
+        return (tot, *schedule_tiebreak(spec))
+
+    best = min(candidates, key=total_cost)
+    return best.name, best.v
 
 
 def _uniform_chunking(cm: CostModel, lengths: Sequence[int], k: int,

@@ -1,15 +1,23 @@
-"""1F1B schedule construction, chunks-window enumeration, and a
-cycle-accurate pipeline simulator.
+"""Schedule backends, 1F1B schedule construction, chunks-window
+enumeration, and pipeline simulators.
 
-Three consumers:
+Four consumers:
 
-1. :func:`enumerate_windows` feeds Alg. 2's ILP the distinct chunks windows
+1. :class:`ScheduleSpec` / :func:`get_schedule` name a pipeline schedule
+   backend (``gpipe-1f1b``, ``interleaved-1f1b``, ``zero-bubble-h1``) and
+   own its *executor geometry*: the forward ``lax.scan`` tick count, the
+   per-tick ``(item, virtual-stage)`` mapping every device follows, and the
+   bubble fraction both imply. :func:`simulate_occupancy` replays the
+   mapping tick by tick (the parity oracle the executor is tested against)
+   and :func:`simulate_schedule` is a unit-duration event simulator that
+   also models zero-bubble B-grad/W-grad splitting.
+2. :func:`enumerate_windows` feeds Alg. 2's ILP the distinct chunks windows
    ``W_p(t)`` (Eq. 7-8). Window *content* is duration-independent — it only
    depends on the per-stage op order, which the 1F1B policy fixes — so the
    ILP never needs timing.
-2. :func:`build_schedule` emits the per-stage tick list the executor and the
+3. :func:`build_schedule` emits the per-stage tick list the executor and the
    simulator share.
-3. :class:`PipelineSimulator` is an event-driven simulator with true chunk
+4. :class:`PipelineSimulator` is an event-driven simulator with true chunk
    durations (from the cost model) and token-level-PP dependencies. It
    produces makespan, per-stage bubble ratios, a time breakdown
    (compute / SP-comm / P2P / bubble / recompute) and per-stage peak memory —
@@ -27,18 +35,486 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence, Set,
+                    Tuple)
 
 from .costs import CostModel
 from .plan import Chunk, ChunkKind, Tick, TickOp
 
 __all__ = [
+    "ScheduleSpec",
+    "Occupancy",
+    "available_schedules",
+    "get_schedule",
+    "register_schedule",
+    "simulate_occupancy",
+    "simulate_schedule",
+    "candidate_schedules",
+    "choose_schedule",
+    "rank_schedule",
+    "schedule_tiebreak",
     "backward_order",
     "enumerate_windows",
     "build_schedule",
     "PipelineSimulator",
     "SimResult",
 ]
+
+# fraction of one backward pass that is weight-grad work (dgrad ~= wgrad for
+# matmul-dominated transformer layers) — the zero-bubble split point
+WGRAD_FRACTION = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Schedule backends.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScheduleSpec:
+    """One named pipeline schedule backend over the StageProgram executor.
+
+    A spec owns the *geometry* a schedule imposes on the executor's lockstep
+    forward scan:
+
+    * :meth:`scan_ticks` — how many ticks the ``lax.scan`` runs;
+    * :meth:`tick_coords` — which ``(item, virtual-stage)`` device ``p``
+      works on at tick ``t`` (the mapping the executor mirrors in traced
+      arithmetic — ``tests/test_schedule_backends.py`` keeps them equal);
+    * :meth:`scan_bubble_fraction` — the fraction of ``(device, tick)``
+      slots that are bubbles, i.e. the compiled-FLOPs inflation of the
+      lockstep-SPMD program (``(n + d_p - 1)/n`` for plain 1F1B);
+    * :meth:`bubble_time` — the per-stage idle seconds of one fwd+bwd
+      iteration under schedule theory, the planner's selection objective.
+
+    ``v`` is the number of virtual stages per device (``interleaved-1f1b``;
+    1 otherwise). ``split_bwd`` marks zero-bubble schedules whose backward
+    splits into a B-grad (activation-grad) tick on the critical path and a
+    W-grad (weight-grad) tick that fills trailing bubbles.
+    """
+
+    name: str
+    v: int = 1
+    split_bwd: bool = False
+
+    def __post_init__(self) -> None:
+        if self.v < 1:
+            raise ValueError(f"v must be >= 1, got {self.v}")
+
+    # -- executor geometry --------------------------------------------------
+    def n_groups(self, n_items: int, d_p: int) -> int:
+        """Interleaved round-robin groups: microbatches advance through the
+        ``v * d_p`` virtual-stage ring in groups of ``d_p``."""
+        return -(-n_items // d_p) if n_items > 0 else 0
+
+    def scan_ticks(self, n_items: int, d_p: int) -> int:
+        """Tick count of the executor's forward ``lax.scan``.
+
+        ``v == 1``: the classic ``n + d_p - 1``. ``v > 1``: every device
+        runs each item once per virtual stage (``n * v`` useful ticks,
+        rounded up to whole groups) plus the ``d_p - 1`` fill diagonal —
+        each tick now being ``1/v`` of a stage, which is where interleaving
+        wins: the fill is paid in short ticks.
+        """
+        if n_items <= 0:
+            return 0
+        if self.v == 1:
+            return n_items + d_p - 1
+        return self.n_groups(n_items, d_p) * self.v * d_p + d_p - 1
+
+    def tick_coords(self, t: int, p: int, n_items: int,
+                    d_p: int) -> Tuple[int, int, bool]:
+        """``(item, v_idx, valid)`` device ``p`` handles at forward tick
+        ``t``. Pure-python mirror of the executor's traced mapping.
+
+        ``v == 1``: the classic diagonal ``item = t - p``. ``v > 1``: with
+        wave index ``u = t - p``, round ``r = u // d_p`` and in-round
+        offset ``q = u % d_p``, the device runs local virtual stage
+        ``j = r % v`` on item ``m = (r // v) * d_p + q`` — i.e. microbatches
+        advance through the ``v * d_p`` virtual-stage ring (global virtual
+        stage ``j * d_p + p``) in round-robin groups of ``d_p``.
+        """
+        u = t - p
+        if self.v == 1:
+            return u, 0, (0 <= u < n_items)
+        lim = self.n_groups(n_items, d_p) * self.v * d_p
+        if not 0 <= u < lim:
+            return -1, 0, False
+        r, q = divmod(u, d_p)
+        j = r % self.v
+        m = (r // self.v) * d_p + q
+        return m, j, m < n_items
+
+    # -- bubble models ------------------------------------------------------
+    def scan_bubble_fraction(self, n_items: int, d_p: int) -> float:
+        """Bubble share of the lockstep forward scan: wasted
+        ``(device, tick)`` slots over total. Useful ticks per device are
+        ``n * v`` (each item visits each of the device's virtual stages
+        once); everything else computes masked garbage. Equal to what
+        :func:`simulate_occupancy` measures — tested."""
+        ticks = self.scan_ticks(n_items, d_p)
+        if ticks <= 0:
+            return 0.0
+        return 1.0 - (n_items * self.v) / ticks
+
+    def bubble_time(self, n_items: int, d_p: int, t_f: float, t_b: float,
+                    t_w: Optional[float] = None) -> float:
+        """Per-stage idle seconds of one fwd+bwd iteration — the planner's
+        schedule-selection objective.
+
+        * ``gpipe-1f1b``: the classic ``(d_p - 1) * (t_f + t_b)`` ramp.
+        * ``interleaved-1f1b``: every wasted scan slot costs ``1/v`` of a
+          stage's fwd+bwd, so ``wasted * (t_f + t_b) / v`` — the
+          ``(d_p - 1)/v`` Megatron interleaving gain, plus the exact
+          group-padding waste when ``d_p`` does not divide ``n``.
+        * ``zero-bubble-h1``: B splits into B-grad (``t_b - t_w``, critical
+          path) and W-grad (``t_w``, fills the cooldown), leaving
+          ``(d_p - 1) * (t_f + t_b - 2 t_w)`` — one third of 1F1B's bubble
+          at ``t_b = 2 t_f``, ``t_w = t_b / 2`` (ZB-H1).
+        """
+        if n_items <= 0 or d_p <= 1:
+            return 0.0
+        if self.split_bwd:
+            if t_w is None:
+                t_w = WGRAD_FRACTION * t_b
+            return (d_p - 1) * max(t_f + t_b - 2.0 * t_w, 0.0)
+        wasted = self.scan_ticks(n_items, d_p) - n_items * self.v
+        return wasted * (t_f + t_b) / self.v
+
+    def bubble_fraction(self, n_items: int, d_p: int, t_f: float = 1.0,
+                        t_b: float = 2.0,
+                        t_w: Optional[float] = None) -> float:
+        """``bubble_time`` normalized by per-stage makespan (work + idle)."""
+        work = n_items * (t_f + t_b)
+        if work <= 0:
+            return 0.0
+        bub = self.bubble_time(n_items, d_p, t_f, t_b, t_w)
+        return bub / (work + bub)
+
+    def realized_bubble_time(self, n_items: int, d_p: int, t_f: float,
+                             t_b: float) -> float:
+        """Per-stage idle seconds the lockstep-SPMD executor actually
+        realizes: wasted scan slots at ``1/v`` of a stage's fwd+bwd each.
+
+        Differs from :meth:`bubble_time` only for ``split_bwd`` backends —
+        the compiled program keeps W-grad fused with B-grad (the backward
+        is the autodiff transpose), so zero-bubble's modeled fill does NOT
+        materialize in HLO and its realized bubble equals plain 1F1B's.
+        The planner's default pick ranks by THIS, so a modeled-but-unpaid
+        advantage can never shadow interleaving's real one.
+        """
+        if n_items <= 0 or d_p <= 1:
+            return 0.0
+        wasted = self.scan_ticks(n_items, d_p) - n_items * self.v
+        return wasted * (t_f + t_b) / self.v
+
+    def comm_overhead_time(self, n_items: int, d_p: int,
+                           t_p2p: float) -> float:
+        """Extra stream hand-off seconds vs the ``v = 1`` diagonal.
+
+        Interleaving sends the same activations around the ring once per
+        virtual stage (forward + the backward transpose), so every scan
+        tick beyond the ``n + d_p - 1`` baseline pays one more chunk
+        hand-off each way — the price that caps how far raising ``v``
+        keeps paying off.
+        """
+        if n_items <= 0 or d_p <= 1:
+            return 0.0
+        extra = self.scan_ticks(n_items, d_p) - (n_items + d_p - 1)
+        return 2.0 * extra * t_p2p
+
+
+_SCHEDULE_REGISTRY: Dict[str, Callable[[int], ScheduleSpec]] = {}
+
+
+def register_schedule(name: str,
+                      factory: Callable[[int], ScheduleSpec]) -> None:
+    """Register a schedule backend: ``factory(v) -> ScheduleSpec``."""
+    _SCHEDULE_REGISTRY[name] = factory
+
+
+def available_schedules() -> Tuple[str, ...]:
+    return tuple(sorted(_SCHEDULE_REGISTRY))
+
+
+def get_schedule(name: str, v: int = 1) -> ScheduleSpec:
+    """Resolve a schedule name (+ virtual-stage count) to its spec."""
+    try:
+        factory = _SCHEDULE_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {name!r}; known: {available_schedules()}")
+    return factory(v)
+
+
+def _mk_gpipe(v: int) -> ScheduleSpec:
+    if v != 1:
+        raise ValueError("gpipe-1f1b has no virtual stages (v must be 1)")
+    return ScheduleSpec("gpipe-1f1b")
+
+
+def _mk_interleaved(v: int) -> ScheduleSpec:
+    return ScheduleSpec("interleaved-1f1b", v=v)
+
+
+def _mk_zb_h1(v: int) -> ScheduleSpec:
+    if v != 1:
+        raise ValueError("zero-bubble-h1 has no virtual stages (v must be 1)")
+    return ScheduleSpec("zero-bubble-h1", split_bwd=True)
+
+
+register_schedule("gpipe-1f1b", _mk_gpipe)
+register_schedule("interleaved-1f1b", _mk_interleaved)
+register_schedule("zero-bubble-h1", _mk_zb_h1)
+
+
+@dataclass
+class Occupancy:
+    """Tick-by-tick forward-scan occupancy of one schedule backend."""
+
+    spec: ScheduleSpec
+    n_items: int
+    d_p: int
+    # grid[t][p] = (item, v_idx) or None for a bubble slot
+    grid: List[List[Optional[Tuple[int, int]]]]
+
+    @property
+    def total_slots(self) -> int:
+        return len(self.grid) * self.d_p
+
+    @property
+    def useful_slots(self) -> int:
+        return sum(1 for row in self.grid for cell in row if cell is not None)
+
+    @property
+    def bubble_fraction(self) -> float:
+        return (1.0 - self.useful_slots / self.total_slots
+                if self.total_slots else 0.0)
+
+    def render(self) -> str:
+        """ASCII tick-occupancy diagram (stages as rows, ticks as columns):
+        ``m`` for item m at v_idx 0, ``m'``/``m"`` for higher virtual
+        stages, ``.`` for bubbles."""
+        marks = ["", "'", '"', "`"]
+        lines = []
+        for p in range(self.d_p):
+            cells = []
+            for t in range(len(self.grid)):
+                cell = self.grid[t][p]
+                if cell is None:
+                    cells.append(".")
+                else:
+                    m, j = cell
+                    cells.append(f"{m}{marks[j % len(marks)]}")
+            lines.append(f"p{p}: " + " ".join(f"{c:>3}" for c in cells))
+        return "\n".join(lines)
+
+
+def simulate_occupancy(spec: ScheduleSpec, n_items: int,
+                       d_p: int) -> Occupancy:
+    """Replay ``spec.tick_coords`` over the whole forward scan.
+
+    Verifies the mapping is a schedule at all: every device handles every
+    ``(item, v_idx)`` pair exactly once, virtual stages of one item run in
+    causal ring order. Raises on violations — this is the oracle the traced
+    executor mapping is tested against.
+    """
+    ticks = spec.scan_ticks(n_items, d_p)
+    grid: List[List[Optional[Tuple[int, int]]]] = []
+    seen: Dict[int, Set[Tuple[int, int]]] = {p: set() for p in range(d_p)}
+    for t in range(ticks):
+        row: List[Optional[Tuple[int, int]]] = []
+        for p in range(d_p):
+            m, j, valid = spec.tick_coords(t, p, n_items, d_p)
+            if not valid:
+                row.append(None)
+                continue
+            if not (0 <= m < n_items and 0 <= j < spec.v):
+                raise ValueError(f"out-of-range coords {(m, j)} at {(t, p)}")
+            if (m, j) in seen[p]:
+                raise ValueError(f"device {p} repeats {(m, j)}")
+            seen[p].add((m, j))
+            row.append((m, j))
+        grid.append(row)
+    for p in range(d_p):
+        if len(seen[p]) != n_items * spec.v:
+            raise ValueError(
+                f"device {p} covered {len(seen[p])} of "
+                f"{n_items * spec.v} (item, v_idx) pairs")
+    return Occupancy(spec, n_items, d_p, grid)
+
+
+def simulate_schedule(spec: ScheduleSpec, n_items: int, d_p: int,
+                      t_f: float = 1.0, t_b: float = 2.0,
+                      t_w: Optional[float] = None) -> Dict[str, float]:
+    """Event-driven fwd+bwd makespan of one schedule with uniform op
+    durations — the validation substrate for :meth:`ScheduleSpec.bubble_time`.
+
+    Dependencies: ``F(p, m)`` after ``F(p-1, m)``; ``B(p, m)`` (activation
+    grad) after ``B(p+1, m)`` and the stage's own ``F``; ``W(p, m)`` (weight
+    grad, ``split_bwd`` only) after ``B(p, m)``, schedulable whenever the
+    stage would otherwise idle — ZB-H1's bubble filling. Virtual stages
+    (``v > 1``) run on the global ``v * d_p`` ring with per-tick durations
+    scaled by ``1/v``. Returns makespan, per-stage bubble time and fraction.
+    """
+    if n_items <= 0:
+        return {"makespan": 0.0, "bubble_time": 0.0, "bubble_fraction": 0.0}
+    v = spec.v
+    if spec.split_bwd:
+        if t_w is None:
+            t_w = WGRAD_FRACTION * t_b
+        dur = {"F": t_f, "B": t_b - t_w, "W": t_w}
+    else:
+        t_w = 0.0
+        dur = {"F": t_f / v, "B": t_b / v}
+    S = v * d_p  # virtual stages, stage s on device s % d_p
+    f_done: Dict[Tuple[int, int], float] = {}
+    b_done: Dict[Tuple[int, int], float] = {}
+    w_left = {(s, m) for s in range(S) for m in range(n_items)} \
+        if spec.split_bwd else set()
+    nf = [0] * S           # next fwd item per virtual stage
+    nb = [0] * S           # next bwd item per virtual stage
+    free = [0.0] * d_p
+    busy = [0.0] * d_p
+
+    def f_ready(s: int, m: int) -> Optional[float]:
+        if m >= n_items:
+            return None
+        return f_done.get((s - 1, m), 0.0) if s > 0 else 0.0
+
+    def b_ready(s: int, m: int) -> Optional[float]:
+        if m >= n_items or (s, m) not in f_done:
+            return None
+        return f_done[(s, m)] if s == S - 1 else b_done.get((s + 1, m))
+
+    total_ops = n_items * S * (3 if spec.split_bwd else 2)
+    done_ops = 0
+    while done_ops < total_ops:
+        # pick the globally earliest-startable op; per-device 1F1B priority:
+        # once the Eq. 7 in-flight window fills (or fwds are exhausted) B
+        # beats F at equal start times; W only fills otherwise-idle time.
+        cands = []  # (start, priority, kind, s, m)
+        for s in range(S):
+            p = s % d_p
+            cap = S - s  # Eq. 7 on the virtual-stage ring (N_split = 1)
+            want_bwd = (nf[s] - nb[s]) >= cap or nf[s] >= n_items
+            rb = b_ready(s, nb[s]) if nb[s] < n_items else None
+            rf = f_ready(s, nf[s]) if nf[s] < n_items else None
+            if rb is not None:
+                cands.append((max(rb, free[p]), 0 if want_bwd else 1,
+                              "B", s, nb[s]))
+            if rf is not None:
+                cands.append((max(rf, free[p]), 1 if want_bwd else 0,
+                              "F", s, nf[s]))
+        for (s, m) in w_left:
+            rb = b_done.get((s, m))
+            if rb is not None:
+                cands.append((max(rb, free[s % d_p]), 2, "W", s, m))
+        if not cands:
+            raise RuntimeError("schedule simulator deadlock")
+        start, _pri, kind, s, m = min(cands)
+        p = s % d_p
+        d = dur[kind]
+        free[p] = start + d
+        busy[p] += d
+        done_ops += 1
+        if kind == "F":
+            f_done[(s, m)] = start + d
+            nf[s] += 1
+        elif kind == "B":
+            b_done[(s, m)] = start + d
+            nb[s] += 1
+        else:
+            w_left.discard((s, m))
+    makespan = max(free)
+    idle = sum(makespan - b for b in busy)
+    return {
+        "makespan": makespan,
+        "bubble_time": idle / d_p,
+        "bubble_fraction": idle / (d_p * makespan) if makespan else 0.0,
+    }
+
+
+def candidate_schedules(layers_per_stage: int, *,
+                        schedule: Optional[str] = None,
+                        v_stages: int = 0) -> List[ScheduleSpec]:
+    """Candidate specs for schedule selection.
+
+    Default (nothing pinned): every registered backend, interleaved swept
+    over the divisors of ``layers_per_stage``. A pinned ``schedule``
+    restricts to that backend (the ``v`` sweep stays on for interleaved
+    unless ``v_stages`` pins it too). A pinned ``v_stages`` is honored
+    strictly: ``1`` keeps only single-virtual-stage backends, ``> 1``
+    implies interleaving at exactly that ``v`` (no other backend has
+    virtual stages, so the pin cannot silently fall back to ``v = 1``).
+    The one place both ``choose_schedule`` and the planner's consensus
+    pick get their candidate set from.
+    """
+    l_s = max(1, layers_per_stage)
+    divisors = [v for v in range(2, l_s + 1) if l_s % v == 0]
+    if schedule == "interleaved-1f1b" or (schedule is None and v_stages > 1):
+        vs = [v_stages] if v_stages > 0 else (divisors or [1])
+        return [get_schedule("interleaved-1f1b", v) for v in vs]
+    if schedule is not None:
+        return [get_schedule(schedule, max(v_stages, 1))]  # validates
+    vs = divisors if v_stages == 0 else []  # explicit v=1: no interleaving
+    return ([get_schedule("gpipe-1f1b"), get_schedule("zero-bubble-h1")]
+            + [get_schedule("interleaved-1f1b", v) for v in vs])
+
+
+def schedule_tiebreak(spec: ScheduleSpec) -> Tuple[int, str]:
+    """Equal-bubble tie-break: fewer virtual stages, then the plain backend
+    (stable bucket keys — and zero-bubble-h1, whose realized bubble ties
+    1F1B's, is only ever run when pinned)."""
+    return (spec.v, "" if spec.name == "gpipe-1f1b" else spec.name)
+
+
+def rank_schedule(spec: ScheduleSpec, n_items: int, d_p: int, t_f: float,
+                  t_b: float, t_p2p: float = 0.0, *,
+                  realized: bool = True) -> Tuple[float, int, str]:
+    """Schedule-selection sort key: lower (bubble + extra hand-off) cost
+    first (the *realized* executor bubble by default — see
+    ``realized_bubble_time``; ``t_p2p`` charges interleaving's extra ring
+    trips), then :func:`schedule_tiebreak`."""
+    bub = (spec.realized_bubble_time(n_items, d_p, t_f, t_b) if realized
+           else spec.bubble_time(n_items, d_p, t_f, t_b))
+    bub += spec.comm_overhead_time(n_items, d_p, t_p2p)
+    return (bub, *schedule_tiebreak(spec))
+
+
+def choose_schedule(cm: CostModel, chunks: Sequence[Chunk], *,
+                    layers_per_stage: Optional[int] = None,
+                    candidates: Optional[Sequence[ScheduleSpec]] = None,
+                    avg_times: Optional[Tuple[float, float]] = None,
+                    avg_p2p: Optional[float] = None,
+                    realized: bool = True) -> ScheduleSpec:
+    """Pick the min-cost schedule backend for one pipeline.
+
+    Average per-stage fwd/bwd chunk times and the per-chunk hand-off time
+    come from the cost model (Eq. 1-4, :meth:`CostModel.t_p2p`) unless
+    precomputed ``avg_times``/``avg_p2p`` are passed in; candidates default
+    to every registered backend, with interleaved tried at every ``v`` that
+    divides ``layers_per_stage`` (virtual stages must split a stage's layer
+    block evenly). Ranking uses the *realized* executor bubble by default
+    (``realized=False`` ranks by the modeled bubble instead, where ZB-H1's
+    W-grad fill counts) plus interleaving's extra ring-trip communication;
+    ties break toward ``gpipe-1f1b``.
+    """
+    n = len(chunks)
+    d_p = cm.cluster.d_p
+    if candidates is None:
+        l_s = (layers_per_stage if layers_per_stage is not None
+               else max(1, -(-cm.model.n_layers // d_p)))
+        candidates = candidate_schedules(l_s)
+    if n == 0 or d_p <= 1:
+        return get_schedule("gpipe-1f1b")
+    t_f, t_b = avg_times if avg_times is not None \
+        else cm.avg_stage_times(chunks)
+    t_p = avg_p2p if avg_p2p is not None \
+        else sum(cm.t_p2p(c) for c in chunks) / n
+    return min(candidates,
+               key=lambda s: rank_schedule(s, n, d_p, t_f, t_b, t_p,
+                                           realized=realized))
 
 
 def backward_order(chunks: Sequence[Chunk]) -> List[int]:
@@ -184,9 +660,7 @@ class PipelineSimulator:
 
     # -- durations ----------------------------------------------------------
     def _p2p_time(self, chunk: Chunk) -> float:
-        m, cl = self.cm.model, self.cm.cluster
-        vol = m.bytes_per_act * m.d_model * chunk.tokens / cl.d_s
-        return vol / cl.ici_bw + 1e-6
+        return self.cm.t_p2p(chunk)
 
     def _dur(self, stage: int, op: TickOp, k: int) -> Tuple[float, float, float]:
         """(compute_s, sp_comm_s, recompute_s) for chunk k at 1-based stage.

@@ -32,16 +32,18 @@ def collective_scan(hlo: str) -> dict:
 
 
 def compile_cache_report() -> dict:
-    """Process-wide compile-cache statistics (buckets compiled, hit rate,
-    compile seconds) in the shape the train-loop log and benchmarks/run.py
-    emit. Lazy import keeps this module jax-free at import time."""
+    """Process-wide compile-cache statistics (live buckets, recompiles, hit
+    rate, compile seconds) in the shape the train-loop log and
+    benchmarks/run.py emit. Lazy import keeps this module jax-free at
+    import time."""
     from repro.runtime.compile_cache import global_cache_stats
     return global_cache_stats()
 
 
 def format_cache_report(stats: dict) -> str:
     """One-line human summary of :func:`compile_cache_report` output."""
-    return (f"buckets={stats['buckets_compiled']} hits={stats['hits']} "
+    return (f"buckets={stats['buckets_live']} "
+            f"recompiles={stats['recompiles']} hits={stats['hits']} "
             f"hit_rate={stats['hit_rate']:.2%} "
             f"compile_s={stats['compile_seconds']:.2f}")
 

@@ -106,9 +106,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             else remat_override
         geom = make_geometry(cfg, mesh, n_chunks=len(chunks), cap=cap,
                              ctx_cap=ctx_cap, l_ckpt=l_ckpt,
-                             zero3_mode=zero3_mode)
+                             zero3_mode=zero3_mode,
+                             schedule=plan.schedule,
+                             v_stages=plan.v_stages)
         rec["plan"] = {"K": plan.k_split, "n_chunks": len(chunks),
                        "cap": cap, "ctx_cap": ctx_cap, "l_ckpt": l_ckpt,
+                       "schedule": plan.schedule, "v_stages": plan.v_stages,
                        "pipelines": len(plan.pipelines),
                        "est_time_s": plan.est_total_time,
                        "solve_time_s": plan.solve_time}

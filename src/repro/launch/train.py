@@ -36,6 +36,12 @@ class TrainLoopConfig:
     resume: bool = False
     bucket_rounding: int = 256
     compute_dtype: str = "bfloat16"
+    # pipeline schedule backend (core/schedule.py registry name); None lets
+    # the planner's bubble model pick on the bootstrap plan. Either way the
+    # choice is pinned for the whole run — interleaved stacking bakes the
+    # virtual-stage count into the parameter layout.
+    schedule: Optional[str] = None
+    v_stages: int = 0                 # 0 => auto (interleaved only)
 
 
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
@@ -64,6 +70,11 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     params = opt = None
     start_step = 0
 
+    # schedule backend is pinned after the bootstrap plan: interleaved
+    # stacking bakes v_stages into the parameter layout, so mid-run
+    # schedule switches would scramble live training state
+    pinned = {"schedule": loop.schedule, "v_stages": loop.v_stages}
+
     def plan_for(step: int):
         cm = replan_costmodel(base_cm, monitor)
         corpus = sample_corpus_batch(loop.dataset, loop.global_batch,
@@ -71,17 +82,21 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
                                      seed=loop.seed + step)
         lengths = [len(v) for v in corpus.values()]
         plan = plan_batch(cm, lengths,
-                          PlannerConfig(bucket_rounding=loop.bucket_rounding))
+                          PlannerConfig(bucket_rounding=loop.bucket_rounding,
+                                        schedule=pinned["schedule"],
+                                        v_stages=pinned["v_stages"]))
+        pinned["schedule"], pinned["v_stages"] = plan.schedule, plan.v_stages
         return plan, corpus
 
     def get_step(plan):
         key = plan.bucket_key(d_s)
 
         def build():
-            n_chunks, cap, ctx_cap, l_ckpt = key
+            schedule, v_stages, n_chunks, cap, ctx_cap, l_ckpt = key
             geom = make_geometry(cfg_arch, mesh, n_chunks=n_chunks, cap=cap,
                                  ctx_cap=ctx_cap, l_ckpt=l_ckpt,
-                                 compute_dtype=dtype)
+                                 compute_dtype=dtype, schedule=schedule,
+                                 v_stages=v_stages)
             builder = TrainStepBuilder(cfg_arch, mesh, geom,
                                        param_dtype=dtype)
             return builder, builder.build()
@@ -89,31 +104,40 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
 
     # --- bootstrap: plan step 0 to learn the first bucket ---
     plan, corpus = plan_for(0)
+    log(f"[schedule] {plan.schedule} v={plan.v_stages} "
+        f"(pinned for this run)")
     builder, step_fn = get_step(plan)
     params, opt, _ = builder.init_all(jax.random.PRNGKey(loop.seed))
     def _restack(saved: np.ndarray, tmpl) -> Optional[np.ndarray]:
         """Elastic reshard: stage-stacked [d_p_old, L_s_old, ...] leaves
-        restack for the current pipeline depth (strip old padding, re-pad)."""
+        restack for the current pipeline depth (un-permute the interleaved
+        placement with the run's pinned v, strip old padding, re-pad).
+        The v_stages guard after restore rejects checkpoints written at a
+        different v, so assuming the pinned v here is sound."""
         if saved.ndim != len(tmpl.shape) or saved.ndim < 2 \
                 or tuple(saved.shape[2:]) != tuple(tmpl.shape[2:]):
             return None
-        L = cfg_arch.spec.n_layers
-        flat = saved.reshape(saved.shape[0] * saved.shape[1],
-                             *saved.shape[2:])[:L]
-        new_dp, new_ls = tmpl.shape[0], tmpl.shape[1]
-        pad = new_dp * new_ls - L
-        if pad < 0:
-            return None
-        if pad:
-            flat = np.concatenate(
-                [flat, np.zeros((pad, *flat.shape[1:]), flat.dtype)])
-        return flat.reshape(new_dp, new_ls, *flat.shape[1:])
+        from repro.runtime.sharding import restack_elastic
+        return restack_elastic(saved, tmpl.shape[0], tmpl.shape[1],
+                               cfg_arch.spec.n_layers, v=plan.v_stages)
 
     if mgr and loop.resume:
         latest = mgr.latest_step()
         if latest is not None:
             (params, opt), extra = mgr.restore((params, opt),
                                                adapt=_restack)
+            # interleaved stacking permutes layers WITHOUT changing leaf
+            # shapes, so a v_stages mismatch cannot be shape-detected —
+            # loading it silently would scramble layers across virtual
+            # stages. Checkpoints from before the schedule field are v=1.
+            saved_v = int(extra.get("v_stages", 1))
+            if saved_v != plan.v_stages:
+                raise ValueError(
+                    f"checkpoint was written with v_stages={saved_v} but "
+                    f"this run pinned {plan.schedule} v={plan.v_stages}; "
+                    f"pass --schedule/--v-stages matching the checkpoint "
+                    f"(layer stacking is v-dependent and cannot be "
+                    f"restacked across v)")
             start_step = int(extra.get("step", latest)) + 1
             log(f"[resume] from step {start_step - 1}")
 
@@ -145,7 +169,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     for step in range(start_step, loop.steps):
         plan, corpus = next_plan, next_corpus
         builder, step_fn = get_step(plan)
-        n_chunks, cap = plan.bucket_key(d_s)[:2]
+        n_chunks, cap = plan.bucket_key(d_s)[2:4]
         batch = mat(plan, corpus, cap, n_chunks)
         t0 = time.perf_counter()
         params, opt, _err, metrics = step_fn(params, opt, None, batch)
@@ -160,7 +184,9 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
             f"{int(metrics['tokens'])} wall {dt_step:.2f}s "
             f"(solver {plan.solve_time:.2f}s overlapped)")
         if mgr and (step + 1) % loop.ckpt_every == 0:
-            mgr.save(step, (params, opt), extra={"step": step})
+            mgr.save(step, (params, opt),
+                     extra={"step": step, "schedule": plan.schedule,
+                            "v_stages": plan.v_stages})
     if mgr:
         mgr.wait()
     log(f"[compile-cache] {step_cache.stats.summary()}")
@@ -183,6 +209,13 @@ def main():
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--ckpt-dir")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--schedule", default=None,
+                    help="pipeline schedule backend (gpipe-1f1b, "
+                         "interleaved-1f1b, zero-bubble-h1); default: "
+                         "planner's bubble model picks")
+    ap.add_argument("--v-stages", type=int, default=0,
+                    help="virtual stages per device for interleaved-1f1b "
+                         "(0 = auto; must divide layers per stage)")
     args = ap.parse_args()
 
     import os
@@ -200,7 +233,8 @@ def main():
                            context=args.context, dataset=args.dataset,
                            ckpt_dir=args.ckpt_dir, resume=args.resume,
                            compute_dtype="float32" if args.reduced
-                           else "bfloat16")
+                           else "bfloat16",
+                           schedule=args.schedule, v_stages=args.v_stages)
     train(cfg, mesh, loop)
 
 

@@ -1,13 +1,13 @@
 """First-class plan-bucket compile cache.
 
 The planner emits a fresh :class:`~repro.core.plan.ExecutionPlan` every
-step, but plans land in a small number of *buckets* — chunk-count rounded
-up, capacity rounded to the SP degree, context capacity rounded to the
-capacity (§III: "emit bucketed chunk geometry so the compiled program is
-reused"). One bucket = one compiled executable; this module owns the
-bucket-key -> executable mapping that used to live as private helpers in
-``launch/train.py``, and is reused by ``launch/serve.py`` and
-``launch/dryrun.py``.
+step, but plans land in a small number of *buckets* — schedule backend,
+chunk-count rounded up, capacity rounded to the SP degree, context capacity
+rounded to the capacity (§III: "emit bucketed chunk geometry so the
+compiled program is reused"). One bucket = one compiled executable; this
+module owns the bucket-key -> executable mapping that used to live as
+private helpers in ``launch/train.py``, and is reused by
+``launch/serve.py`` and ``launch/dryrun.py``.
 
 Deliberately jax-free: keys are plain tuples (from
 ``ExecutionPlan.bucket_key()`` or :func:`decode_bucket_key`) and values are
@@ -16,20 +16,30 @@ compiled lowering). Hit/miss/eviction/compile-time statistics are kept per
 cache and aggregated process-wide (:func:`global_cache_stats`) so the
 train-loop log, ``launch/analysis.py`` and ``benchmarks/run.py`` can all
 surface them.
+
+The process-wide registry holds caches *weakly*: a cache (and every
+executable it pins) is freed with its last strong reference, so repeated
+in-process train/serve runs do not leak executables through the stats
+aggregation. Live-bucket count and recompile count are tracked separately —
+``misses`` over-counts live buckets as soon as a bounded cache evicts and
+recompiles a key — and per-key compile-second stats are pruned on eviction
+so they cannot grow without bound.
 """
 
 from __future__ import annotations
 
 import time
+import weakref
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, Optional, Set, Tuple
 
 __all__ = ["CacheStats", "CompileCache", "decode_bucket_key",
            "global_cache_stats", "reset_global_caches"]
 
-# every live cache registers here so process-wide stats can be aggregated
-_REGISTRY: List["CompileCache"] = []
+# every live cache registers here (weakly) so process-wide stats can be
+# aggregated without keeping dead caches — and their executables — alive
+_REGISTRY: "weakref.WeakSet[CompileCache]" = weakref.WeakSet()
 
 
 @dataclass
@@ -37,7 +47,10 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    recompiles: int = 0         # misses on keys that were compiled before
+    buckets_live: int = 0       # executables currently resident
     compile_seconds: float = 0.0
+    # per-key compile time of the RESIDENT buckets (pruned on eviction)
     compile_seconds_per_key: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -50,7 +63,8 @@ class CacheStats:
 
     def as_dict(self) -> Dict[str, Any]:
         return {
-            "buckets_compiled": self.misses,
+            "buckets_live": self.buckets_live,
+            "recompiles": self.recompiles,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
@@ -59,9 +73,10 @@ class CacheStats:
         }
 
     def summary(self) -> str:
-        return (f"buckets={self.misses} hits={self.hits} "
+        return (f"buckets={self.buckets_live} hits={self.hits} "
                 f"hit_rate={self.hit_rate:.2%} "
                 f"evictions={self.evictions} "
+                f"recompiles={self.recompiles} "
                 f"compile_s={self.compile_seconds:.2f}")
 
 
@@ -74,6 +89,8 @@ class CompileCache:
     the last reference.
     """
 
+    _COMPILED_KEYS_CAP = 65536
+
     def __init__(self, name: str = "default",
                  capacity: Optional[int] = None,
                  log: Optional[Callable[[str], None]] = None):
@@ -84,7 +101,8 @@ class CompileCache:
         self.log = log
         self.stats = CacheStats()
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
-        _REGISTRY.append(self)
+        self._compiled_keys: Set[Hashable] = set()
+        _REGISTRY.add(self)
 
     # ------------------------------------------------------------------
     def __contains__(self, key: Hashable) -> bool:
@@ -105,6 +123,14 @@ class CompileCache:
             self._entries.move_to_end(key)
             return self._entries[key]
         self.stats.misses += 1
+        if key in self._compiled_keys:
+            self.stats.recompiles += 1
+        elif len(self._compiled_keys) < self._COMPILED_KEYS_CAP:
+            # bounded recompile tracking: beyond the cap (far past any real
+            # bucket churn) new keys go uncounted rather than growing this
+            # set for the life of the cache — recompiles become a lower
+            # bound instead of a leak
+            self._compiled_keys.add(key)
         t0 = time.perf_counter()
         value = build()
         dt = time.perf_counter() - t0
@@ -117,12 +143,32 @@ class CompileCache:
             while len(self._entries) > self.capacity:
                 evicted, _ = self._entries.popitem(last=False)
                 self.stats.evictions += 1
+                self.stats.compile_seconds_per_key.pop(repr(evicted), None)
                 if self.log:
                     self.log(f"[compile:{self.name}] evict {evicted}")
+        self.stats.buckets_live = len(self._entries)
         return value
 
-    def clear(self) -> None:
+    def clear(self, reset_stats: bool = False) -> None:
+        """Drop every resident executable. ``reset_stats=True`` also zeroes
+        the counters and the compiled-key history (a fresh run in the same
+        process); otherwise hit/miss history survives — including which
+        keys were compiled before, so a post-clear rebuild still counts as
+        a recompile — and only the live-bucket accounting resets."""
         self._entries.clear()
+        if reset_stats:
+            self._compiled_keys.clear()
+            self.stats = CacheStats()
+        else:
+            self.stats.buckets_live = 0
+            self.stats.compile_seconds_per_key.clear()
+
+    def deregister(self) -> None:
+        """Remove this cache from the process-wide stats registry (it keeps
+        working as a plain cache). The weak registry already drops a cache
+        with its last reference; this is for module-global caches that
+        should stop contributing to :func:`global_cache_stats` early."""
+        _REGISTRY.discard(self)
 
 
 def decode_bucket_key(geom) -> Tuple:
@@ -133,14 +179,16 @@ def decode_bucket_key(geom) -> Tuple:
 
 
 def global_cache_stats() -> Dict[str, Any]:
-    """Aggregate stats over every cache created in this process, plus the
+    """Aggregate stats over every LIVE cache in this process, plus the
     per-cache breakdown — the shape benchmarks/run.py emits as JSON."""
     agg = CacheStats()
     per_cache = {}
-    for c in _REGISTRY:
+    for c in list(_REGISTRY):
         agg.hits += c.stats.hits
         agg.misses += c.stats.misses
         agg.evictions += c.stats.evictions
+        agg.recompiles += c.stats.recompiles
+        agg.buckets_live += c.stats.buckets_live
         agg.compile_seconds += c.stats.compile_seconds
         per_cache[c.name] = c.stats.as_dict()
     out = agg.as_dict()

@@ -1,14 +1,16 @@
 """The shared stage-program executor core.
 
-One engine runs every scanned 1F1B pipeline in the repo. Backends
+One engine runs every scanned pipeline in the repo. Backends
 (`runtime/pipeline.py`, `runtime/encdec_pipeline.py`,
 `runtime/serve_step.py`) are thin adapters that build a
 :class:`~repro.runtime.program.StageProgram` with a backend-specific
 ``tick`` hook; everything schedule-shaped lives here:
 
-* :func:`run_stage_program` — the ``lax.scan`` tick loop over
-  ``n_items + d_p - 1`` ticks and the left-neighbor ``ppermute`` stage
-  hand-off (backward = the autodiff transpose: reverse tick order,
+* :func:`run_stage_program` — the ``lax.scan`` tick loop (tick count and
+  per-tick ``(item, virtual stage)`` mapping come from the program's
+  schedule backend, mirroring ``repro.core.schedule.ScheduleSpec.
+  tick_coords`` in traced arithmetic) and the left-neighbor ``ppermute``
+  stage hand-off (backward = the autodiff transpose: reverse tick order,
   reversed ppermute, context-carry cotangents — the paper's dKV
   dependency, Eq. 5);
 * :func:`run_stage_layers` — remat-split per-stage layer execution: the
@@ -23,7 +25,9 @@ One engine runs every scanned 1F1B pipeline in the repo. Backends
 
 Bubble ticks compute on garbage (seg = -1 masks attention and loss): the
 lockstep-SPMD analogue of pipeline bubbles. They inflate compiled HLO FLOPs
-by (n + d_p - 1)/n — the roofline's MODEL_FLOPS ratio surfaces this.
+by ``spec.scan_ticks(n, d_p) / (n * v)`` — ``(n + d_p - 1)/n`` for plain
+1F1B, divided by ~``v`` under ``interleaved-1f1b`` because every tick is
+``1/v`` of a stage — the roofline's MODEL_FLOPS ratio surfaces this.
 """
 
 from __future__ import annotations
@@ -37,14 +41,45 @@ from . import sp
 from .program import StageProgram, TickContext
 
 __all__ = ["run_stage_program", "run_stage_layers", "ppermute_streams",
+           "schedule_tick_coords",
            "reset_ssm_at_boundary", "fold_streaming_ce", "fold_greedy_ids"]
 
 
-def ppermute_streams(streams, data_axis: str, d_p: int):
-    """Left-neighbor hand-off: every stream leaf moves stage p -> p + 1."""
+def schedule_tick_coords(t, p_idx, *, n: int, d_p: int, v: int,
+                         n_groups: int):
+    """``(idx, v_idx, valid)`` for tick ``t`` on device ``p_idx`` — the
+    engine-side mirror of ``repro.core.schedule.ScheduleSpec.tick_coords``.
+
+    Written in overloaded arithmetic only (floor ``//`` / ``%``), so it
+    evaluates identically on traced jnp scalars inside the scan and on
+    plain python ints — ``tests/test_schedule_backends.py`` sweeps both
+    against the spec to keep executor and simulator in lockstep.
+    """
+    u = t - p_idx
+    if v == 1:
+        return u, 0, (u >= 0) & (u < n)
+    r = u // d_p               # floor division: negative u stays invalid
+    q = u - r * d_p
+    v_idx = r % v
+    idx = (r // v) * d_p + q
+    valid = (u >= 0) & (u < n_groups * v * d_p) & (idx < n)
+    return idx, v_idx, valid
+
+
+def ppermute_streams(streams, data_axis: str, d_p: int, *,
+                     ring: bool = False):
+    """Left-neighbor hand-off: every stream leaf moves stage p -> p + 1.
+
+    ``ring=True`` closes the loop (``d_p - 1 -> 0``) — interleaved
+    schedules route a chunk leaving the last device back to the first
+    device's next virtual stage.
+    """
     if d_p <= 1:
         return streams
-    perm = [(i, i + 1) for i in range(d_p - 1)]
+    if ring:
+        perm = [(i, (i + 1) % d_p) for i in range(d_p)]
+    else:
+        perm = [(i, i + 1) for i in range(d_p - 1)]
     return jax.tree.map(
         lambda x: jax.lax.ppermute(x, data_axis, perm), streams)
 
@@ -53,22 +88,36 @@ def run_stage_program(program: StageProgram, init_streams, init_state,
                       init_acc) -> Tuple[Any, Any, Any]:
     """Run one stage program: the scanned tick loop all backends share.
 
+    The per-tick ``(idx, v_idx, valid)`` coordinates are the traced mirror
+    of the schedule backend's ``tick_coords``:
+
+    * ``v == 1`` (``gpipe-1f1b``, ``zero-bubble-h1``, interleaved at one
+      virtual stage): the classic diagonal ``idx = t - p``;
+    * ``v > 1`` (``interleaved-1f1b``): wave index ``u = t - p`` decomposes
+      into round ``r = u // d_p`` and offset ``q = u % d_p``; the device
+      runs local virtual stage ``v_idx = r % v`` on item
+      ``(r // v) * d_p + q`` — items advance through the ``v * d_p``
+      virtual-stage ring in round-robin groups of ``d_p``, and the stream
+      ppermute closes into a full ring.
+
     Returns the final ``(streams, state, acc)``; ``acc`` is psummed over
     the pipeline axis when ``program.psum_acc`` (only the last stage folds
     real output, the rest contribute zeros / stale rows).
     """
-    n, d_p = program.n_items, program.d_p
+    n, d_p, v = program.n_items, program.d_p, program.v
+    n_groups = program.spec.n_groups(n, d_p)
 
     def _tick(carry, t):
         streams, state, acc = carry
         p_idx = jax.lax.axis_index(program.data_axis)
-        idx = t - p_idx
-        valid = (idx >= 0) & (idx < n)
+        idx, v_idx, valid = schedule_tick_coords(
+            t, p_idx, n=n, d_p=d_p, v=v, n_groups=n_groups)
         idxc = jnp.clip(idx, 0, n - 1)
         tc = TickContext(t=t, idx=idx, idxc=idxc, valid=valid, p_idx=p_idx,
-                         n_items=n, d_p=d_p)
+                         n_items=n, d_p=d_p, v_idx=v_idx, v=v)
         streams, state, acc = program.tick(tc, streams, state, acc)
-        streams = ppermute_streams(streams, program.data_axis, d_p)
+        streams = ppermute_streams(streams, program.data_axis, d_p,
+                                   ring=(v > 1))
         return (streams, state, acc), None
 
     (streams, state, acc), _ = jax.lax.scan(

@@ -54,6 +54,19 @@ class PipelineGeometry:
     # resident (ZeRO-2-like compute path, ZeRO-3 storage) — the first
     # beyond-paper optimization, see EXPERIMENTS.md §Perf.
     zero3_mode: str = "per_tick"
+    # schedule backend (core/schedule.py registry name) + virtual stages per
+    # device. v_stages > 1 (interleaved-1f1b) splits each stage's layer
+    # block into v virtual stages riding the same ppermute ring — it must
+    # divide layers_per_stage and is baked into the parameter stacking
+    # (sharding.interleaved_layer_order), so it is fixed per training run.
+    schedule: str = "gpipe-1f1b"
+    v_stages: int = 1
+
+    def __post_init__(self) -> None:
+        if self.v_stages < 1 or self.layers_per_stage % self.v_stages:
+            raise ValueError(
+                f"v_stages={self.v_stages} must divide "
+                f"layers_per_stage={self.layers_per_stage}")
 
 
 def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
@@ -105,10 +118,15 @@ def _make_model(cfg: ArchConfig, geom: PipelineGeometry,
 
 def _run_stage_layers(model: DecoderLM, geom: PipelineGeometry,
                       stage_params, shard_dims, x, ctx: LayerCtx, *,
-                      seg, pos, ctx_len, windows, active, model_axis: str):
+                      seg, pos, ctx_len, windows, active, model_axis: str,
+                      n_layers: Optional[int] = None,
+                      l_ckpt: Optional[int] = None):
     """This backend's layer body under the executor's remat split:
     ZeRO-3 gather (per-tick mode), ``layer_apply`` with the context carry,
-    and ``active`` masking padded layer slots into identity."""
+    and ``active`` masking padded layer slots into identity.
+
+    ``n_layers``/``l_ckpt`` override the geometry defaults when the tick
+    runs a single virtual-stage block instead of the whole stage."""
 
     def layer_body(x, per_layer):
         lp, w, act, lctx = per_layer
@@ -125,7 +143,8 @@ def _run_stage_layers(model: DecoderLM, geom: PipelineGeometry,
 
     return executor.run_stage_layers(
         layer_body, x, (stage_params, windows, active, ctx),
-        l_ckpt=geom.l_ckpt, n_layers=geom.layers_per_stage)
+        l_ckpt=geom.l_ckpt if l_ckpt is None else l_ckpt,
+        n_layers=(geom.layers_per_stage if n_layers is None else n_layers))
 
 
 def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
@@ -147,15 +166,21 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
     """
     model = _make_model(cfg, geom, model_axis)
     s = cfg.spec
-    L_pad = geom.d_p * geom.layers_per_stage
-    win_flat = [cfg.layer_window(i) for i in range(s.n_layers)]
-    win_flat += [0] * (L_pad - s.n_layers)
-    windows_all = jnp.asarray(win_flat, jnp.int32).reshape(
-        geom.d_p, geom.layers_per_stage)
+    v_st, L_s = geom.v_stages, geom.layers_per_stage
+    L_v = L_s // v_st
+    L_pad = geom.d_p * L_s
     import numpy as _np
-    active_all = jnp.asarray(
-        (_np.arange(L_pad) < s.n_layers).reshape(geom.d_p,
-                                                 geom.layers_per_stage))
+    win_flat = _np.asarray([cfg.layer_window(i) for i in range(s.n_layers)]
+                           + [0] * (L_pad - s.n_layers), _np.int32)
+    act_flat = _np.arange(L_pad) < s.n_layers
+    if v_st > 1:
+        # virtual-stage placement: device p's local block (j, l) holds
+        # global layer (j*d_p + p)*L_v + l — same order the params stack in
+        from .sharding import interleaved_layer_order
+        order = interleaved_layer_order(geom.d_p, L_s, v_st)
+        win_flat, act_flat = win_flat[order], act_flat[order]
+    windows_all = jnp.asarray(win_flat.reshape(geom.d_p, L_s))
+    active_all = jnp.asarray(act_flat.reshape(geom.d_p, L_s))
 
     def loss_local(params, batch):
         p_idx = jax.lax.axis_index(data_axis)
@@ -197,12 +222,40 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
                 x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
             x_in = jnp.where(tc.is_first_stage, x_emb, x_recv)
 
-            ctx = executor.reset_ssm_at_boundary(ctx, ctx_len)
+            if v_st == 1:
+                ctx = executor.reset_ssm_at_boundary(ctx, ctx_len)
+                x_out, ctx = _run_stage_layers(
+                    model, geom, stage_params, shard_dims, x_in, ctx,
+                    seg=seg, pos=pos, ctx_len=ctx_len, windows=windows,
+                    active=active, model_axis=model_axis)
+            else:
+                # interleaved-1f1b: this tick runs ONE virtual stage — the
+                # L_v-layer block (and its context-carry slice) at
+                # tc.v_idx; everything else on the device stays untouched.
+                start = tc.v_idx * L_v
 
-            x_out, ctx = _run_stage_layers(
-                model, geom, stage_params, shard_dims, x_in, ctx,
-                seg=seg, pos=pos, ctx_len=ctx_len, windows=windows,
-                active=active, model_axis=model_axis)
+                def _slc(t):
+                    return jax.lax.dynamic_slice_in_dim(t, start, L_v, 0)
+
+                ctx_v = jax.tree.map(
+                    lambda t: _slc(t) if t is not None else None, ctx,
+                    is_leaf=lambda t: t is None)
+                ctx_v = executor.reset_ssm_at_boundary(ctx_v, ctx_len)
+                # spread the solver's per-stage remat budget over the v
+                # virtual blocks: ceil keeps total checkpointed layers >=
+                # l_ckpt (memory-safe direction; over-remat bounded by
+                # v - 1 layers, NOT v * l_ckpt)
+                x_out, ctx_v = _run_stage_layers(
+                    model, geom, jax.tree.map(_slc, stage_params),
+                    shard_dims, x_in, ctx_v,
+                    seg=seg, pos=pos, ctx_len=ctx_len,
+                    windows=_slc(windows), active=_slc(active),
+                    model_axis=model_axis, n_layers=L_v,
+                    l_ckpt=min(-(-geom.l_ckpt // v_st), L_v))
+                ctx = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                        full, new, start, 0) if full is not None else None,
+                    ctx, ctx_v, is_leaf=lambda t: t is None)
 
             h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
             if mode == "train":
@@ -223,7 +276,8 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
         else:
             acc0 = (jnp.zeros((n, cap_loc), jnp.int32), jnp.float32(0))
         program = StageProgram(n_items=n, d_p=d_p, data_axis=data_axis,
-                               tick=tick, psum_acc=(mode == "train"))
+                               tick=tick, psum_acc=(mode == "train"),
+                               schedule=geom.schedule, v=geom.v_stages)
         xf, ctxf, acc = executor.run_stage_program(program, x0, ctx0, acc0)
         if mode == "train":
             # only the last stage accumulated loss; psum'd by the executor

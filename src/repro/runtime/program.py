@@ -1,14 +1,15 @@
 """StageProgram IR: the backend-independent description of one scanned
-1F1B stage program.
+pipeline stage program.
 
 Every EPP executable in this repo — decoder-only training/prefill
 (``runtime/pipeline.py``), pipelined encoder-decoder training
 (``runtime/encdec_pipeline.py``) and pipelined decode
 (``runtime/serve_step.py``) — is the *same* machine: a ``lax.scan`` over
-``n_items + d_p - 1`` ticks in which every pipeline stage
+the schedule backend's tick count in which every pipeline stage
 
-  1. selects its work item for this tick (``idx = t - p_idx``; out-of-range
-     ticks are bubbles computing on masked garbage),
+  1. selects its work item for this tick (the schedule backend's
+     ``tick_coords`` mapping; out-of-range ticks are bubbles computing on
+     masked garbage),
   2. runs its stage body (inject first-stage input, advance the per-stage
      state — KV/SSM context carry or decode cache),
   3. folds the last stage's output into an accumulator (streaming CE,
@@ -17,15 +18,26 @@ Every EPP executable in this repo — decoder-only training/prefill
      left-to-right ``ppermute``.
 
 ``StageProgram`` captures exactly that decomposition; the engine that runs
-it lives in ``runtime/executor.py``. Backends differ only in their ``tick``
-hook — which streams flow between stages (one hidden state; an
-(h_enc, h_dec) pair), what the per-stage state is, and what gets folded.
+it lives in ``runtime/executor.py``. Backends differ along two independent
+axes:
+
+* the ``tick`` hook — which streams flow between stages (one hidden state;
+  an (h_enc, h_dec) pair), what the per-stage state is, what gets folded;
+* the **schedule backend** (``schedule`` + ``v``, resolved against
+  ``repro.core.schedule``'s registry) — how ticks map to ``(item,
+  virtual stage)`` pairs: ``gpipe-1f1b`` (the classic ``idx = t - p``
+  diagonal), ``interleaved-1f1b`` (each device hosts ``v`` virtual stages
+  riding the same ppermute ring), ``zero-bubble-h1`` (1F1B tick shape; the
+  B-grad/W-grad split lives in the solver's bubble model — see
+  runtime/README.md).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Any, Callable
+
+from repro.core.schedule import get_schedule
 
 __all__ = ["TickContext", "StageProgram"]
 
@@ -34,25 +46,35 @@ __all__ = ["TickContext", "StageProgram"]
 class TickContext:
     """Per-tick coordinates handed to the backend's ``tick`` hook.
 
-    ``t``/``idx``/``idxc``/``valid``/``p_idx`` are traced scalars inside the
-    scan; ``n_items``/``d_p`` are the static geometry they derive from.
+    ``t``/``idx``/``idxc``/``valid``/``p_idx``/``v_idx`` are traced scalars
+    inside the scan (``v_idx`` stays the python int 0 when ``v == 1`` so
+    single-virtual-stage programs trace exactly as before);
+    ``n_items``/``d_p``/``v`` are the static geometry they derive from.
     """
 
-    t: Any            # global tick index in [0, n_items + d_p - 1)
-    idx: Any          # this stage's item index: t - p_idx (may be out of range)
+    t: Any            # global tick index in [0, n_ticks)
+    idx: Any          # this stage's item index for this tick (may be invalid)
     idxc: Any         # idx clipped to [0, n_items) — safe to gather with
     valid: Any        # bool: idx in range (False => bubble tick)
     p_idx: Any        # this stage's index along the pipeline ("data") axis
     n_items: int      # chunks (train/prefill) or microbatches (decode)
-    d_p: int          # pipeline depth
+    d_p: int          # pipeline depth (devices)
+    v_idx: Any = 0    # local virtual-stage index in [0, v)
+    v: int = 1        # virtual stages per device
 
     @property
     def is_first_stage(self):
-        return self.p_idx == 0
+        """First *virtual* stage of the pipeline (stream injection point)."""
+        if self.v == 1:
+            return self.p_idx == 0
+        return (self.p_idx == 0) & (self.v_idx == 0)
 
     @property
     def is_last_stage(self):
-        return self.p_idx == self.d_p - 1
+        """Last *virtual* stage of the pipeline (output folding point)."""
+        if self.v == 1:
+            return self.p_idx == self.d_p - 1
+        return (self.p_idx == self.d_p - 1) & (self.v_idx == self.v - 1)
 
 
 @dataclass(frozen=True)
@@ -62,11 +84,19 @@ class StageProgram:
     tick(tc, streams, state, acc) -> (streams, state, acc)
       * ``streams``: the pytree that rides the stage-to-stage ppermute
         (hidden state(s) of the chunk in flight). The engine permutes every
-        leaf left-to-right after the hook returns.
+        leaf left-to-right after the hook returns — around the full ring
+        when ``v > 1`` (the wrap carries a chunk from device ``d_p - 1``
+        back to device 0's next virtual stage).
       * ``state``: per-stage resident state that does NOT move between
-        stages (split-chunk KV/SSM context carry, decode caches).
+        stages (split-chunk KV/SSM context carry, decode caches). With
+        ``v > 1`` its leaves carry one slice per virtual stage.
       * ``acc``: the output accumulator (streaming-CE partial sums, decoded
         ids). Psummed over the pipeline axis at the end when ``psum_acc``.
+
+    ``schedule``/``v`` name the schedule backend in
+    ``repro.core.schedule``'s registry; the engine mirrors its
+    ``tick_coords`` mapping in traced arithmetic and runs ``spec.
+    scan_ticks(n_items, d_p)`` ticks.
     """
 
     n_items: int
@@ -74,7 +104,13 @@ class StageProgram:
     data_axis: str
     tick: Callable[..., Any]
     psum_acc: bool = True
+    schedule: str = "gpipe-1f1b"
+    v: int = 1
+
+    @property
+    def spec(self):
+        return get_schedule(self.schedule, self.v)
 
     @property
     def n_ticks(self) -> int:
-        return self.n_items + self.d_p - 1
+        return self.spec.scan_ticks(self.n_items, self.d_p)

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["EP_PATH_RE", "stack_stages", "stack_grouped_stages",
-           "stage_active_mask",
+           "stage_active_mask", "interleaved_layer_order", "restack_elastic",
            "unstack_stages", "zero3_dim", "shard_dim_tree",
            "stage_param_specs", "head_param_specs", "batch_specs",
            "tree_paths_map", "mesh_axis_names", "shard_map_compat",
@@ -72,26 +72,59 @@ def tree_paths_map(fn, tree):
         lambda path, leaf: fn("/".join(_name(k) for k in path), leaf), tree)
 
 
-def _stack_one(layers_tree, n_stages: int, L_ps: int):
-    """[L, ...] leaves -> [n_stages, L_ps, ...], zero-padded layer slots."""
+def _stack_one(layers_tree, n_stages: int, L_ps: int, order=None):
+    """[L, ...] leaves -> [n_stages, L_ps, ...], zero-padded layer slots.
+    ``order`` optionally permutes the padded layer list before reshaping
+    (interleaved virtual-stage placement)."""
     def _re(x):
         pad = n_stages * L_ps - x.shape[0]
         if pad:
             x = jnp.concatenate(
                 [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+        if order is not None:
+            x = x[order]
         return x.reshape(n_stages, L_ps, *x.shape[1:])
     return jax.tree.map(_re, layers_tree)
 
 
-def stack_stages(layers_tree, d_p: int, n_layers: int):
+def interleaved_layer_order(d_p: int, layers_per_stage: int, v: int):
+    """Padded-layer permutation for ``interleaved-1f1b`` stacking.
+
+    Global virtual stage ``s = j * d_p + p`` (device ``p`` hosting local
+    virtual stage ``j``) owns the contiguous padded layers
+    ``[s * L_v, (s + 1) * L_v)`` where ``L_v = layers_per_stage / v`` — the
+    Megatron-style round-robin placement that shortens the pipeline fill by
+    ``v``. Returns ``order`` with
+    ``stacked[p, j * L_v + l] = layers[order[p * L_ps + j * L_v + l]]``.
+    Identity at ``v == 1``.
+    """
+    import numpy as np
+    if layers_per_stage % v:
+        raise ValueError(
+            f"v={v} must divide layers_per_stage={layers_per_stage}")
+    L_v = layers_per_stage // v
+    p_idx, j, l = np.meshgrid(np.arange(d_p), np.arange(v), np.arange(L_v),
+                              indexing="ij")
+    order = ((j * d_p + p_idx) * L_v + l).reshape(-1)
+    return order
+
+
+def stack_stages(layers_tree, d_p: int, n_layers: int, v: int = 1):
     """[L, ...] leaves -> [d_p, ceil(L/d_p), ...], zero-padded.
 
     Non-divisible depths (gemma3: 26 over 16 stages) pad with inert layer
     slots; :func:`stage_active_mask` marks them and the executor turns the
     padded layers into identity (the compute waste is real and surfaces in
     the roofline's MODEL_FLOPS ratio — DESIGN.md §2.1).
+
+    ``v > 1`` stacks for ``interleaved-1f1b``: device ``p``'s ``v`` local
+    virtual-stage blocks hold the layers of global virtual stages
+    ``j * d_p + p`` (:func:`interleaved_layer_order`), so the layer order a
+    chunk traverses around the ring is the model's own.
     """
-    return _stack_one(layers_tree, d_p, -(-n_layers // d_p))
+    L_ps = -(-n_layers // d_p)
+    order = interleaved_layer_order(d_p, L_ps, v) if v > 1 else None
+    return _stack_one(layers_tree, d_p, L_ps, order)
 
 
 def stack_grouped_stages(groups, L_ps: int):
@@ -112,17 +145,57 @@ def stack_grouped_stages(groups, L_ps: int):
     return out
 
 
-def stage_active_mask(d_p: int, n_layers: int):
-    """[d_p, ceil(L/d_p)] bool: True where a real layer lives."""
+def stage_active_mask(d_p: int, n_layers: int, v: int = 1):
+    """[d_p, ceil(L/d_p)] bool: True where a real layer lives (under the
+    ``v``-way interleaved placement when ``v > 1``)."""
     import numpy as np
     L_ps = -(-n_layers // d_p)
     flat = np.arange(d_p * L_ps) < n_layers
+    if v > 1:
+        flat = flat[interleaved_layer_order(d_p, L_ps, v)]
     return jnp.asarray(flat.reshape(d_p, L_ps))
 
 
-def unstack_stages(layers_tree, n_layers: int):
+def restack_elastic(saved, new_dp: int, new_ls: int, n_layers: int,
+                    v: int = 1):
+    """Adapt one stage-stacked ``[d_p_old, L_s_old, ...]`` array to a new
+    pipeline depth (elastic checkpoint reshard): un-permute the saved
+    layout back to model layer order (interleaved placement included),
+    strip the old padding, re-pad and re-stack for ``(new_dp, new_ls)``
+    under the same ``v``. Host-side numpy; returns ``None`` when the
+    layout cannot be adapted (fewer slots than layers, or ``v`` not
+    dividing a block size) — the caller falls back to fresh init.
+    """
+    import numpy as np
+    d_p_old, L_s_old = saved.shape[0], saved.shape[1]
+    if (new_dp * new_ls < n_layers or L_s_old % max(v, 1)
+            or new_ls % max(v, 1)):
+        return None
+    flat = np.asarray(saved).reshape(d_p_old * L_s_old, *saved.shape[2:])
+    if v > 1:
+        order = interleaved_layer_order(d_p_old, L_s_old, v)
+        inv = np.empty_like(order)
+        inv[order] = np.arange(order.size)
+        flat = flat[inv]
+    flat = flat[:n_layers]
+    pad = new_dp * new_ls - n_layers
+    if pad:
+        flat = np.concatenate(
+            [flat, np.zeros((pad, *flat.shape[1:]), flat.dtype)])
+    if v > 1:
+        flat = flat[interleaved_layer_order(new_dp, new_ls, v)]
+    return flat.reshape(new_dp, new_ls, *flat.shape[1:])
+
+
+def unstack_stages(layers_tree, n_layers: int, v: int = 1):
     def _re(x):
         flat = x.reshape(x.shape[0] * x.shape[1], *x.shape[2:])
+        if v > 1:
+            import numpy as np
+            order = interleaved_layer_order(x.shape[0], x.shape[1], v)
+            inv = np.empty_like(order)
+            inv[order] = np.arange(order.size)
+            flat = flat[inv]
         return flat[:n_layers]
     return jax.tree.map(_re, layers_tree)
 

@@ -49,7 +49,9 @@ def _pad_vocab(w: jnp.ndarray, d_s: int) -> jnp.ndarray:
 def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
                   ctx_cap: int, l_ckpt: int = 0,
                   compute_dtype=jnp.bfloat16,
-                  zero3_mode: str = "per_tick") -> PipelineGeometry:
+                  zero3_mode: str = "per_tick",
+                  schedule: str = "gpipe-1f1b",
+                  v_stages: int = 1) -> PipelineGeometry:
     pod, data, model = mesh_axis_names(mesh)
     d_p = mesh.shape[data]
     d_s = mesh.shape[model]
@@ -59,19 +61,26 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
         layers_per_stage=-(-cfg.spec.n_layers // d_p),
         policy=sp.choose_policy(cfg, d_s),
         compute_dtype=compute_dtype,
-        zero3_mode=zero3_mode)
+        zero3_mode=zero3_mode,
+        schedule=schedule,
+        v_stages=v_stages)
 
 
 def prepare_params(cfg: ArchConfig, raw_params: Dict, mesh: Mesh,
-                   param_dtype=jnp.bfloat16) -> Dict:
-    """Model-zoo params -> executor layout (host-side, un-sharded arrays)."""
+                   param_dtype=jnp.bfloat16, v_stages: int = 1) -> Dict:
+    """Model-zoo params -> executor layout (host-side, un-sharded arrays).
+
+    ``v_stages > 1`` bakes the interleaved-1f1b virtual-stage placement
+    into the stage stacking (sharding.interleaved_layer_order) — the layout
+    is schedule-shaped, which is why the schedule leads
+    ``ExecutionPlan.bucket_key()`` and is pinned per training run."""
     pod, data, model = mesh_axis_names(mesh)
     d_p, d_s = mesh.shape[data], mesh.shape[model]
     cast = lambda t: jax.tree.map(  # noqa: E731
         lambda x: x.astype(param_dtype), t)
     out = {
         "stages": stack_stages(cast(raw_params["layers"]), d_p,
-                               cfg.spec.n_layers),
+                               cfg.spec.n_layers, v=v_stages),
         "embed": _pad_vocab(cast(raw_params["embed"]), d_s),
         "final_norm": cast(raw_params["final_norm"]),
     }
@@ -127,7 +136,8 @@ class TrainStepBuilder:
     def init_params(self, key) -> Dict:
         model = DecoderLM(self.cfg)
         raw = model.init(key, jnp.float32)
-        return prepare_params(self.cfg, raw, self.mesh, self.param_dtype)
+        return prepare_params(self.cfg, raw, self.mesh, self.param_dtype,
+                              v_stages=self.geom.v_stages)
 
     def abstract_params(self, key=None) -> Dict:
         key = key if key is not None else jax.random.PRNGKey(0)

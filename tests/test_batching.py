@@ -1,0 +1,125 @@
+"""Invariant tests for ``data/batching.py::materialize_chunks`` — the chunk
+buffers the executor reads. The contracts under test are the module's own
+conventions:
+
+* ``targets`` are next-token ids across the WHOLE sequence: a non-tail
+  slice's last token targets the next slice's first token;
+* padding positions (and a tail's final token) carry ``seg = -1`` /
+  ``target = -1``;
+* ``pos`` is the position within the OWNING sequence — split slices
+  continue from their context offset;
+* ``ctx_len[k]`` equals the chunk's context length ``C_k`` (0 resets the
+  context buffers / SSM state implicitly).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.plan import Chunk, ChunkKind, Slice
+from repro.data.batching import materialize_chunks
+
+
+def _split_seq_chunks(seq_id, length, cuts):
+    """Chunks for one sequence split at ``cuts`` offsets (causal order)."""
+    bounds = [0] + list(cuts) + [length]
+    chunks = []
+    for i in range(len(bounds) - 1):
+        start, end = bounds[i], bounds[i + 1]
+        is_tail = i == len(bounds) - 2
+        sl = Slice(seq_id=seq_id, start=start, length=end - start,
+                   is_tail=is_tail)
+        chunks.append(Chunk(kind=ChunkKind.SPLIT, context=start,
+                            slices=(sl,)))
+    return chunks
+
+
+def test_cross_slice_next_token_targets():
+    """A non-tail slice's LAST token must target the NEXT slice's first
+    token — the token-level-PP dependency the split-chunk KV carry exists
+    for."""
+    toks = np.arange(100, 110, dtype=np.int32)      # tokens are 100..109
+    chunks = _split_seq_chunks(0, 10, cuts=(4, 8))  # slices [0,4) [4,8) [8,10)
+    cb = materialize_chunks(chunks, {0: toks}, cap=8)
+    # slice 0: tokens 100..103 target 101..104 — the last target (104) IS
+    # the first token of slice 1
+    np.testing.assert_array_equal(cb.tokens[0, :4], [100, 101, 102, 103])
+    np.testing.assert_array_equal(cb.targets[0, :4], [101, 102, 103, 104])
+    assert cb.targets[0, 3] == cb.tokens[1, 0]
+    # slice 1 likewise crosses into slice 2
+    np.testing.assert_array_equal(cb.targets[1, :4], [105, 106, 107, 108])
+    assert cb.targets[1, 3] == cb.tokens[2, 0]
+    # tail slice: last REAL token has no next token -> target -1
+    np.testing.assert_array_equal(cb.tokens[2, :2], [108, 109])
+    np.testing.assert_array_equal(cb.targets[2, :2], [109, -1])
+
+
+def test_padding_is_fully_masked():
+    """Beyond the packed tokens every position is seg = -1 / target = -1
+    (the executor's CE mask and the bucket-padding contract)."""
+    toks = {0: np.arange(6, dtype=np.int32),
+            1: np.arange(50, 53, dtype=np.int32)}
+    ch = Chunk(kind=ChunkKind.BATCHED, context=0,
+               slices=(Slice(0, 0, 6, True), Slice(1, 0, 3, True)))
+    cb = materialize_chunks([ch], toks, cap=16)
+    used = 9
+    np.testing.assert_array_equal(cb.seg[0, used:], -1)
+    np.testing.assert_array_equal(cb.targets[0, used:], -1)
+    np.testing.assert_array_equal(cb.tokens[0, used:], 0)
+    np.testing.assert_array_equal(cb.pos[0, used:], 0)
+    # packed slices get consecutive segment ids in pack order
+    np.testing.assert_array_equal(cb.seg[0, :6], 0)
+    np.testing.assert_array_equal(cb.seg[0, 6:9], 1)
+
+
+def test_pos_continues_from_context_offset():
+    """``pos`` is the within-sequence position: a split slice starting at
+    offset C continues C, C+1, ... (RoPE/window masks depend on it)."""
+    toks = np.arange(12, dtype=np.int32)
+    chunks = _split_seq_chunks(0, 12, cuts=(5,))
+    cb = materialize_chunks(chunks, {0: toks}, cap=8)
+    np.testing.assert_array_equal(cb.pos[0, :5], np.arange(5))
+    np.testing.assert_array_equal(cb.pos[1, :7], np.arange(5, 12))
+
+
+def test_hybrid_chunk_pos_and_segments():
+    """A hybrid chunk: tail slice (segment 0, pos continuing from its
+    context) packed with shorts (segments 1.., pos restarting at 0)."""
+    toks = {7: np.arange(40, dtype=np.int32),
+            3: np.arange(200, 204, dtype=np.int32)}
+    tail = Slice(seq_id=7, start=32, length=8, is_tail=True)
+    short = Slice(seq_id=3, start=0, length=4, is_tail=True)
+    ch = Chunk(kind=ChunkKind.HYBRID, context=32, slices=(tail, short))
+    cb = materialize_chunks([ch], toks, cap=16)
+    np.testing.assert_array_equal(cb.pos[0, :8], np.arange(32, 40))
+    np.testing.assert_array_equal(cb.pos[0, 8:12], np.arange(4))
+    np.testing.assert_array_equal(cb.seg[0, :8], 0)   # s0 IS segment 0
+    np.testing.assert_array_equal(cb.seg[0, 8:12], 1)
+    # the tail's last token ends the sequence; the short's last token too
+    assert cb.targets[0, 7] == -1
+    assert cb.targets[0, 11] == -1
+    # non-final tokens still target the next token of their own sequence
+    np.testing.assert_array_equal(cb.targets[0, :7], np.arange(33, 40))
+    np.testing.assert_array_equal(cb.targets[0, 8:11], [201, 202, 203])
+
+
+def test_ctx_len_semantics():
+    """``ctx_len[k]`` = C_k: 0 for batched chunks and sequence starts
+    (implicit buffer/SSM reset), the slice's start offset for split/hybrid
+    chunks."""
+    toks = {0: np.arange(20, dtype=np.int32),
+            1: np.arange(60, 64, dtype=np.int32)}
+    chunks = _split_seq_chunks(0, 20, cuts=(8, 14))
+    batched = Chunk(kind=ChunkKind.BATCHED, context=0,
+                    slices=(Slice(1, 0, 4, True),))
+    cb = materialize_chunks(chunks + [batched], toks, cap=8)
+    np.testing.assert_array_equal(cb.ctx_len, [0, 8, 14, 0])
+
+
+def test_overflow_asserts():
+    """A slice that does not fit the capacity is a materialization bug, not
+    silent truncation."""
+    toks = {0: np.arange(10, dtype=np.int32)}
+    ch = Chunk(kind=ChunkKind.SPLIT, context=0,
+               slices=(Slice(0, 0, 10, True),))
+    with pytest.raises(AssertionError):
+        materialize_chunks([ch], toks, cap=8)

@@ -8,6 +8,7 @@ from hypothesis import strategies as st
 
 from repro.core import (ChunkKind, ClusterSpec, CostModel, ModelSpec,
                         chunk_sequences)
+from repro.core.chunking import seq_workload
 
 
 def _cm(d_p=4, d_s=4):
@@ -98,6 +99,120 @@ def test_mesh_matches_paper_example():
     assert s13k[-1].length == 13000 - mesh[0] - mesh[1]
     # the 5000 sequence is shorter than mesh[0] -> not split
     assert len(per_seq[3]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 line-14 loosening is per-placement (regression: a single outlier
+# placement used to raise T_t PERMANENTLY, relaxing the time threshold for
+# every subsequent short and degrading workload balance).
+# ---------------------------------------------------------------------------
+
+def _chunk_time(cm, chunk):
+    """Summed member workloads of one chunk (s0 at its context, shorts at 0)."""
+    tot = 0.0
+    for i, s in enumerate(chunk.slices):
+        ctx = chunk.context if (i == 0 and
+                                chunk.kind is not ChunkKind.BATCHED) else 0
+        tot += seq_workload(cm, s.length, ctx)
+    return tot
+
+
+def _pack_times(cm, res):
+    """Packing-bucket times: hybrid/tail + batched chunks (mesh slices are
+    fixed by line 1 and excluded)."""
+    return [_chunk_time(cm, c) for c in res.chunks
+            if c.kind is ChunkKind.BATCHED or c.slices[0].is_tail]
+
+
+def _pack_old_loosening(cm, lengths, k):
+    """FROZEN pre-fix packing loop (verbatim semantics: line 14 raises t_t
+    permanently). Returns (bucket times, final t_t) — the quality baseline
+    the fixed packer must never be worse than."""
+    from repro.core.chunking import _Bucket, _mesh_thresholds
+    from repro.core.plan import Slice
+    mesh, t_t, t_m = _mesh_thresholds(cm, max(lengths), k, None)
+    order = sorted(range(len(lengths)), key=lambda i: -lengths[i])
+    long_tails, shorts = [], []
+    for sid in order:
+        ln = lengths[sid]
+        if k == 1 or ln <= mesh[0]:
+            shorts.append(Slice(sid, 0, ln, True))
+            continue
+        off = 0
+        for m_len in mesh[:-1]:
+            if ln - off <= m_len:
+                break
+            off += m_len
+        long_tails.append((Slice(sid, off, ln - off, True), off))
+    buckets = []
+    for tail, ctx in long_tails:
+        b = _Bucket(tail=tail, tail_context=ctx)
+        b.tot_time = seq_workload(cm, tail.length, ctx)
+        b.tot_tokens = tail.length
+        buckets.append(b)
+    shorts.sort(key=lambda s: -seq_workload(cm, s.length))
+    n_forced = 0
+    for s in shorts:
+        t_s = seq_workload(cm, s.length)
+        placed = False
+        while not placed:
+            min_tok = min((b.tot_tokens for b in buckets), default=t_m + 1)
+            if min_tok + s.length > t_m:
+                nb = _Bucket()
+                nb.add(s, t_s)
+                buckets.append(nb)
+                placed = True
+                break
+            for b in sorted(buckets, key=lambda b: b.metric):
+                if (b.tot_time + t_s <= t_t + 1e-18
+                        and b.tot_tokens + s.length <= t_m):
+                    b.add(s, t_s)
+                    placed = True
+                    break
+            if not placed:
+                feas = [b for b in buckets if b.tot_tokens + s.length <= t_m]
+                if not feas:
+                    nb = _Bucket()
+                    nb.add(s, t_s)
+                    buckets.append(nb)
+                    placed = True
+                else:
+                    n_forced += 1
+                    t_t = min(b.tot_time for b in feas) + t_s  # THE BUG
+    return [b.tot_time for b in buckets], t_t, n_forced
+
+
+def test_loosening_is_per_placement():
+    """Skewed batch that forces loosened placements: T_t must come back
+    unchanged (the old code returned — and kept packing against — the
+    drifted threshold), and balance must be no worse than the old loop."""
+    cm = _cm()
+    lengths = [65536, 50000] + [1500] * 60
+    k = 3
+    old_times, old_t_t, n_forced = _pack_old_loosening(cm, lengths, k)
+    assert n_forced > 0, "fixture must exercise the forced-placement branch"
+    res = chunk_sequences(cm, lengths, k)
+    t_t0 = seq_workload(cm, res.mesh[0], 0)  # Alg. 1 line-1 value
+    assert old_t_t > t_t0 + 1e-15            # old code drifted ...
+    assert res.t_t == pytest.approx(t_t0, rel=0, abs=0.0)  # ... fixed doesn't
+    new_times = _pack_times(cm, res)
+    assert max(new_times) <= max(old_times) + 1e-15
+    # forced placements target the cheapest feasible bucket, so the two
+    # hybrid buckets end up time-balanced
+    import numpy as np
+    assert float(np.std(new_times)) <= float(np.std(old_times)) + 1e-15
+
+
+def test_no_threshold_drift_across_skew_sweep():
+    """The returned T_t equals the line-1 mesh threshold for every skew —
+    loosening never persists."""
+    cm = _cm()
+    for k in (2, 3, 4):
+        for shorts in ([512] * 30, [4096] * 20, list(range(256, 8192, 512))):
+            lengths = [70000, 40000] + shorts
+            res = chunk_sequences(cm, lengths, k)
+            expect = seq_workload(cm, res.mesh[0], 0) if res.mesh else 0.0
+            assert res.t_t == pytest.approx(expect, rel=0, abs=0.0), (k, len(shorts))
 
 
 @given(st.lists(st.integers(min_value=16, max_value=30000),

@@ -1,0 +1,114 @@
+"""CompileCache regression tests: registry lifetime (no process-wide
+executable leak), live-bucket vs recompile accounting, per-key stat pruning
+on eviction, and clear() semantics."""
+
+import gc
+
+import pytest
+
+from repro.runtime.compile_cache import (CompileCache, global_cache_stats,
+                                         reset_global_caches)
+
+
+def test_registry_releases_dead_caches():
+    """The module-global registry must hold caches weakly: a cache (and the
+    executables it pins) dies with its last strong reference instead of
+    accumulating across repeated in-process train/serve runs."""
+    reset_global_caches()
+
+    class Artifact:  # stand-in for a compiled executable
+        pass
+
+    alive = []
+
+    def one_run():
+        cache = CompileCache(name="run-cache")
+        art = Artifact()
+        alive.append(__import__("weakref").ref(art))
+        cache.get(("bucket", 1), lambda: art)
+        assert global_cache_stats()["caches"]["run-cache"]["misses"] == 1
+        # cache goes out of scope here — nothing else references it
+
+    for _ in range(3):
+        one_run()
+    gc.collect()
+    stats = global_cache_stats()
+    assert "run-cache" not in stats["caches"]
+    assert stats["misses"] == 0 and stats["buckets_live"] == 0
+    # the artifacts themselves were freed with their cache
+    assert all(ref() is None for ref in alive)
+
+
+def test_eviction_prunes_per_key_stats():
+    cache = CompileCache(name="prune", capacity=2)
+    for key in (1, 2, 3, 4):
+        cache.get(key, lambda k=key: k)
+    assert len(cache) == 2
+    # only the RESIDENT buckets keep a per-key compile-seconds entry
+    assert set(cache.stats.compile_seconds_per_key) == {repr(3), repr(4)}
+    assert cache.stats.evictions == 2
+    assert cache.stats.buckets_live == 2
+
+
+def test_live_buckets_vs_recompiles():
+    """A bounded cache that evicts and recompiles a key must not report the
+    recompile as a new live bucket (the old ``buckets_compiled = misses``
+    defect)."""
+    cache = CompileCache(name="churn", capacity=1)
+    cache.get("a", lambda: "A")
+    cache.get("b", lambda: "B")   # evicts a
+    cache.get("a", lambda: "A")   # recompile of a, evicts b
+    s = cache.stats
+    assert s.misses == 3
+    assert s.recompiles == 1
+    assert s.buckets_live == 1          # NOT 3
+    d = s.as_dict()
+    assert d["buckets_live"] == 1 and d["recompiles"] == 1
+    assert "buckets_live" in s.summary() or "buckets=1" in s.summary()
+
+
+def test_clear_keeps_or_resets_stats():
+    cache = CompileCache(name="clear")
+    cache.get(1, lambda: "x")
+    cache.get(1, lambda: "x")
+    assert cache.stats.hits == 1
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.stats.buckets_live == 0
+    assert cache.stats.compile_seconds_per_key == {}
+    assert cache.stats.hits == 1 and cache.stats.misses == 1  # history kept
+    # compile history survives a stats-keeping clear: rebuilding a key
+    # compiled before the clear is still a recompile
+    cache.get(1, lambda: "x")
+    assert cache.stats.recompiles == 1
+    cache.clear(reset_stats=True)
+    assert cache.stats.hits == 0 and cache.stats.misses == 0
+    assert cache.stats.compile_seconds == 0.0
+    cache.get(1, lambda: "x")   # history reset: a first compile again
+    assert cache.stats.recompiles == 0
+
+
+def test_global_stats_aggregate_new_fields():
+    reset_global_caches()
+    a = CompileCache(name="agg-a", capacity=1)
+    b = CompileCache(name="agg-b")
+    a.get(1, lambda: 1)
+    a.get(2, lambda: 2)   # evict 1
+    a.get(1, lambda: 1)   # recompile
+    b.get("k", lambda: 0)
+    g = global_cache_stats()
+    assert g["buckets_live"] == 2         # one in each cache
+    assert g["recompiles"] == 1
+    assert g["evictions"] == 2
+    assert set(g["caches"]) == {"agg-a", "agg-b"}
+
+
+def test_deregister_removes_from_global_stats():
+    reset_global_caches()
+    c = CompileCache(name="tmp")
+    c.get(1, lambda: 1)
+    assert "tmp" in global_cache_stats()["caches"]
+    c.deregister()
+    assert "tmp" not in global_cache_stats()["caches"]
+    # still functions as a cache
+    assert c.get(1, lambda: 2) == 1
