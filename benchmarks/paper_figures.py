@@ -287,8 +287,8 @@ def cache_bucket_reuse(steps=24, batch=48, ctx=49152, seed=0) -> List[Dict]:
         for q in quanta:
             key = plan.bucket_key(d_s, cap_quantum=q)
             caches[q].get(key, lambda k=key: k)  # stub build
-            _sched, _v, n_slots, cap_slots = key[:4]
-            slot_tokens[q] += n_slots * cap_slots
+            # BucketKey is a NamedTuple: access by name, never position
+            slot_tokens[q] += key.n_chunks * key.cap
             row[f"bucket_q{q}"] = list(key)
         rows.append(row)
     for q in quanta:

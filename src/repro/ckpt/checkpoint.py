@@ -52,11 +52,20 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> Path:
         return self.dir / f"step_{step:08d}"
 
+    @staticmethod
+    def _parse_step(name: str) -> Optional[int]:
+        """``step_00000042`` -> 42; None for anything unparseable (editor
+        backups, ``step_tmp`` scratch dirs, a crashed save's
+        ``step_*.tmp``) — stray directories must never crash discovery."""
+        tail = name[len("step_"):]
+        return int(tail) if tail.isdigit() else None
+
     def latest_step(self) -> Optional[int]:
         steps = []
         for p in self.dir.glob("step_*"):
-            if (p / "manifest.json").exists():
-                steps.append(int(p.name.split("_")[1]))
+            step = self._parse_step(p.name)
+            if step is not None and (p / "manifest.json").exists():
+                steps.append(step)
         return max(steps) if steps else None
 
     # ------------------------------------------------------------------
@@ -105,8 +114,13 @@ class CheckpointManager:
             self._pending = None
 
     def _gc(self) -> None:
-        steps = sorted(p for p in self.dir.glob("step_*")
-                       if (p / "manifest.json").exists())
+        # order by parsed step number, not lexically: a stray
+        # step_xxx.tmp (crash between manifest write and rename) must not
+        # displace a real step from the keep window
+        steps = sorted((p for p in self.dir.glob("step_*")
+                        if self._parse_step(p.name) is not None
+                        and (p / "manifest.json").exists()),
+                       key=lambda p: self._parse_step(p.name))
         for p in steps[:-self.keep]:
             shutil.rmtree(p, ignore_errors=True)
 

@@ -4,8 +4,9 @@ Pure Python/NumPy — no JAX imports — so planning runs on CPU workers and
 overlaps with training (the paper's disaggregated solver/executor split).
 """
 
-from .plan import (Chunk, ChunkKind, ClusterSpec, Coefficients, ExecutionPlan,
-                   ModelSpec, PipelinePlan, SequenceInfo, Slice, Tick, TickOp)
+from .plan import (BucketKey, Chunk, ChunkKind, ClusterSpec, Coefficients,
+                   ExecutionPlan, ModelSpec, PipelinePlan, SequenceInfo,
+                   Slice, Tick, TickOp)
 from .costs import CostModel, analytic_coefficients, fit_coefficients
 from .chunking import ChunkingResult, chunk_sequences, seq_workload
 from .ilp import IlpResult, greedy_cover, simplex_lp, solve_cover_ilp
@@ -19,7 +20,8 @@ from .schedule import (Occupancy, PipelineSimulator, ScheduleSpec, SimResult,
 from .planner import PlannerConfig, plan_batch
 
 __all__ = [
-    "Chunk", "ChunkKind", "ClusterSpec", "Coefficients", "ExecutionPlan",
+    "BucketKey", "Chunk", "ChunkKind", "ClusterSpec", "Coefficients",
+    "ExecutionPlan",
     "ModelSpec", "PipelinePlan", "SequenceInfo", "Slice", "Tick", "TickOp",
     "CostModel", "analytic_coefficients", "fit_coefficients",
     "ChunkingResult", "chunk_sequences", "seq_workload",

@@ -18,9 +18,11 @@ import enum
 import json
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Any, Dict, Iterable, List, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 __all__ = [
+    "BucketKey",
     "ChunkKind",
     "Slice",
     "Chunk",
@@ -396,6 +398,24 @@ class PipelinePlan:
         )
 
 
+class BucketKey(NamedTuple):
+    """Compiled-executable bucket identity (``ExecutionPlan.bucket_key``).
+
+    A ``NamedTuple`` rather than a bare tuple so consumers access fields by
+    NAME — positional slicing (``key[2:4]``) broke silently when PR 2
+    reordered the tuple to lead with the schedule, and only survived by
+    luck. It is still a tuple: hashing, equality and iteration (compile
+    cache keys, test comparisons) are unchanged.
+    """
+
+    schedule: str       # schedule backend name (leads: layout is schedule-shaped)
+    v_stages: int       # virtual stages per device (interleaved-1f1b)
+    n_chunks: int       # chunk count rounded UP to chunk_rounding
+    cap: int            # chunk token capacity rounded up to d_s
+    ctx_cap: int        # context capacity rounded up to cap
+    l_ckpt: int         # uniform ILP recompute depth baked into the step
+
+
 @dataclass
 class ExecutionPlan:
     """The solver's full output for one global batch (per pod)."""
@@ -433,10 +453,10 @@ class ExecutionPlan:
         return best
 
     def bucket_key(self, d_s: int, *, chunk_rounding: int = 8,
-                   cap_quantum: int = 0
-                   ) -> Tuple[str, int, int, int, int, int]:
+                   cap_quantum: int = 0) -> BucketKey:
         """The compiled-executable bucket this plan lands in:
-        ``(schedule, v_stages, n_chunks, cap, ctx_cap, l_ckpt)``.
+        :class:`BucketKey` ``(schedule, v_stages, n_chunks, cap, ctx_cap,
+        l_ckpt)`` — access fields by name, not position.
 
         The schedule backend leads the key: tick count, stream routing and
         layer stacking are all schedule-shaped, so two plans that agree on
@@ -463,8 +483,9 @@ class ExecutionPlan:
         cap = -(-self.chunk_capacity // q) * q
         max_ctx = max((c.context for c in chunks), default=0)
         ctx_cap = -(-(max_ctx + cap) // cap) * cap
-        return (self.schedule, self.v_stages, n, cap, ctx_cap,
-                self.uniform_ckpt())
+        return BucketKey(schedule=self.schedule, v_stages=self.v_stages,
+                         n_chunks=n, cap=cap, ctx_cap=ctx_cap,
+                         l_ckpt=self.uniform_ckpt())
 
     def to_json(self) -> Dict[str, Any]:
         return {

@@ -32,9 +32,11 @@ def collective_scan(hlo: str) -> dict:
 
 
 def compile_cache_report() -> dict:
-    """Process-wide compile-cache statistics (live buckets, recompiles, hit
-    rate, compile seconds) in the shape the train-loop log and
-    benchmarks/run.py emit. Lazy import keeps this module jax-free at
+    """Process-wide compile-cache statistics (live buckets, recompiles,
+    warm hits served by persistent stores, hit rate, compile seconds) in
+    the shape the train-loop log and benchmarks/run.py emit. Caches backed
+    by a store carry a per-cache ``store`` block (entry count, on-disk
+    bytes, stale/corrupt skips). Lazy import keeps this module jax-free at
     import time."""
     from repro.runtime.compile_cache import global_cache_stats
     return global_cache_stats()
@@ -42,10 +44,18 @@ def compile_cache_report() -> dict:
 
 def format_cache_report(stats: dict) -> str:
     """One-line human summary of :func:`compile_cache_report` output."""
-    return (f"buckets={stats['buckets_live']} "
+    line = (f"buckets={stats['buckets_live']} "
             f"recompiles={stats['recompiles']} hits={stats['hits']} "
+            f"warm_hits={stats.get('warm_hits', 0)} "
             f"hit_rate={stats['hit_rate']:.2%} "
             f"compile_s={stats['compile_seconds']:.2f}")
+    stores = [c["store"] for c in stats.get("caches", {}).values()
+              if "store" in c]
+    if stores:
+        line += (f" store_entries={sum(s['entries'] for s in stores)}"
+                 f" store_mb="
+                 f"{sum(s['size_bytes'] for s in stores) / 1e6:.2f}")
+    return line
 
 
 def analytic_collectives(cfg, geom, kind: str) -> dict:

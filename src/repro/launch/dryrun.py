@@ -34,6 +34,15 @@ from pathlib import Path
 import numpy as np
 
 
+def _cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on recent jax and a
+    one-element list of dicts on 0.4.x — normalize to a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _cell_skip_reason(cfg, shape) -> str:
     if shape.needs_subquadratic and not cfg.supports_long_decode:
         return ("skipped: pure full-attention arch at 500K decode "
@@ -48,7 +57,18 @@ from repro.runtime.compile_cache import CompileCache
 # (e.g. two shapes landing on the same plan geometry) compile once.
 # Bounded: compiled 256+-device programs are large, and cross-cell hits
 # are the exception — don't retain the whole sweep in host memory.
-_CELL_CACHE = CompileCache(name="dryrun-cell", capacity=2)
+# Cost-aware eviction keeps the expensive-to-recompile cells resident.
+_CELL_CACHE = CompileCache(name="dryrun-cell", capacity=2, eviction="cost")
+
+
+def attach_cell_store(cache_dir: str) -> None:
+    """Back the cell cache with a persistent store: re-running a sweep
+    (or resuming an interrupted one) warm-starts compiled cells. The cell
+    key already carries arch/shape/mesh, so the fingerprint only pins the
+    process topology (jax version, backend, device count)."""
+    from repro.runtime.cache_store import CacheStore, store_fingerprint
+    _CELL_CACHE.store = CacheStore(cache_dir, store_fingerprint(),
+                                   log=print)
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
@@ -182,7 +202,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     t_compile = time.perf_counter()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     rec.update({
         "status": "ok",
@@ -193,13 +213,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             ("temp_size_in_bytes", "argument_size_in_bytes",
              "output_size_in_bytes", "alias_size_in_bytes",
              "generated_code_size_in_bytes")},
-        "cost_analysis": {k: float(v) for k, v in dict(cost).items()
+        "cost_analysis": {k: float(v) for k, v in cost.items()
                           if isinstance(v, (int, float))
                           and k in ("flops", "bytes accessed",
                                     "bytes accessed0{}", "transcendentals",
                                     "utilization operand 0 {}")},
-        "flops": float(dict(cost).get("flops", 0.0)),
-        "bytes_accessed": float(dict(cost).get("bytes accessed", 0.0)),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
         "hlo_collectives_static": collective_scan(hlo),
         "n_devices": int(np.prod(list(mesh.shape.values()))),
         "compile_cache": _CELL_CACHE.stats.as_dict(),
@@ -310,7 +330,7 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
         lowered.compile)
     t_compile = _time.perf_counter()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     import numpy as _np
     rec.update({
@@ -322,8 +342,8 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
             ("temp_size_in_bytes", "argument_size_in_bytes",
              "output_size_in_bytes", "alias_size_in_bytes",
              "generated_code_size_in_bytes")},
-        "flops": float(dict(cost).get("flops", 0.0)),
-        "bytes_accessed": float(dict(cost).get("bytes accessed", 0.0)),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
         "hlo_collectives_static": collective_scan(hlo),
         "n_devices": int(_np.prod(list(mesh.shape.values()))),
         "compile_cache": _CELL_CACHE.stats.as_dict(),
@@ -386,8 +406,13 @@ def main():
     ap.add_argument("--zero3", default="per_tick",
                     choices=["per_tick", "per_step"])
     ap.add_argument("--note", default="")
+    ap.add_argument("--cache-dir", default="",
+                    help="persistent compile-cache directory shared across "
+                         "sweep runs (warm-starts recompiled cells)")
     args = ap.parse_args()
 
+    if args.cache_dir:
+        attach_cell_store(args.cache_dir)
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     cells = all_cells() if args.all else [(args.arch, args.shape)]

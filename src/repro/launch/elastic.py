@@ -8,14 +8,43 @@ Shrink/grow flow:
      ILP re-solves checkpointing for the new memory budget),
   4. restore parameters with the new shardings and continue.
 
+The compile-cache store rides along: every phase shares one ``cache_dir``.
+The shrink phase's mesh change invalidates the store fingerprint, so its
+buckets cold-compile (stale entries are *skipped*, never loaded wrong);
+the grow-back phase returns to the original topology and warm-starts the
+phase-1 buckets with zero fresh compiles.
+
 ``python -m repro.launch.elastic --arch llama3.2-3b`` runs the whole cycle
-at reduced scale on CPU (8 fake devices -> 4) and verifies the loss
-continues smoothly. See examples/elastic_restart.py.
+at reduced scale on CPU (4 fake devices -> 2 -> 4) and verifies the loss
+continues smoothly across both restarts. See examples/elastic_restart.py.
 """
 
 from __future__ import annotations
 
 import argparse
+
+
+def _assert_loss_continuity(prev_hist, next_hist, phase: str,
+                            rel_tol: float = 0.25) -> None:
+    """The restarted run must CONTINUE the previous one: it resumes right
+    after a step the previous phase RAN (the last checkpointed one — not
+    necessarily the last step, when steps isn't a multiple of ckpt_every)
+    and its first loss stays close to that step's (a scrambled restore
+    shows up as a jump back toward the init loss)."""
+    nxt = next_hist[0]
+    by_step = {h["step"]: h for h in prev_hist}
+    prev = by_step.get(nxt["step"] - 1)
+    assert prev is not None, \
+        f"{phase}: resumed at step {nxt['step']}, but the previous phase " \
+        f"never ran step {nxt['step'] - 1} (ran " \
+        f"{prev_hist[0]['step']}..{prev_hist[-1]['step']})"
+    rel = abs(nxt["loss"] - prev["loss"]) / max(prev["loss"], 1e-9)
+    assert rel < rel_tol, \
+        f"{phase}: loss discontinuity across restart — " \
+        f"{prev['loss']:.4f} (step {prev['step']}) -> " \
+        f"{nxt['loss']:.4f} (step {nxt['step']}) ({rel:.1%})"
+    print(f"[{phase}] loss continuity OK: {prev['loss']:.4f} -> "
+          f"{nxt['loss']:.4f} ({rel:.2%})")
 
 
 def main():
@@ -36,21 +65,45 @@ def main():
 
     cfg = get_arch(args.arch).reduced()
     with tempfile.TemporaryDirectory() as d:
-        loop = TrainLoopConfig(steps=args.steps, global_batch=6,
-                               context=256, ckpt_dir=d, ckpt_every=3,
-                               compute_dtype="float32")
+        ckpt = os.path.join(d, "ckpt")
+        cache = os.path.join(d, "compile_cache")
+        common = dict(global_batch=6, context=256, ckpt_dir=ckpt,
+                      ckpt_every=2, cache_dir=cache,
+                      compute_dtype="float32")
+        loop = TrainLoopConfig(steps=args.steps, **common)
         mesh_a = jax.make_mesh((2, 2), ("data", "model"))
         print(f"== phase 1: mesh {dict(mesh_a.shape)} ==")
-        train(cfg, mesh_a, loop)
+        _, _, hist_a = train(cfg, mesh_a, loop)
 
-        # "lose half the machine": restart on a (2, 2) mesh
+        # "lose half the machine": restart on a (1, 2) mesh. The mesh
+        # change flips the store fingerprint, so phase 1's persisted
+        # buckets are skipped as stale and this phase cold-compiles.
         mesh_b = jax.make_mesh((1, 2), ("data", "model"))
-        loop_b = TrainLoopConfig(steps=args.steps + 2, global_batch=6,
-                                 context=256, ckpt_dir=d, ckpt_every=3,
-                                 resume=True, compute_dtype="float32")
+        loop_b = TrainLoopConfig(steps=args.steps + 2, resume=True,
+                                 **common)
         print(f"== phase 2 (elastic shrink): mesh {dict(mesh_b.shape)} ==")
-        train(cfg, mesh_b, loop_b)
-        print("elastic restart OK")
+        _, _, hist_b = train(cfg, mesh_b, loop_b)
+        _assert_loss_continuity(hist_a, hist_b, "shrink")
+        store_b = hist_b[-1]["cache_store"]
+        assert store_b["stale_skips"] >= 1, \
+            f"shrink phase should have skipped phase 1's stale buckets, " \
+            f"store report: {store_b}"
+        assert hist_b[-1]["compile_cache"]["warm_hits"] == 0
+
+        # the lost half comes back: grow to the original (2, 2) mesh.
+        # Same topology fingerprint as phase 1 => repeated buckets
+        # warm-start from the store with zero fresh compiles.
+        loop_c = TrainLoopConfig(steps=args.steps + 4, resume=True,
+                                 **common)
+        print(f"== phase 3 (elastic grow): mesh {dict(mesh_a.shape)} ==")
+        _, _, hist_c = train(cfg, mesh_a, loop_c)
+        _assert_loss_continuity(hist_b, hist_c, "grow")
+        cc = hist_c[-1]["compile_cache"]
+        assert cc["warm_hits"] >= 1, \
+            f"grow phase should warm-start phase 1's buckets, got {cc}"
+        print("elastic restart OK (shrink cold-compiled, grow "
+              f"warm-started {cc['warm_hits']} bucket(s), "
+              f"{cc['misses']} cold)")
 
 
 if __name__ == "__main__":

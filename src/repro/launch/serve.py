@@ -18,6 +18,10 @@ def main():
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--decode-steps", type=int, default=4)
     ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--cache-dir", default="",
+                    help="persistent compile-cache directory: a serving "
+                         "restart warm-starts the decode bucket instead of "
+                         "recompiling")
     args = ap.parse_args()
 
     import os
@@ -29,7 +33,8 @@ def main():
     from jax.sharding import PartitionSpec as P
 
     from repro.configs import get_arch
-    from repro.runtime import CompileCache, TrainStepBuilder, make_geometry
+    from repro.runtime import (CacheStore, CompileCache, TrainStepBuilder,
+                               make_geometry, store_fingerprint)
     from repro.runtime.compile_cache import decode_bucket_key
     from repro.runtime.serve_step import (decode_state_specs,
                                           decode_state_struct,
@@ -52,18 +57,26 @@ def main():
     params, _, _ = builder.init_all(jax.random.PRNGKey(0))
     pspecs, _, _ = builder.specs(jax.eval_shape(lambda: params))
     shard_dims = shard_dim_tree(params["stages"], mesh.shape[model])
-    cache = CompileCache(name="decode-step", log=print)
+    store = None
+    if args.cache_dir:
+        store = CacheStore(args.cache_dir,
+                           store_fingerprint(mesh, spec=cfg.spec,
+                                             compute_dtype=jnp.float32),
+                           log=print)
+    cache = CompileCache(name="decode-step", log=print, store=store)
+    struct = decode_state_struct(cfg, geom, 1)
 
     def build_step():
         fn = decode_step_fn(cfg, geom, shard_dims, pod_axis=pod,
                             data_axis=data, model_axis=model)
         sspecs = decode_state_specs(cfg, geom, pod=pod, data=data,
                                     model=model)
-        return jax.jit(shard_map_compat(
+        jitted = jax.jit(shard_map_compat(
             fn, mesh=mesh, in_specs=(pspecs, sspecs),
             out_specs=(P(), sspecs), check_vma=False))
+        # AOT so the compiled decode step is serializable to the store
+        return jitted.lower(jax.eval_shape(lambda: params), struct).compile()
 
-    struct = decode_state_struct(cfg, geom, 1)
     rng = np.random.default_rng(0)
     state = {k: jnp.asarray(rng.normal(0, 0.3, v.shape).astype(
         np.float32) * 0 + (rng.integers(0, cfg.spec.vocab, v.shape)
@@ -77,6 +90,8 @@ def main():
         ids, state = step(params, state)
         print(f"decode step {i}: ids[0,:8] = {np.asarray(ids)[0, :8]}")
     print(f"[compile-cache] {cache.stats.summary()}")
+    if store is not None:
+        print(f"[cache-store] {store.report()}")
     print("serve OK")
 
 

@@ -34,6 +34,10 @@ class TrainLoopConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 20
     resume: bool = False
+    # persistent compile-cache directory. None derives a sibling of
+    # ckpt_dir (<ckpt_dir>_compile_cache) when checkpointing is on; ""
+    # disables the store (in-memory cache only).
+    cache_dir: Optional[str] = None
     bucket_rounding: int = 256
     compute_dtype: str = "bfloat16"
     # pipeline schedule backend (core/schedule.py registry name); None lets
@@ -53,7 +57,9 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     from repro.data import materialize_plan, sample_corpus_batch
     from repro.ft import StragglerMonitor, replan_costmodel
     from repro.optim import init_opt_state
-    from repro.runtime import CompileCache, TrainStepBuilder, make_geometry
+    from repro.runtime import (CacheStore, CompileCache, TrainStepBuilder,
+                               batch_struct, make_geometry,
+                               store_fingerprint)
     from repro.runtime.sharding import mesh_axis_names
 
     pod, data, model = mesh_axis_names(mesh)
@@ -66,7 +72,20 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     monitor = StragglerMonitor(d_p=d_p)
     mgr = CheckpointManager(loop.ckpt_dir) if loop.ckpt_dir else None
 
-    step_cache = CompileCache(name="train-step", log=log)
+    # persistent compile cache: warm-start buckets across (elastic)
+    # restarts. Entries are fingerprinted by topology + config so a
+    # resharded mesh or changed arch falls back to cold compile.
+    cache_dir = loop.cache_dir
+    if cache_dir is None and loop.ckpt_dir:
+        p = Path(loop.ckpt_dir)
+        cache_dir = str(p.with_name(p.name + "_compile_cache"))
+    store = None
+    if cache_dir:
+        store = CacheStore(cache_dir,
+                           store_fingerprint(mesh, spec=cfg_arch.spec,
+                                             compute_dtype=dtype),
+                           log=log)
+    step_cache = CompileCache(name="train-step", log=log, store=store)
     params = opt = None
     start_step = 0
 
@@ -90,17 +109,23 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
 
     def get_step(plan):
         key = plan.bucket_key(d_s)
+        # the builder is cheap host-side state (geometry + specs); only
+        # the compiled executable is cached — and, via the store, persisted
+        geom = make_geometry(cfg_arch, mesh, n_chunks=key.n_chunks,
+                             cap=key.cap, ctx_cap=key.ctx_cap,
+                             l_ckpt=key.l_ckpt, compute_dtype=dtype,
+                             schedule=key.schedule, v_stages=key.v_stages)
+        builder = TrainStepBuilder(cfg_arch, mesh, geom, param_dtype=dtype)
 
         def build():
-            schedule, v_stages, n_chunks, cap, ctx_cap, l_ckpt = key
-            geom = make_geometry(cfg_arch, mesh, n_chunks=n_chunks, cap=cap,
-                                 ctx_cap=ctx_cap, l_ckpt=l_ckpt,
-                                 compute_dtype=dtype, schedule=schedule,
-                                 v_stages=v_stages)
-            builder = TrainStepBuilder(cfg_arch, mesh, geom,
-                                       param_dtype=dtype)
-            return builder, builder.build()
-        return step_cache.get(key, build)
+            # AOT lower+compile against abstract shapes: the resulting
+            # jax.stages.Compiled is what serialize_executable can persist
+            params_shape = builder.abstract_params()
+            opt_shape = jax.eval_shape(init_opt_state, params_shape)
+            bstruct = batch_struct(geom, n_pods)
+            return builder.build(params_shape).lower(
+                params_shape, opt_shape, None, bstruct).compile()
+        return builder, step_cache.get(key, build)
 
     # --- bootstrap: plan step 0 to learn the first bucket ---
     plan, corpus = plan_for(0)
@@ -169,8 +194,8 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     for step in range(start_step, loop.steps):
         plan, corpus = next_plan, next_corpus
         builder, step_fn = get_step(plan)
-        n_chunks, cap = plan.bucket_key(d_s)[2:4]
-        batch = mat(plan, corpus, cap, n_chunks)
+        key = plan.bucket_key(d_s)
+        batch = mat(plan, corpus, key.cap, key.n_chunks)
         t0 = time.perf_counter()
         params, opt, _err, metrics = step_fn(params, opt, None, batch)
         # overlap: next iteration's plan solves while devices run
@@ -190,8 +215,16 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     if mgr:
         mgr.wait()
     log(f"[compile-cache] {step_cache.stats.summary()}")
+    rep = store.report() if store is not None else None
+    if rep is not None:
+        log(f"[cache-store] dir={rep['dir']} entries={rep['entries']} "
+            f"({rep['size_bytes'] / 1e6:.2f} MB) saves={rep['saves']} "
+            f"warm_loads={rep['loads']} stale={rep['stale_skips']} "
+            f"corrupt={rep['corrupt_skips']}")
     if history:
         history[-1]["compile_cache"] = step_cache.stats.as_dict()
+        if rep is not None:
+            history[-1]["cache_store"] = rep
     return params, opt, history
 
 
@@ -208,6 +241,14 @@ def main():
                          "xla_force_host_platform_device_count)")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--ckpt-dir")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile-cache directory (warm-starts "
+                         "plan buckets across restarts); default: "
+                         "<ckpt-dir>_compile_cache when --ckpt-dir is set, "
+                         "'' disables")
+    ap.add_argument("--stats-json", default="",
+                    help="write the run history + compile-cache/store "
+                         "stats to this JSON file (CI artifact)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--schedule", default=None,
                     help="pipeline schedule backend (gpipe-1f1b, "
@@ -232,10 +273,19 @@ def main():
     loop = TrainLoopConfig(steps=args.steps, global_batch=args.batch,
                            context=args.context, dataset=args.dataset,
                            ckpt_dir=args.ckpt_dir, resume=args.resume,
+                           cache_dir=args.cache_dir,
                            compute_dtype="float32" if args.reduced
                            else "bfloat16",
                            schedule=args.schedule, v_stages=args.v_stages)
-    train(cfg, mesh, loop)
+    _, _, history = train(cfg, mesh, loop)
+    if args.stats_json:
+        import json
+        last = history[-1] if history else {}
+        with open(args.stats_json, "w") as f:
+            json.dump({"history": history,
+                       "compile_cache": last.get("compile_cache", {}),
+                       "cache_store": last.get("cache_store", {})},
+                      f, indent=1)
 
 
 if __name__ == "__main__":

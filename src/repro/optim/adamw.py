@@ -36,7 +36,12 @@ class AdamWConfig:
 
 
 def init_opt_state(params) -> Dict[str, Any]:
-    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    # copy=True: with float32 params astype() would RETURN THE SAME buffer,
+    # and a step that donates both params and opt.master then aborts with
+    # "attempt to donate the same buffer twice" (surfaced by the AOT-
+    # compiled step path, which does not re-layout already-placed inputs)
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                          params)
     zeros = lambda: jax.tree.map(  # noqa: E731
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return {"master": master, "m": zeros(), "v": zeros(),

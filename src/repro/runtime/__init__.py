@@ -3,12 +3,14 @@ jax-free and import eagerly; everything that pulls in jax + the model
 stack resolves lazily so host-side callers (launch/analysis.py,
 benchmarks) can use the cache on installs without a device runtime."""
 
+from .cache_store import CacheStore, model_fingerprint, store_fingerprint
 from .compile_cache import CompileCache, global_cache_stats
 from .program import StageProgram, TickContext
 
 __all__ = ["PipelineGeometry", "pipeline_loss_fn", "TrainStepBuilder",
            "batch_struct", "make_geometry", "prepare_params",
-           "StageProgram", "TickContext", "CompileCache",
+           "StageProgram", "TickContext", "CompileCache", "CacheStore",
+           "model_fingerprint", "store_fingerprint",
            "global_cache_stats"]
 
 _LAZY = {

@@ -1,0 +1,301 @@
+"""Disk-backed persistence for the plan-bucket compile cache.
+
+The in-memory :class:`~repro.runtime.compile_cache.CompileCache` only pays
+off while the process lives: every restart — a crash, a multi-run sweep,
+and especially the elastic shrink/grow flow the paper motivates —
+recompiles every plan bucket from scratch, and recompilation dominates
+bootstrap cost for variable-length workloads that touch many buckets.
+This module persists compiled executables across restarts via JAX AOT
+(``jit(...).lower(...).compile()`` + ``jax.experimental
+.serialize_executable``), so a restarted run warm-starts every bucket
+whose environment survived the restart and cold-compiles only the rest.
+
+Store layout (one directory, flat, one entry per (key, fingerprint)):
+
+    <cache_dir>/
+      <key_hash>__<fp_hash>.bin        pickle of (payload, in_tree,
+                                       out_tree) as returned by
+                                       serialize_executable.serialize()
+      <key_hash>__<fp_hash>.meta.json  sidecar: the full fingerprint dict,
+                                       repr(key), compile_seconds of the
+                                       original build, payload sha256 +
+                                       byte size, created timestamp
+
+``key_hash`` is a sha256 over ``repr(key)`` — any hashable/repr-stable
+key works (``ExecutionPlan.bucket_key()`` NamedTuples, decode geometry
+tuples, dry-run cell tuples). ``fp_hash`` hashes the fingerprint dict:
+entries for the SAME bucket under DIFFERENT topologies coexist (the
+elastic shrink/grow flow writes both; growing back finds the original
+entry intact).
+
+Invalidation rules — a stale entry is SKIPPED, never loaded wrong:
+
+* **fingerprint mismatch**: every entry records the store's fingerprint
+  (mesh axes+shape, device count, backend platform, jax version, ModelSpec
+  hash, compute dtype — see :func:`store_fingerprint`). ``load`` compares
+  the entry's recorded fingerprint against the current store's, field by
+  field; any difference (e.g. the elastic demo's mesh change) counts as a
+  ``stale_skips`` and falls back to cold compile.
+* **corruption**: the sidecar records the payload's sha256; a truncated
+  or bit-flipped blob (and any deserialization error) counts as a
+  ``corrupt_skips`` and falls back to cold compile.
+* a ``.bin`` without a readable sidecar (or vice versa) is ignored.
+
+Writes are atomic (tmp file + ``os.replace``) so a crash mid-save leaves
+no half-written entry that a later run could trip over.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Hashable, List, Optional
+
+__all__ = ["CacheStore", "StoreStats", "model_fingerprint",
+           "store_fingerprint"]
+
+_FORMAT_VERSION = 1
+
+
+def model_fingerprint(spec) -> str:
+    """Stable hash of a :class:`~repro.core.plan.ModelSpec` (or any
+    dataclass): two runs agree iff every architecture field agrees."""
+    if dataclasses.is_dataclass(spec):
+        d = dataclasses.asdict(spec)
+    elif isinstance(spec, dict):
+        d = spec
+    else:
+        d = {"repr": repr(spec)}
+    blob = json.dumps(d, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def store_fingerprint(mesh=None, *, spec=None, compute_dtype=None,
+                      extra: Optional[Dict[str, Any]] = None
+                      ) -> Dict[str, Any]:
+    """The topology/config fingerprint a store entry must match to load.
+
+    Captures everything that changes the compiled HLO *outside* the bucket
+    key: mesh axes and shape (an elastic reshard invalidates), total device
+    count, backend platform, jax/jaxlib versions (XLA output is not stable
+    across releases), the ModelSpec hash and the compute dtype.
+    """
+    import jax
+
+    fp: Dict[str, Any] = {
+        "format": _FORMAT_VERSION,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+    }
+    try:
+        import jaxlib
+        fp["jaxlib"] = jaxlib.__version__
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        fp["jaxlib"] = "unknown"
+    if mesh is not None:
+        fp["mesh"] = [[str(name), int(size)]
+                      for name, size in mesh.shape.items()]
+    if spec is not None:
+        fp["spec"] = model_fingerprint(spec)
+    if compute_dtype is not None:
+        import numpy as np
+        try:
+            fp["compute_dtype"] = np.dtype(compute_dtype).name
+        except TypeError:
+            fp["compute_dtype"] = repr(compute_dtype)
+    if extra:
+        fp.update(extra)
+    return fp
+
+
+@dataclasses.dataclass
+class StoreStats:
+    loads: int = 0           # successful warm loads
+    saves: int = 0           # entries written
+    stale_skips: int = 0     # fingerprint mismatch -> cold compile
+    corrupt_skips: int = 0   # bad sha / unreadable blob -> cold compile
+    load_errors: int = 0     # deserialize raised -> cold compile
+    save_errors: int = 0     # artifact not serializable / IO error
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class CacheStore:
+    """Persistent bucket-key -> serialized-executable store.
+
+    Implements the two-method protocol ``CompileCache`` expects from its
+    ``store=`` backend:
+
+    * ``load(key) -> artifact | None`` — ``None`` means "cold compile"
+      (missing, stale fingerprint, corrupted, or failed to deserialize);
+    * ``save(key, artifact, compile_seconds=...)`` — best-effort; an
+      artifact that is not a serializable ``jax.stages.Compiled`` (or a
+      full disk) degrades to a no-op, never an exception.
+    """
+
+    def __init__(self, directory: str | Path,
+                 fingerprint: Optional[Dict[str, Any]] = None, *,
+                 log: Optional[Callable[[str], None]] = None):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        # canonicalize to JSON-native form ONCE: load() compares the
+        # in-memory fingerprint against one that round-tripped through the
+        # sidecar, so tuples must already be lists and exotic values
+        # strings — otherwise every entry reads as permanently stale
+        self.fingerprint: Dict[str, Any] = json.loads(
+            json.dumps(dict(fingerprint or {}), sort_keys=True,
+                       default=str))
+        self.fp_hash = hashlib.sha256(
+            json.dumps(self.fingerprint, sort_keys=True).encode()
+        ).hexdigest()[:12]
+        self.log = log
+        self.stats = StoreStats()
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _key_hash(key: Hashable) -> str:
+        return hashlib.sha256(repr(key).encode()).hexdigest()[:24]
+
+    def _paths(self, key: Hashable) -> tuple[Path, Path]:
+        h = f"{self._key_hash(key)}__{self.fp_hash}"
+        return self.dir / f"{h}.bin", self.dir / f"{h}.meta.json"
+
+    def _say(self, msg: str) -> None:
+        if self.log:
+            self.log(msg)
+
+    # ------------------------------------------------------------------
+    def load(self, key: Hashable) -> Optional[Any]:
+        """Deserialize the entry for ``key``; None on any reason to cold
+        compile (missing / stale fingerprint / corrupt / load failure)."""
+        bin_path, meta_path = self._paths(key)
+        if not (bin_path.exists() and meta_path.exists()):
+            # entry persisted under a DIFFERENT topology/config only:
+            # observable as a stale skip (the elastic shrink sees phase
+            # 1's buckets but must not load them)
+            if any(self.dir.glob(f"{self._key_hash(key)}__*.bin")):
+                self.stats.stale_skips += 1
+                self._say(f"[cache-store] stale fingerprint for {key} "
+                          f"(topology/config changed) — cold compile")
+            return None
+        try:
+            meta = json.loads(meta_path.read_text())
+        except (OSError, json.JSONDecodeError):
+            self.stats.corrupt_skips += 1
+            self._say(f"[cache-store] unreadable sidecar for {key} — "
+                      f"cold compile")
+            return None
+        if meta.get("fingerprint") != self.fingerprint:
+            self.stats.stale_skips += 1
+            self._say(f"[cache-store] stale fingerprint for {key} "
+                      f"(topology/config changed) — cold compile")
+            return None
+        try:
+            blob = bin_path.read_bytes()
+        except OSError:
+            self.stats.corrupt_skips += 1
+            return None
+        if (meta.get("payload_sha") !=
+                hashlib.sha256(blob).hexdigest()):
+            self.stats.corrupt_skips += 1
+            self._say(f"[cache-store] corrupted payload for {key} — "
+                      f"cold compile")
+            return None
+        try:
+            from jax.experimental import serialize_executable
+            payload, in_tree, out_tree = pickle.loads(blob)
+            compiled = serialize_executable.deserialize_and_load(
+                payload, in_tree, out_tree)
+        except Exception as e:  # noqa: BLE001 - any failure => cold compile
+            self.stats.load_errors += 1
+            self._say(f"[cache-store] deserialize failed for {key}: "
+                      f"{e!r} — cold compile")
+            return None
+        self.stats.loads += 1
+        return compiled
+
+    # ------------------------------------------------------------------
+    def save(self, key: Hashable, compiled: Any, *,
+             compile_seconds: float = 0.0) -> bool:
+        """Serialize ``compiled`` (a ``jax.stages.Compiled``) under
+        ``key``. Best-effort: returns False instead of raising when the
+        artifact cannot be serialized."""
+        if compiled is None:
+            return False
+        try:
+            from jax.experimental import serialize_executable
+            payload, in_tree, out_tree = serialize_executable.serialize(
+                compiled)
+            blob = pickle.dumps((payload, in_tree, out_tree))
+        except Exception as e:  # noqa: BLE001 - jit fns, plain values, ...
+            self.stats.save_errors += 1
+            self._say(f"[cache-store] cannot serialize {key}: {e!r}")
+            return False
+        meta = {
+            "fingerprint": self.fingerprint,
+            "key": repr(key),
+            "compile_seconds": round(float(compile_seconds), 3),
+            "payload_sha": hashlib.sha256(blob).hexdigest(),
+            "payload_bytes": len(blob),
+            "created": time.time(),
+        }
+        bin_path, meta_path = self._paths(key)
+        try:
+            # sidecar FIRST: a crash in between leaves an orphan meta
+            # (load() sees no .bin => plain miss), never an orphan .bin
+            # that would count as a misleading stale skip
+            self._atomic_write(meta_path,
+                               json.dumps(meta, indent=1).encode())
+            self._atomic_write(bin_path, blob)
+        except Exception as e:  # noqa: BLE001 - save is best-effort
+            self.stats.save_errors += 1
+            self._say(f"[cache-store] write failed for {key}: {e!r}")
+            return False
+        self.stats.saves += 1
+        self._say(f"[cache-store] saved bucket {key} "
+                  f"({len(blob) / 1e6:.2f} MB)")
+        return True
+
+    @staticmethod
+    def _atomic_write(path: Path, data: bytes) -> None:
+        tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+        tmp.write_bytes(data)
+        os.replace(tmp, path)
+
+    # ------------------------------------------------------------------
+    def entries(self) -> List[Dict[str, Any]]:
+        """Sidecar metadata of every well-formed entry (any fingerprint)."""
+        out = []
+        for meta_path in sorted(self.dir.glob("*.meta.json")):
+            bin_path = meta_path.with_name(
+                meta_path.name[:-len(".meta.json")] + ".bin")
+            if not bin_path.exists():
+                continue
+            try:
+                out.append(json.loads(meta_path.read_text()))
+            except (OSError, json.JSONDecodeError):
+                continue
+        return out
+
+    def size_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.dir.glob("*.bin"))
+
+    def report(self) -> Dict[str, Any]:
+        """The block the train log / benchmarks JSON surface per store."""
+        entries = self.entries()
+        fresh = sum(1 for e in entries
+                    if e.get("fingerprint") == self.fingerprint)
+        return {
+            "dir": str(self.dir),
+            "entries": len(entries),
+            "entries_current_fingerprint": fresh,
+            "size_bytes": self.size_bytes(),
+            **self.stats.as_dict(),
+        }

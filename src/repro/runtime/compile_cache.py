@@ -17,6 +17,19 @@ cache and aggregated process-wide (:func:`global_cache_stats`) so the
 train-loop log, ``launch/analysis.py`` and ``benchmarks/run.py`` can all
 surface them.
 
+A cache may be backed by a persistent ``store`` (duck-typed; see
+``runtime/cache_store.CacheStore`` for the disk+JAX-AOT implementation):
+an in-memory miss first consults ``store.load(key)`` — success is a
+**warm hit** (``CacheStats.warm_hits``, no fresh compile) — and every
+fresh compile is offered to ``store.save(...)`` so the NEXT process
+restart warm-starts. The store decides validity (fingerprint, integrity);
+the cache only distinguishes warm hits from cold compiles.
+
+Eviction is LRU by default; ``eviction="cost"`` weights the choice by
+each resident bucket's rebuild cost (``compile_seconds_per_key``), so
+cheap-to-rebuild buckets — including warm-loaded ones, whose rebuild cost
+is a disk reload — are evicted first, with LRU order as the tie-break.
+
 The process-wide registry holds caches *weakly*: a cache (and every
 executable it pins) is freed with its last strong reference, so repeated
 in-process train/serve runs do not leak executables through the stats
@@ -45,35 +58,47 @@ _REGISTRY: "weakref.WeakSet[CompileCache]" = weakref.WeakSet()
 @dataclass
 class CacheStats:
     hits: int = 0
-    misses: int = 0
+    warm_hits: int = 0          # misses served from the persistent store
+    misses: int = 0             # cold compiles (store had nothing valid)
     evictions: int = 0
+    cleared: int = 0            # resident executables dropped by clear()
     recompiles: int = 0         # misses on keys that were compiled before
     buckets_live: int = 0       # executables currently resident
     compile_seconds: float = 0.0
-    # per-key compile time of the RESIDENT buckets (pruned on eviction)
+    # per-key REBUILD cost of the RESIDENT buckets (pruned on eviction):
+    # compile time for cold-compiled buckets, store reload time for
+    # warm-loaded ones — the weight cost-aware eviction minimizes losing
     compile_seconds_per_key: Dict[str, float] = field(default_factory=dict)
 
     @property
     def lookups(self) -> int:
-        return self.hits + self.misses
+        return self.hits + self.warm_hits + self.misses
 
     @property
     def hit_rate(self) -> float:
-        return self.hits / self.lookups if self.lookups else 0.0
+        """Fraction of lookups that avoided a fresh compile — in-memory
+        hits AND store warm hits both count (misses are the cold
+        compiles)."""
+        if not self.lookups:
+            return 0.0
+        return (self.hits + self.warm_hits) / self.lookups
 
     def as_dict(self) -> Dict[str, Any]:
         return {
             "buckets_live": self.buckets_live,
             "recompiles": self.recompiles,
             "hits": self.hits,
+            "warm_hits": self.warm_hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "cleared": self.cleared,
             "hit_rate": round(self.hit_rate, 4),
             "compile_seconds": round(self.compile_seconds, 3),
         }
 
     def summary(self) -> str:
         return (f"buckets={self.buckets_live} hits={self.hits} "
+                f"warm_hits={self.warm_hits} "
                 f"hit_rate={self.hit_rate:.2%} "
                 f"evictions={self.evictions} "
                 f"recompiles={self.recompiles} "
@@ -85,20 +110,32 @@ class CompileCache:
 
     ``capacity=None`` means unbounded (the train loop's default — bucket
     geometry converges to a handful of keys). A bounded cache evicts the
-    least-recently-used executable, which XLA then garbage-collects with
-    the last reference.
+    least-recently-used executable (``eviction="lru"``) or the
+    cheapest-to-rebuild one (``eviction="cost"``); XLA garbage-collects
+    the executable with its last reference.
+
+    ``store`` (optional) is a persistent backend with ``load(key) ->
+    value | None`` and ``save(key, value, compile_seconds=...)`` — see
+    ``runtime/cache_store.CacheStore``.
     """
 
     _COMPILED_KEYS_CAP = 65536
 
     def __init__(self, name: str = "default",
                  capacity: Optional[int] = None,
-                 log: Optional[Callable[[str], None]] = None):
+                 log: Optional[Callable[[str], None]] = None,
+                 store: Optional[Any] = None,
+                 eviction: str = "lru"):
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if eviction not in ("lru", "cost"):
+            raise ValueError(f"eviction must be 'lru' or 'cost', "
+                             f"got {eviction!r}")
         self.name = name
         self.capacity = capacity
         self.log = log
+        self.store = store
+        self.eviction = eviction
         self.stats = CacheStats()
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._compiled_keys: Set[Hashable] = set()
@@ -115,13 +152,61 @@ class CompileCache:
         return tuple(self._entries.keys())
 
     # ------------------------------------------------------------------
+    def _evict_victim(self) -> Hashable:
+        """Pick the entry to drop: LRU, or under ``eviction="cost"`` the
+        cheapest-to-rebuild resident bucket (LRU order breaks ties). The
+        most-recently-inserted entry is never the victim."""
+        keys = list(self._entries.keys())
+        candidates = keys[:-1] if len(keys) > 1 else keys
+        if self.eviction == "cost":
+            per_key = self.stats.compile_seconds_per_key
+            return min(enumerate(candidates),
+                       key=lambda ik: (per_key.get(repr(ik[1]), 0.0),
+                                       ik[0]))[1]
+        return candidates[0]
+
+    def _enforce_capacity(self) -> None:
+        if self.capacity is None:
+            return
+        while len(self._entries) > self.capacity:
+            victim = self._evict_victim()
+            del self._entries[victim]
+            self.stats.evictions += 1
+            self.stats.compile_seconds_per_key.pop(repr(victim), None)
+            if self.log:
+                self.log(f"[compile:{self.name}] evict {victim}")
+
+    # ------------------------------------------------------------------
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
-        """Return the cached artifact for ``key``, building (and timing)
-        it on a miss."""
+        """Return the cached artifact for ``key``: resident -> hit;
+        otherwise try the persistent store (warm hit, no compile);
+        otherwise ``build()`` (cold compile, timed, offered to the
+        store)."""
         if key in self._entries:
             self.stats.hits += 1
             self._entries.move_to_end(key)
             return self._entries[key]
+
+        if self.store is not None:
+            t0 = time.perf_counter()
+            value = self.store.load(key)
+            if value is not None:
+                dt = time.perf_counter() - t0
+                self.stats.warm_hits += 1
+                # rebuild cost of a warm bucket is a disk reload
+                self.stats.compile_seconds_per_key[repr(key)] = round(dt, 3)
+                if len(self._compiled_keys) < self._COMPILED_KEYS_CAP:
+                    # a later cold rebuild of this key (evicted AND its
+                    # store entry gone) must still count as a recompile
+                    self._compiled_keys.add(key)
+                self._entries[key] = value
+                if self.log:
+                    self.log(f"[compile:{self.name}] warm-start bucket "
+                             f"{key} ({dt:.2f}s load, no compile)")
+                self._enforce_capacity()
+                self.stats.buckets_live = len(self._entries)
+                return value
+
         self.stats.misses += 1
         if key in self._compiled_keys:
             self.stats.recompiles += 1
@@ -139,29 +224,33 @@ class CompileCache:
         self._entries[key] = value
         if self.log:
             self.log(f"[compile:{self.name}] bucket {key} ({dt:.2f}s)")
-        if self.capacity is not None:
-            while len(self._entries) > self.capacity:
-                evicted, _ = self._entries.popitem(last=False)
-                self.stats.evictions += 1
-                self.stats.compile_seconds_per_key.pop(repr(evicted), None)
-                if self.log:
-                    self.log(f"[compile:{self.name}] evict {evicted}")
+        if self.store is not None:
+            self.store.save(key, value, compile_seconds=dt)
+        self._enforce_capacity()
         self.stats.buckets_live = len(self._entries)
         return value
 
     def clear(self, reset_stats: bool = False) -> None:
-        """Drop every resident executable. ``reset_stats=True`` also zeroes
-        the counters and the compiled-key history (a fresh run in the same
-        process); otherwise hit/miss history survives — including which
-        keys were compiled before, so a post-clear rebuild still counts as
-        a recompile — and only the live-bucket accounting resets."""
+        """Drop every resident executable — observably: the number of
+        entries dropped is added to ``stats.cleared`` so a later
+        ``global_cache_stats()`` read accounts for where the resident
+        executables went. ``reset_stats=True`` also zeroes the counters
+        and the compiled-key history (a fresh run in the same process);
+        otherwise hit/miss history survives — including which keys were
+        compiled before, so a post-clear rebuild still counts as a
+        recompile."""
+        dropped = len(self._entries)
         self._entries.clear()
         if reset_stats:
             self._compiled_keys.clear()
             self.stats = CacheStats()
         else:
+            self.stats.cleared += dropped
             self.stats.buckets_live = 0
             self.stats.compile_seconds_per_key.clear()
+            if dropped and self.log:
+                self.log(f"[compile:{self.name}] cleared {dropped} "
+                         f"resident executables")
 
     def deregister(self) -> None:
         """Remove this cache from the process-wide stats registry (it keeps
@@ -180,17 +269,24 @@ def decode_bucket_key(geom) -> Tuple:
 
 def global_cache_stats() -> Dict[str, Any]:
     """Aggregate stats over every LIVE cache in this process, plus the
-    per-cache breakdown — the shape benchmarks/run.py emits as JSON."""
+    per-cache breakdown — the shape benchmarks/run.py emits as JSON.
+    Caches with a persistent store also report the store block
+    (entries, size, stale/corrupt skips)."""
     agg = CacheStats()
     per_cache = {}
     for c in list(_REGISTRY):
         agg.hits += c.stats.hits
+        agg.warm_hits += c.stats.warm_hits
         agg.misses += c.stats.misses
         agg.evictions += c.stats.evictions
+        agg.cleared += c.stats.cleared
         agg.recompiles += c.stats.recompiles
         agg.buckets_live += c.stats.buckets_live
         agg.compile_seconds += c.stats.compile_seconds
-        per_cache[c.name] = c.stats.as_dict()
+        d = c.stats.as_dict()
+        if c.store is not None and hasattr(c.store, "report"):
+            d["store"] = c.store.report()
+        per_cache[c.name] = d
     out = agg.as_dict()
     out["caches"] = per_cache
     return out

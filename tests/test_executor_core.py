@@ -564,6 +564,32 @@ def test_bucket_cache_hit_and_miss():
     assert cache.stats.hit_rate == pytest.approx(1 / 3)
 
 
+def test_bucket_key_named_fields():
+    """bucket_key() returns a NamedTuple: consumers (launch/train.py,
+    benchmarks) access geometry by NAME — positional slices like
+    ``key[2:4]`` broke silently when PR 2 reordered the tuple."""
+    from repro.core import BucketKey, ClusterSpec, CostModel, ModelSpec, \
+        PlannerConfig, plan_batch
+
+    m = ModelSpec(name="t", n_layers=8, d_model=256, n_heads=8,
+                  n_kv_heads=4, head_dim=32, d_ff=1024, vocab=512)
+    cm = CostModel(m, ClusterSpec(d_p=4, d_s=4))
+    plan = plan_batch(cm, [512, 384, 256, 256],
+                      PlannerConfig(bucket_rounding=64))
+    key = plan.bucket_key(4)
+    assert isinstance(key, BucketKey)
+    assert BucketKey._fields == ("schedule", "v_stages", "n_chunks",
+                                 "cap", "ctx_cap", "l_ckpt")
+    # named access agrees with the documented order (and stays a tuple:
+    # hashable, comparable, usable as a cache key)
+    assert key.schedule == key[0] == plan.schedule
+    assert key.v_stages == key[1] == plan.v_stages
+    assert key.n_chunks == key[2] and key.cap == key[3]
+    assert key.ctx_cap == key[4] and key.l_ckpt == key[5]
+    assert key.n_chunks % 8 == 0 and key.cap % 4 == 0
+    assert hash(key) == hash(tuple(key))
+
+
 def test_cache_eviction_lru():
     from repro.runtime.compile_cache import CompileCache
     cache = CompileCache(name="evict", capacity=2)

@@ -116,6 +116,42 @@ def test_adamw_updates_and_decays():
     assert m["grad_norm"] > 0
 
 
+def test_latest_step_ignores_stray_step_dirs():
+    """Discovery must skip unparseable ``step_*`` names — an editor backup,
+    a future ``step_tmp`` scratch dir, or a crashed save's
+    ``step_xxx.tmp`` (which can already CONTAIN a manifest, since the
+    manifest is written before the atomic rename) — instead of crashing
+    with ValueError."""
+    import os
+
+    tree = {"a": jnp.arange(4.0)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(7, tree, extra={"step": 7})
+        # stray dirs a real filesystem accumulates:
+        for stray in ("step_tmp", "step_00000003.bak",
+                      "step_00000009.tmp"):
+            os.makedirs(os.path.join(d, stray))
+            with open(os.path.join(d, stray, "manifest.json"), "w") as f:
+                f.write("{}")
+        assert mgr.latest_step() == 7
+        restored, extra = mgr.restore(tree)
+        assert extra["step"] == 7
+        # gc must rank by parsed step, never lexically over strays
+        mgr._gc()
+        assert mgr.latest_step() == 7
+
+
+def test_latest_step_empty_and_strays_only():
+    import os
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        assert mgr.latest_step() is None
+        os.makedirs(os.path.join(d, "step_garbage"))
+        assert mgr.latest_step() is None
+
+
 def test_checkpoint_restack_adapter():
     """Elastic reshard: stage-stacked leaves restack across pipeline depths
     (the launch/train.py resume path)."""
