@@ -37,6 +37,8 @@ def main() -> None:
         "fig13_convergence": pf.fig13_convergence,
         "cache_bucket_reuse": lambda: pf.cache_bucket_reuse(
             steps=8 if args.quick else 24),
+        "ckpt_policy": lambda: pf.ckpt_policy_compare(
+            batch=32 if args.quick else 64),
     }
     only = {x.strip() for x in args.only.split(",") if x.strip()}
 
@@ -110,6 +112,14 @@ def _derived(name: str, rows) -> str:
         return f"overlapped={all(r['overlapped'] for r in rows)}"
     if name.startswith("fig13"):
         return str(rows[-1]["loss"])
+    if name.startswith("ckpt_policy"):
+        by = {r["ckpt_policy"]: r for r in rows}
+        sa, un = by["stage-aware"], by["uniform"]
+        ratio = (sa["recompute_s"] / un["recompute_s"]
+                 if un["recompute_s"] else 1.0)
+        return (f"stage_aware_recompute_vs_uniform={ratio:.2f}x;"
+                f"layers={sa['ckpt_layers']}vs{un['ckpt_layers']};"
+                f"fits={sa['fits_memory']}")
     if name.startswith("cache"):
         summaries = [r for r in rows
                      if str(r.get("step", "")).startswith("summary")]

@@ -10,7 +10,8 @@ from .plan import (BucketKey, Chunk, ChunkKind, ClusterSpec, Coefficients,
 from .costs import CostModel, analytic_coefficients, fit_coefficients
 from .chunking import ChunkingResult, chunk_sequences, seq_workload
 from .ilp import IlpResult, greedy_cover, simplex_lp, solve_cover_ilp
-from .checkpointing import CkptSolution, diag_index, solve_checkpointing
+from .checkpointing import (CkptSolution, diag_index, encoder_stage_split,
+                            solve_checkpointing, stage_roles)
 from .grouping import GroupingResult, group_sequences
 from .schedule import (Occupancy, PipelineSimulator, ScheduleSpec, SimResult,
                        available_schedules, backward_order, build_schedule,
@@ -26,7 +27,8 @@ __all__ = [
     "CostModel", "analytic_coefficients", "fit_coefficients",
     "ChunkingResult", "chunk_sequences", "seq_workload",
     "IlpResult", "greedy_cover", "simplex_lp", "solve_cover_ilp",
-    "CkptSolution", "diag_index", "solve_checkpointing",
+    "CkptSolution", "diag_index", "encoder_stage_split",
+    "solve_checkpointing", "stage_roles",
     "GroupingResult", "group_sequences",
     "Occupancy", "PipelineSimulator", "ScheduleSpec", "SimResult",
     "available_schedules", "backward_order", "build_schedule",

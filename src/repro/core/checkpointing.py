@@ -25,10 +25,11 @@ import numpy as np
 
 from .costs import CostModel
 from .ilp import IlpResult, solve_cover_ilp
-from .plan import Chunk
+from .plan import Chunk, ModelSpec
 from .schedule import enumerate_windows
 
-__all__ = ["CkptSolution", "solve_checkpointing", "diag_index"]
+__all__ = ["CkptSolution", "solve_checkpointing", "diag_index",
+           "encoder_stage_split", "stage_roles"]
 
 
 def diag_index(d_p: int, stage: int, bwd_idx: int) -> int:
@@ -39,6 +40,33 @@ def diag_index(d_p: int, stage: int, bwd_idx: int) -> int:
     return (d_p - stage) + bwd_idx
 
 
+def encoder_stage_split(n_enc_layers: int, n_dec_layers: int,
+                        d_p: int) -> Tuple[int, int]:
+    """(enc_stages, dec_stages): pipeline stages holding encoder vs decoder
+    layers, proportional to layer counts with both sides >= 1. The single
+    source of truth — ``runtime.encdec_pipeline.encdec_stage_split``
+    delegates here so the solver's stage roles and the executor's stage
+    split can never drift apart."""
+    total = max(1, n_enc_layers + n_dec_layers)
+    enc_stages = max(1, round(d_p * n_enc_layers / total))
+    enc_stages = min(enc_stages, d_p - 1)
+    return enc_stages, d_p - enc_stages
+
+
+def stage_roles(spec: ModelSpec, d_p: int) -> Tuple[str, ...]:
+    """Per-stage role vector (1-based stage p at index p-1): ``"encoder"``
+    for the leading encoder stages of an enc-dec arch, ``"decoder"``
+    everywhere else. This is what makes the checkpointing ILP *stage-aware*
+    across heterogeneous stages: encoder stages carry no causal KV (nothing
+    un-freeable under Eq. 9), so their per-layer checkpoint saving F and
+    base residency I use encoder coefficients."""
+    if not spec.is_encoder_decoder or d_p <= 1:
+        return ("decoder",) * d_p
+    enc_st, dec_st = encoder_stage_split(spec.n_encoder_layers,
+                                         spec.n_layers, d_p)
+    return ("encoder",) * enc_st + ("decoder",) * dec_st
+
+
 @dataclass
 class CkptSolution:
     status: str                      # "optimal" | "feasible" | "infeasible"
@@ -46,17 +74,44 @@ class CkptSolution:
     table: List[List[int]]           # ckpt[p-1][k] per (stage, fwd chunk idx)
     recompute_time: float            # Eq. 17 pipeline-time penalty
     ilp: Optional[IlpResult] = None
+    roles: Optional[Tuple[str, ...]] = None  # per-stage role vector, if any
 
     @property
     def total_layers(self) -> int:
         return int(sum(self.diag))
 
+    def as_matrix(self) -> np.ndarray:
+        """The per-(stage, chunk) layer-count matrix, shape (d_p, n) — the
+        first-class artifact the executor consumes (rows = stages, columns
+        = forward chunk indices)."""
+        if not self.table:
+            return np.zeros((0, 0), dtype=np.int64)
+        return np.asarray(self.table, dtype=np.int64)
 
-def _coefficients(cm: CostModel, chunks: Sequence[Chunk]
+    def per_stage_max(self) -> List[int]:
+        """Max remat depth each stage ever applies (one entry per stage) —
+        the single-pipeline counterpart of
+        ``ExecutionPlan.ckpt_per_stage_max()``."""
+        return [int(max(row)) if row else 0 for row in self.table]
+
+
+def _coefficients(cm: CostModel, chunks: Sequence[Chunk],
+                  role: str = "decoder", layers: Optional[int] = None
                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Alg. 2 lines 1-3: per-chunk I (base bytes) and F (bytes freed per
-    checkpointed layer); plus the last-stage logits add-on."""
+    checkpointed layer); plus the last-stage logits add-on.
+
+    ``role`` selects the stage-aware coefficient set (Eq. 9-11): decoder
+    stages pay the un-freeable dependent-KV residency and recover less per
+    checkpointed layer (the layer input AND its KV must persist); encoder
+    stages are non-causal — no context carry, no dependent KV — so every
+    checkpointed layer frees the full per-layer activation slab. ``layers``
+    is the layer count of that role's path (the per-layer slab is
+    ``m_token / layers``): encoder stacks with ``n_encoder_layers !=
+    n_layers`` free a different slab per layer than decoder stacks.
+    """
     m, co, cl = cm.model, cm.coeffs, cm.cluster
+    n_lay = layers if layers else m.n_layers
     n = len(chunks)
     I = np.zeros(n)
     F = np.zeros(n)
@@ -65,11 +120,12 @@ def _coefficients(cm: CostModel, chunks: Sequence[Chunk]
     repl = cm.kv_replication
     for k, c in enumerate(chunks):
         toks = c.tokens
-        dep = 1.0 if c.has_dependents else 0.0
+        dep = 1.0 if (c.has_dependents and role == "decoder") else 0.0
+        kv_keep = 2.0 * dep * repl * m.d_kv
         I[k] = (co.m_token / cl.n_devices
                 + dep * repl * 2.0 * e * m.n_layers * m.d_kv / cl.n_devices) * toks
-        per_layer_saving = (co.m_token / (m.n_layers * cl.d_s)
-                            - e * (m.d_model + 2.0 * dep * repl * m.d_kv) / cl.d_s)
+        per_layer_saving = (co.m_token / (n_lay * cl.d_s)
+                            - e * (m.d_model + kv_keep) / cl.d_s)
         F[k] = max(0.0, per_layer_saving) * toks
         logits[k] = co.m_logits / cl.d_s * toks
     return I, F, logits
@@ -80,28 +136,57 @@ def solve_checkpointing(cm: CostModel, chunks: Sequence[Chunk],
                         capacity: Optional[float] = None,
                         gap: float = 0.02,
                         f_hat: Optional[float] = None,
-                        max_windows_per_stage: int = 64) -> CkptSolution:
+                        max_windows_per_stage: int = 64,
+                        roles: Optional[Sequence[str]] = None
+                        ) -> CkptSolution:
     """Solve Eq. 20 for one 1F1B pipeline.
 
     ``capacity`` defaults to the cluster's usable HBM (G). ``f_hat`` is the
     per-layer forward time of a balanced chunk (Eq. 17); derived from the
-    pipeline's actual chunks when not supplied.
+    pipeline's actual chunks when not supplied. ``roles`` (optional,
+    one entry per stage — see :func:`stage_roles`) switches each stage's
+    memory coefficients between the encoder and decoder sets, letting the
+    ILP hand encoder and decoder stages *different* checkpoint depths; the
+    default is all-decoder, which reproduces the role-free problem exactly.
     """
     m, cl = cm.model, cm.cluster
     n = len(chunks)
     d_p = cl.d_p
+    if roles is not None and len(roles) != d_p:
+        raise ValueError(f"roles must have one entry per stage "
+                         f"({d_p}), got {len(roles)}")
     if n == 0:
-        return CkptSolution("optimal", [], [], 0.0)
+        return CkptSolution("optimal", [], [], 0.0,
+                            roles=tuple(roles) if roles else None)
     G = capacity if capacity is not None else cl.capacity_bytes
     n_vars = n + d_p - 1
-    layers_per_stage = max(1, m.n_layers // d_p)
+    # per-stage layer capacity: without roles the classic uniform bound;
+    # with roles, encoder stages hold ceil(n_enc / enc_stages) layers and
+    # decoder stages ceil(n_dec / dec_stages) — the executor's actual
+    # split — so the ILP never certifies a depth a stage cannot realize
+    if roles is None or "encoder" not in roles:
+        stage_cap = [max(1, m.n_layers // d_p)] * d_p
+        n_enc_layers = m.n_layers
+    else:
+        enc_st = sum(1 for r in roles if r == "encoder")
+        dec_st = max(1, d_p - enc_st)
+        n_enc_layers = m.n_encoder_layers if m.n_encoder_layers > 0 \
+            else m.n_layers
+        cap_enc = max(1, -(-n_enc_layers // max(enc_st, 1)))
+        cap_dec = max(1, -(-m.n_layers // dec_st))
+        stage_cap = [cap_enc if r == "encoder" else cap_dec for r in roles]
 
-    I, F, logits = _coefficients(cm, chunks)
+    coeff = {"decoder": _coefficients(cm, chunks, "decoder")}
+    if roles is not None and "encoder" in roles:
+        coeff["encoder"] = _coefficients(cm, chunks, "encoder",
+                                         layers=n_enc_layers)
     windows = enumerate_windows(n, d_p, n_split, f2b)
 
     rows: List[np.ndarray] = []
     rhs: List[float] = []
     for p in range(1, d_p + 1):
+        role = roles[p - 1] if roles is not None else "decoder"
+        I, F, logits = coeff[role]
         budget = G - cm.m_model_states(p)
         stage_rows: List[Tuple[float, np.ndarray]] = []
         for w in windows[p - 1]:
@@ -124,15 +209,27 @@ def solve_checkpointing(cm: CostModel, chunks: Sequence[Chunk],
             rows.append(row)
             rhs.append(need)
 
-    ub = np.full(n_vars, float(layers_per_stage))
+    rtup = tuple(roles) if roles is not None else None
+    # the diagonal tying (Eq. 16) shares one variable across several
+    # (stage, chunk) cells, so each variable's bound is the TIGHTEST layer
+    # capacity among the stages it serves (uniform-capacity case reduces
+    # to the classic single bound)
+    ub = np.full(n_vars, float(max(stage_cap)))
+    for p in range(1, d_p + 1):
+        capv = float(stage_cap[p - 1])
+        for k in range(n):
+            j = diag_index(d_p, p, f2b[k])
+            if capv < ub[j]:
+                ub[j] = capv
     if not rows:
         diag = [0] * n_vars
         table = [[0] * n for _ in range(d_p)]
-        return CkptSolution("optimal", diag, table, 0.0)
+        return CkptSolution("optimal", diag, table, 0.0, roles=rtup)
 
     res = solve_cover_ilp(np.vstack(rows), np.asarray(rhs), ub, gap=gap)
     if res.status == "infeasible" or res.x is None:
-        return CkptSolution("infeasible", [], [], math.inf, ilp=res)
+        return CkptSolution("infeasible", [], [], math.inf, ilp=res,
+                            roles=rtup)
 
     diag = [int(round(v)) for v in res.x]
     table = [[0] * n for _ in range(d_p)]
@@ -144,4 +241,5 @@ def solve_checkpointing(cm: CostModel, chunks: Sequence[Chunk],
         avg_fwd = sum(cm.t_tot(c) for c in chunks) / n
         f_hat = avg_fwd / m.n_layers
     recompute = f_hat * sum(diag)
-    return CkptSolution(res.status, diag, table, recompute, ilp=res)
+    return CkptSolution(res.status, diag, table, recompute, ilp=res,
+                        roles=rtup)

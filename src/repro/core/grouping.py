@@ -20,7 +20,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .checkpointing import CkptSolution, solve_checkpointing
+from .checkpointing import CkptSolution, solve_checkpointing, stage_roles
 from .chunking import ChunkingResult
 from .costs import CostModel
 from .plan import Chunk, ChunkKind, PipelinePlan
@@ -50,8 +50,13 @@ def _candidate(cm: CostModel, chunks: List[Chunk], n_split: int, *,
     if not chunks:
         return 0.0, None
     f2b = backward_order(chunks)
+    # stage-aware roles: enc-dec arches get encoder coefficients on their
+    # leading stages, so the ILP can hand encoder and decoder stages
+    # different checkpoint depths (all-decoder otherwise — a no-op)
+    roles = stage_roles(cm.model, cm.cluster.d_p)
     sol = solve_checkpointing(cm, chunks, f2b, n_split, gap=gap,
-                              capacity=capacity)
+                              capacity=capacity,
+                              roles=roles if "encoder" in roles else None)
     if sol.status == "infeasible":
         return math.inf, None
     delta = cm.delta_warmup(chunks)

@@ -413,7 +413,10 @@ class BucketKey(NamedTuple):
     n_chunks: int       # chunk count rounded UP to chunk_rounding
     cap: int            # chunk token capacity rounded up to d_s
     ctx_cap: int        # context capacity rounded up to cap
-    l_ckpt: int         # uniform ILP recompute depth baked into the step
+    l_ckpt: int         # max ILP recompute depth baked into the step
+    ckpt: str           # canonical remat-policy digest ("uN" uniform depth
+                        # N; "v<sha12>" a per-(stage, chunk) vector) — plans
+                        # with different remat never alias one executable
 
 
 @dataclass
@@ -452,11 +455,68 @@ class ExecutionPlan:
                     best = max(best, v)
         return best
 
+    def ckpt_table(self, n_chunks: Optional[int] = None
+                   ) -> List[List[int]]:
+        """The per-(stage, chunk) checkpoint matrix for the WHOLE plan:
+        rows are pipeline stages, columns follow the executor's chunk
+        order (all pipelines' chunks concatenated). ``n_chunks`` pads the
+        columns to the compiled bucket's rounded chunk count — padding
+        chunks are fully masked, so their remat depth is 0.
+        """
+        d_p = max((len(p.ckpt) for p in self.pipelines), default=0)
+        cols: List[List[int]] = []
+        for p in self.pipelines:
+            n = p.n_chunks
+            ck = p.ckpt if p.ckpt else [[0] * n for _ in range(d_p)]
+            for k in range(n):
+                cols.append([int(ck[r][k]) if r < len(ck) else 0
+                             for r in range(d_p)])
+        if n_chunks is not None:
+            while len(cols) < n_chunks:
+                cols.append([0] * d_p)
+            cols = cols[:n_chunks]
+        return [[col[r] for col in cols] for r in range(d_p)]
+
+    def ckpt_per_stage_max(self) -> List[int]:
+        """Max remat depth each stage ever applies (one entry per stage) —
+        the per-stage remat axis dry-run sweep records and the train
+        bootstrap log prints."""
+        return [max(r) if r else 0 for r in self.ckpt_table()]
+
+    def ckpt_policy(self, n_chunks: Optional[int] = None
+                    ) -> Tuple[int, Optional[Tuple[Tuple[int, ...], ...]], str]:
+        """Canonicalized remat policy for the executor: ``(l_max, table,
+        digest)``.
+
+        * ``remat_mode == "uniform"``: every (stage, chunk) remats the max
+          ILP depth — ``table`` is None (static split), digest ``"uN"``.
+        * vector modes (``"stage_aware"`` / legacy ``"per_chunk"``): the
+          padded per-(stage, chunk) matrix — collapsed back to None (and a
+          ``"uN"`` digest) when every REAL entry agrees (bucket-padding
+          columns are fully-masked chunks, so their depth is arbitrary and
+          must not block the collapse), because a constant vector compiles
+          to exactly the uniform program and SHOULD share its executable;
+          otherwise a ``"v" + sha256[:12]`` digest over the canonical
+          padded row-major bytes.
+        """
+        l_max = self.uniform_ckpt()
+        if self.remat_mode == "uniform" or not self.pipelines:
+            return l_max, None, f"u{l_max}"
+        flat = [v for row in self.ckpt_table() for v in row]
+        if not flat or all(v == flat[0] for v in flat):
+            c = flat[0] if flat else 0
+            return c, None, f"u{c}"
+        import hashlib
+        table = self.ckpt_table(n_chunks)
+        blob = json.dumps(table).encode()
+        return (l_max, tuple(tuple(row) for row in table),
+                "v" + hashlib.sha256(blob).hexdigest()[:12])
+
     def bucket_key(self, d_s: int, *, chunk_rounding: int = 8,
                    cap_quantum: int = 0) -> BucketKey:
         """The compiled-executable bucket this plan lands in:
         :class:`BucketKey` ``(schedule, v_stages, n_chunks, cap, ctx_cap,
-        l_ckpt)`` — access fields by name, not position.
+        l_ckpt, ckpt)`` — access fields by name, not position.
 
         The schedule backend leads the key: tick count, stream routing and
         layer stacking are all schedule-shaped, so two plans that agree on
@@ -483,9 +543,14 @@ class ExecutionPlan:
         cap = -(-self.chunk_capacity // q) * q
         max_ctx = max((c.context for c in chunks), default=0)
         ctx_cap = -(-(max_ctx + cap) // cap) * cap
+        # the remat policy is baked into the compiled step (a constant
+        # table in HLO), so its canonical digest must disambiguate the
+        # bucket: two plans agreeing on geometry but not on remat would
+        # otherwise warm-hit a wrong-remat executable
+        l_max, _, digest = self.ckpt_policy(n)
         return BucketKey(schedule=self.schedule, v_stages=self.v_stages,
                          n_chunks=n, cap=cap, ctx_cap=ctx_cap,
-                         l_ckpt=self.uniform_ckpt())
+                         l_ckpt=l_max, ckpt=digest)
 
     def to_json(self) -> Dict[str, Any]:
         return {

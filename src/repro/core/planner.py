@@ -36,7 +36,11 @@ class PlannerConfig:
     k_min: int = 1
     k_max: Optional[int] = None       # default: d_p + 4 (paper's range)
     ilp_gap: float = 0.02             # SCIP-style optimality gap (§V-F)
-    remat_mode: str = "uniform"       # "uniform" | "per_chunk"
+    # remat policy the EXECUTOR applies (the ILP always solves the full
+    # per-(stage, chunk) table): "uniform" collapses it to one max depth
+    # (the pre-vector behavior); "stage_aware" threads the table itself
+    # into the compiled step ("per_chunk" is the legacy alias)
+    remat_mode: str = "uniform"       # "uniform" | "stage_aware"
     capacity_bytes: Optional[float] = None
     token_capacity: Optional[int] = None
     bucket_rounding: int = 512        # chunk-capacity bucket granularity

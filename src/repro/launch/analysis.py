@@ -98,7 +98,15 @@ def analytic_collectives(cfg, geom, kind: str) -> dict:
             # every forward collective transposes once in backward
             # (all_gather <-> reduce_scatter, a2a <-> a2a); checkpointed
             # layers re-run their forward gathers during recompute.
-            l_ck = getattr(geom, "l_ckpt", 0)
+            # stage-aware tables recompute a different depth per (stage,
+            # chunk); the mean depth gives the exact aggregate re-gather
+            # volume (collapses to l_ckpt for uniform geometries)
+            tab = getattr(geom, "ckpt_table", None)
+            if tab is not None:
+                vals = [v for row in tab for v in row]
+                l_ck = sum(vals) / max(len(vals), 1)
+            else:
+                l_ck = getattr(geom, "l_ckpt", 0)
             n_layers = max(s.n_layers, 1)
             remat_frac = min(1.0, l_ck * d_p / n_layers)
             out["ici_bytes"] *= (2.0 + remat_frac)

@@ -73,7 +73,8 @@ def attach_cell_store(cache_dir: str) -> None:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
              remat_override=None, note: str = "",
-             zero3_mode: str = "per_tick") -> dict:
+             zero3_mode: str = "per_tick",
+             ckpt_policy: str = "stage-aware") -> dict:
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
@@ -111,26 +112,38 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     per_pod_batch = max(1, shape.global_batch // n_pods)
 
     if cfg.spec.is_encoder_decoder and shape.kind in ("train", "prefill"):
-        return _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0)
+        return _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0,
+                                ckpt_policy=ckpt_policy)
 
     if shape.kind in ("train", "prefill"):
         cm = CostModel(cfg.spec, ClusterSpec(d_p=d_p, d_s=d_s,
                                              n_pods=n_pods))
         lengths = [shape.seq_len] * per_pod_batch
-        plan = plan_batch(cm, lengths, PlannerConfig())
+        remat_mode = ("stage_aware" if ckpt_policy == "stage-aware"
+                      else "uniform")
+        plan = plan_batch(cm, lengths, PlannerConfig(remat_mode=remat_mode))
         chunks = [c for p in plan.pipelines for c in p.chunks]
         cap = ((plan.chunk_capacity + d_s - 1) // d_s) * d_s
         max_ctx = max((c.context for c in chunks), default=0)
         ctx_cap = max_ctx + cap
-        l_ckpt = plan.uniform_ckpt() if remat_override is None \
-            else remat_override
+        # per-stage remat axis of the sweep: an explicit --remat override
+        # forces a uniform depth; otherwise the plan's canonical policy
+        # (stage-aware => the per-(stage, chunk) vector) is baked in
+        if remat_override is not None:
+            l_ckpt, table, digest = remat_override, None, \
+                f"u{remat_override}"
+        else:
+            l_ckpt, table, digest = plan.ckpt_policy(len(chunks))
         geom = make_geometry(cfg, mesh, n_chunks=len(chunks), cap=cap,
                              ctx_cap=ctx_cap, l_ckpt=l_ckpt,
                              zero3_mode=zero3_mode,
                              schedule=plan.schedule,
-                             v_stages=plan.v_stages)
+                             v_stages=plan.v_stages,
+                             ckpt_table=table)
         rec["plan"] = {"K": plan.k_split, "n_chunks": len(chunks),
                        "cap": cap, "ctx_cap": ctx_cap, "l_ckpt": l_ckpt,
+                       "ckpt_policy": ckpt_policy, "ckpt_digest": digest,
+                       "l_ckpt_stage": plan.ckpt_per_stage_max(),
                        "schedule": plan.schedule, "v_stages": plan.v_stages,
                        "pipelines": len(plan.pipelines),
                        "est_time_s": plan.est_total_time,
@@ -235,7 +248,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     return rec
 
 
-def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
+def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0,
+                     ckpt_policy: str = "stage-aware"):
     """seamless-m4t train/prefill: the stage-split enc-dec pipeline."""
     import jax
     import jax.numpy as jnp
@@ -260,13 +274,26 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0):
     lengths = [shape.seq_len] * per_pod_batch
     # encoder is pack-only: force K=1 (DESIGN.md §4 — splitting a
     # bidirectional encoder changes the math); decoder chunks follow.
-    plan = plan_batch(cm, lengths, PlannerConfig(fixed_k=1))
+    remat_mode = ("stage_aware" if ckpt_policy == "stage-aware"
+                  else "uniform")
+    # v_stages=1 pin: the grouped enc+dec stacking has no interleaved
+    # placement, so restrict the schedule pick to single-virtual-stage
+    # backends — and actually RUN the pick (the compiled cell must be the
+    # schedule the recorded plan stats describe)
+    plan = plan_batch(cm, lengths, PlannerConfig(fixed_k=1,
+                                                 remat_mode=remat_mode,
+                                                 v_stages=1))
     chunks = [c for p in plan.pipelines for c in p.chunks]
     cap = ((plan.chunk_capacity + d_s - 1) // d_s) * d_s
+    l_max, table, digest = plan.ckpt_policy(len(chunks))
     geom = make_encdec_geometry(cfg, mesh, n_chunks=len(chunks), cap=cap,
                                 cap_enc=cap, ctx_cap=cap + d_s,
-                                l_ckpt=plan.uniform_ckpt())
-    rec["plan"] = {"K": plan.k_split, "n_chunks": len(chunks), "cap": cap}
+                                l_ckpt=l_max, ckpt_table=table,
+                                schedule=plan.schedule)
+    rec["plan"] = {"K": plan.k_split, "n_chunks": len(chunks), "cap": cap,
+                   "schedule": plan.schedule,
+                   "ckpt_policy": ckpt_policy, "ckpt_digest": digest,
+                   "l_ckpt_stage": plan.ckpt_per_stage_max()}
 
     raw_shape = jax.eval_shape(
         lambda k: EncDecLM(cfg).init(k, jnp.float32), jax.random.PRNGKey(0))
@@ -405,6 +432,11 @@ def main():
     ap.add_argument("--remat", type=int, default=None)
     ap.add_argument("--zero3", default="per_tick",
                     choices=["per_tick", "per_step"])
+    ap.add_argument("--ckpt-policy", default="stage-aware",
+                    choices=["stage-aware", "uniform"],
+                    help="per-stage remat axis of the sweep: bake the "
+                         "ILP's per-(stage, chunk) vector into each cell "
+                         "(stage-aware) or its collapsed max (uniform)")
     ap.add_argument("--note", default="")
     ap.add_argument("--cache-dir", default="",
                     help="persistent compile-cache directory shared across "
@@ -432,7 +464,8 @@ def main():
             try:
                 rec = run_cell(arch, shape, mp, out_dir,
                                remat_override=args.remat, note=args.note,
-                               zero3_mode=args.zero3)
+                               zero3_mode=args.zero3,
+                               ckpt_policy=args.ckpt_policy)
             except Exception as e:  # noqa: BLE001
                 rec = {"arch": arch, "shape": shape,
                        "mesh": "2x16x16" if mp else "16x16",

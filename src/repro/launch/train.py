@@ -46,6 +46,18 @@ class TrainLoopConfig:
     # virtual-stage count into the parameter layout.
     schedule: Optional[str] = None
     v_stages: int = 0                 # 0 => auto (interleaved only)
+    # remat policy the compiled step applies: "stage-aware" threads the
+    # ILP's per-(stage, chunk) checkpoint vector into the executor
+    # (encoder/decoder stages and hot/cold chunks remat differently);
+    # "uniform" collapses it to one max depth (the pre-vector behavior).
+    # Parity is guaranteed either way — remat never changes the math
+    # (tests/test_remat_parity.py). Tradeoff: the vector is part of the
+    # compiled step's identity, so memory-pressured workloads whose solved
+    # tables vary step to step fragment the compile cache one bucket per
+    # distinct table — pass "uniform" to maximize executable reuse
+    # (workloads whose table solves to a constant, incl. the common
+    # all-zero case, collapse to the uniform digest automatically).
+    ckpt_policy: str = "stage-aware"
 
 
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
@@ -93,6 +105,8 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     # stacking bakes v_stages into the parameter layout, so mid-run
     # schedule switches would scramble live training state
     pinned = {"schedule": loop.schedule, "v_stages": loop.v_stages}
+    remat_mode = ("stage_aware" if loop.ckpt_policy == "stage-aware"
+                  else "uniform")
 
     def plan_for(step: int):
         cm = replan_costmodel(base_cm, monitor)
@@ -103,18 +117,25 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         plan = plan_batch(cm, lengths,
                           PlannerConfig(bucket_rounding=loop.bucket_rounding,
                                         schedule=pinned["schedule"],
-                                        v_stages=pinned["v_stages"]))
+                                        v_stages=pinned["v_stages"],
+                                        remat_mode=remat_mode))
         pinned["schedule"], pinned["v_stages"] = plan.schedule, plan.v_stages
         return plan, corpus
 
     def get_step(plan):
         key = plan.bucket_key(d_s)
         # the builder is cheap host-side state (geometry + specs); only
-        # the compiled executable is cached — and, via the store, persisted
+        # the compiled executable is cached — and, via the store, persisted.
+        # ckpt_policy() canonicalizes the remat vector (padded to the
+        # bucket's chunk count; constant tables collapse to the uniform
+        # scalar) — the same canonical form key.ckpt digests, so the cache
+        # can never hand this geometry a wrong-remat executable.
+        l_max, table, _digest = plan.ckpt_policy(key.n_chunks)
         geom = make_geometry(cfg_arch, mesh, n_chunks=key.n_chunks,
                              cap=key.cap, ctx_cap=key.ctx_cap,
-                             l_ckpt=key.l_ckpt, compute_dtype=dtype,
-                             schedule=key.schedule, v_stages=key.v_stages)
+                             l_ckpt=l_max, compute_dtype=dtype,
+                             schedule=key.schedule, v_stages=key.v_stages,
+                             ckpt_table=table)
         builder = TrainStepBuilder(cfg_arch, mesh, geom, param_dtype=dtype)
 
         def build():
@@ -131,6 +152,11 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     plan, corpus = plan_for(0)
     log(f"[schedule] {plan.schedule} v={plan.v_stages} "
         f"(pinned for this run)")
+    _key0 = plan.bucket_key(d_s)
+    log(f"[ckpt] policy={loop.ckpt_policy} digest={_key0.ckpt} "
+        f"l_max={_key0.l_ckpt}"
+        + ("" if _key0.ckpt.startswith("u") else
+           f" per_stage_max={plan.ckpt_per_stage_max()}"))
     builder, step_fn = get_step(plan)
     params, opt, _ = builder.init_all(jax.random.PRNGKey(loop.seed))
     def _restack(saved: np.ndarray, tmpl) -> Optional[np.ndarray]:
@@ -257,6 +283,12 @@ def main():
     ap.add_argument("--v-stages", type=int, default=0,
                     help="virtual stages per device for interleaved-1f1b "
                          "(0 = auto; must divide layers per stage)")
+    ap.add_argument("--ckpt-policy", default="stage-aware",
+                    choices=["stage-aware", "uniform"],
+                    help="remat policy baked into the compiled step: "
+                         "'stage-aware' threads the ILP's per-(stage, "
+                         "chunk) checkpoint vector into the executor; "
+                         "'uniform' collapses it to one max depth")
     args = ap.parse_args()
 
     import os
@@ -276,7 +308,8 @@ def main():
                            cache_dir=args.cache_dir,
                            compute_dtype="float32" if args.reduced
                            else "bfloat16",
-                           schedule=args.schedule, v_stages=args.v_stages)
+                           schedule=args.schedule, v_stages=args.v_stages,
+                           ckpt_policy=args.ckpt_policy)
     _, _, history = train(cfg, mesh, loop)
     if args.stats_json:
         import json

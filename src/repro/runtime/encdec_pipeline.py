@@ -52,33 +52,59 @@ class EncDecGeometry:
     ctx_cap: int
     d_p: int
     d_s: int
-    l_ckpt: int
+    l_ckpt: int               # max remat depth (uniform policy value)
     enc_stages: int
     layers_per_stage: int     # max(enc, dec) layers per stage
     compute_dtype: Any = jnp.bfloat16
     policy: str = "allgather_kv"
+    # schedule backend. Only single-virtual-stage backends are supported:
+    # the grouped enc+dec stacking has no interleaved placement, so
+    # v_stages is pinned at 1 (interleaved-1f1b still runs — at v=1 its
+    # tick map is the classic diagonal).
+    schedule: str = "gpipe-1f1b"
+    v_stages: int = 1
+    # stage-aware checkpointing table, (d_p, n_chunks) tuple-of-tuples —
+    # this is WHERE encoder and decoder stages get different remat depths
+    # (solver roles from core.checkpointing.stage_roles); None = uniform.
+    ckpt_table: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.v_stages != 1:
+            raise ValueError(
+                "enc-dec pipelines support v_stages=1 only (the grouped "
+                f"enc+dec layer stacking has no interleaved placement); "
+                f"got {self.v_stages}")
+        executor.canonical_ckpt_table(self.ckpt_table, d_p=self.d_p,
+                                      n_chunks=self.n_chunks)
 
 
 def encdec_stage_split(cfg: ArchConfig, d_p: int) -> Tuple[int, int]:
+    """(enc_stages, dec_stages) — delegates to the core solver's
+    :func:`~repro.core.checkpointing.encoder_stage_split` so the executor's
+    stage split and the checkpointing ILP's stage roles agree by
+    construction."""
+    from repro.core.checkpointing import encoder_stage_split
     s = cfg.spec
-    total = s.n_encoder_layers + s.n_layers
-    enc_stages = max(1, round(d_p * s.n_encoder_layers / total))
-    enc_stages = min(enc_stages, d_p - 1)
-    return enc_stages, d_p - enc_stages
+    return encoder_stage_split(s.n_encoder_layers, s.n_layers, d_p)
 
 
 def make_encdec_geometry(cfg: ArchConfig, mesh, *, n_chunks: int, cap: int,
                          cap_enc: int, ctx_cap: int, l_ckpt: int = 0,
-                         compute_dtype=jnp.bfloat16) -> EncDecGeometry:
+                         compute_dtype=jnp.bfloat16,
+                         schedule: str = "gpipe-1f1b",
+                         ckpt_table=None) -> EncDecGeometry:
     pod, data, model = mesh_axis_names(mesh)
     d_p, d_s = mesh.shape[data], mesh.shape[model]
     enc_st, dec_st = encdec_stage_split(cfg, d_p)
     L_ps = max(-(-cfg.spec.n_encoder_layers // enc_st),
                -(-cfg.spec.n_layers // dec_st))
+    ckpt_table = executor.canonical_ckpt_table(ckpt_table, d_p=d_p,
+                                               n_chunks=n_chunks)
     return EncDecGeometry(n_chunks=n_chunks, cap=cap, cap_enc=cap_enc,
                           ctx_cap=ctx_cap, d_p=d_p, d_s=d_s, l_ckpt=l_ckpt,
                           enc_stages=enc_st, layers_per_stage=L_ps,
-                          compute_dtype=compute_dtype)
+                          compute_dtype=compute_dtype, schedule=schedule,
+                          ckpt_table=ckpt_table)
 
 
 def prepare_encdec_params(cfg: ArchConfig, raw: Dict, geom: EncDecGeometry,
@@ -179,6 +205,10 @@ def encdec_pipeline_loss_fn(cfg: ArchConfig, geom: EncDecGeometry,
     active_all = jnp.asarray(
         _np.concatenate([act_enc, act_dec]).reshape(d_p, L_ps))
     scale = 1.0 / math.sqrt(s.head_dim)
+    # stage-aware checkpointing: encoder rows of the table carry the
+    # solver's encoder-role depths, decoder rows the decoder-role ones
+    ckpt_tab = None if geom.ckpt_table is None else \
+        jnp.asarray(geom.ckpt_table, jnp.int32)
 
     def _cross(lp, h, memory, seg_q, seg_mem):
         dtl = h.dtype
@@ -276,9 +306,12 @@ def encdec_pipeline_loss_fn(cfg: ArchConfig, geom: EncDecGeometry,
                     jnp.where(act & (~is_enc), nv, lctx.v), None, None)
                 return (he_out, hd_out), new_ctx
 
+            l_act = geom.l_ckpt if ckpt_tab is None else \
+                executor.remat_tick_count(ckpt_tab, tc.p_idx, tc.idxc,
+                                          tc.valid)
             (h_enc2, h_dec2), new_ctx = executor.run_stage_layers(
                 layer_body, (h_enc, h_dec), (stage_params, active, ctx),
-                l_ckpt=geom.l_ckpt, n_layers=L_ps)
+                l_ckpt=l_act, n_layers=L_ps)
 
             h_last = rms_norm(h_dec2, fn_gamma, cfg.rms_eps)
             acc = executor.fold_streaming_ce(
@@ -289,7 +322,8 @@ def encdec_pipeline_loss_fn(cfg: ArchConfig, geom: EncDecGeometry,
         he0 = jnp.zeros((cape_loc, s.d_model), dt)
         hd0 = jnp.zeros((cap_loc, s.d_model), dt)
         program = StageProgram(n_items=n, d_p=d_p, data_axis=data_axis,
-                               tick=tick, psum_acc=True)
+                               tick=tick, psum_acc=True,
+                               schedule=geom.schedule, v=geom.v_stages)
         _, ctxf, (loss, n_val) = executor.run_stage_program(
             program, (he0, hd0), ctx0, (jnp.float32(0), jnp.float32(0)))
         return loss, n_val

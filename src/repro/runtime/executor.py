@@ -15,7 +15,11 @@ One engine runs every scanned pipeline in the repo. Backends
   dependency, Eq. 5);
 * :func:`run_stage_layers` — remat-split per-stage layer execution: the
   solver-chosen leading ``l_ckpt`` layers run under ``jax.checkpoint``
-  (layer-granular recomputation, Eq. 9-11), the rest keep activations;
+  (layer-granular recomputation, Eq. 9-11), the rest keep activations.
+  ``l_ckpt`` may be a static int (one split point baked into the scan) or
+  a traced scalar — the stage-aware per-(stage, chunk) policy, where
+  :func:`remat_tick_count` looks the active depth up from the plan's
+  checkpoint table at every tick;
 * :func:`reset_ssm_at_boundary` — the split-chunk context-carry rule: a
   chunk with ``ctx_len == 0`` starts a new sequence, so SSM state resets
   (KV buffers reset implicitly by overwriting from offset 0);
@@ -36,13 +40,31 @@ from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import sp
 from .program import StageProgram, TickContext
 
 __all__ = ["run_stage_program", "run_stage_layers", "ppermute_streams",
-           "schedule_tick_coords",
+           "schedule_tick_coords", "remat_tick_count",
+           "canonical_ckpt_table",
            "reset_ssm_at_boundary", "fold_streaming_ce", "fold_greedy_ids"]
+
+
+def canonical_ckpt_table(table, *, d_p: int, n_chunks: int):
+    """Validate + canonicalize a per-(stage, chunk) checkpoint table to the
+    hashable ``(d_p, n_chunks)`` tuple-of-tuples the frozen geometries
+    store (None passes through: the uniform policy). The single shape
+    gatekeeper for every geometry factory and ``__post_init__`` — a wrong
+    shape must fail loudly before it is baked into a compiled step."""
+    if table is None:
+        return None
+    out = tuple(tuple(int(v) for v in row) for row in table)
+    if len(out) != d_p or any(len(r) != n_chunks for r in out):
+        raise ValueError(
+            f"ckpt_table must be (d_p={d_p}, n_chunks={n_chunks}); got "
+            f"({len(out)}, {sorted(set(len(r) for r in out))})")
+    return out
 
 
 def schedule_tick_coords(t, p_idx, *, n: int, d_p: int, v: int,
@@ -64,6 +86,33 @@ def schedule_tick_coords(t, p_idx, *, n: int, d_p: int, v: int,
     idx = (r // v) * d_p + q
     valid = (u >= 0) & (u < n_groups * v * d_p) & (idx < n)
     return idx, v_idx, valid
+
+
+def remat_tick_count(table, p_idx, idxc, valid, *, v: int = 1,
+                     l_max: int = None):
+    """Active remat depth for the ``(stage, virtual-stage, chunk)`` a tick
+    runs — the engine-side lookup into the solver's per-(stage, chunk)
+    checkpoint table (Eq. 9-11 made stage-aware).
+
+    ``table`` is a ``(d_p, n_chunks)`` integer array; like
+    :func:`schedule_tick_coords` this is written in overloaded arithmetic
+    only (indexing + ``*`` / floor ``//``), so it evaluates identically on
+    traced jnp scalars inside the scan and on plain ints/NumPy in the
+    host-side simulators and tests — PROVIDED ``idxc`` is the CLIPPED
+    in-range item index (``TickContext.idxc``, never the raw ``idx``):
+    bubble ticks carry out-of-range raw indices that jnp would clamp but
+    NumPy would reject. Bubble ticks (``valid`` False) remat nothing; with
+    ``v`` virtual stages the stage's budget splits ``ceil(l / v)`` per
+    block — the same memory-safe rounding the uniform path uses
+    (over-remat bounded by ``v - 1`` layers). ``l_max`` clips to the
+    block's layer count.
+    """
+    l = table[p_idx, idxc] * valid
+    if v > 1:
+        l = -((-l) // v)
+    if l_max is not None:
+        l = l + (l_max - l) * (l > l_max)   # min(l, l_max), overloaded
+    return l
 
 
 def ppermute_streams(streams, data_axis: str, d_p: int, *,
@@ -129,7 +178,7 @@ def run_stage_program(program: StageProgram, init_streams, init_state,
     return streams, state, acc
 
 
-def run_stage_layers(layer_body: Callable, carry, xs, *, l_ckpt: int,
+def run_stage_layers(layer_body: Callable, carry, xs, *, l_ckpt,
                      n_layers: int):
     """Scan one stage's layers with the solver's remat split.
 
@@ -141,28 +190,52 @@ def run_stage_layers(layer_body: Callable, carry, xs, *, l_ckpt: int,
     activations. Returns ``(carry, ys)`` with the two partial scans' ys
     concatenated back to leading dim ``n_layers`` (None leaves pass
     through).
+
+    ``l_ckpt`` may be:
+
+    * a static python int — the split point is baked into the trace as two
+      partial scans (the uniform policy; unchanged, bitwise-stable path);
+    * a traced scalar (the stage-aware per-(stage, chunk) policy, looked
+      up per tick via :func:`remat_tick_count`) — one scan over all
+      ``n_layers`` whose body selects per layer, via ``lax.cond`` on
+      ``layer_idx < l_ckpt``, between the ``jax.checkpoint``-wrapped body
+      and the plain one. Values and gradients are identical either way —
+      remat never changes the math (tests/test_remat_parity.py) — only
+      which residuals the backward rematerializes.
     """
-    l_ck = max(0, min(l_ckpt, n_layers))
+    if isinstance(l_ckpt, (int, np.integer)):
+        l_ck = max(0, min(l_ckpt, n_layers))
 
-    def split(a, b):
-        return jax.tree.map(lambda t: t[a:b], xs)
+        def split(a, b):
+            return jax.tree.map(lambda t: t[a:b], xs)
 
-    ys_parts = []
-    if l_ck > 0:
-        body_ck = jax.checkpoint(layer_body, prevent_cse=False)
-        carry, ys = jax.lax.scan(body_ck, carry, split(0, l_ck))
-        ys_parts.append(ys)
-    if l_ck < n_layers:
-        carry, ys = jax.lax.scan(layer_body, carry, split(l_ck, n_layers))
-        ys_parts.append(ys)
-    if len(ys_parts) == 2:
-        ys = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0) if a is not None
-            else None, ys_parts[0], ys_parts[1],
-            is_leaf=lambda t: t is None)
-    else:
-        ys = ys_parts[0]
-    return carry, ys
+        ys_parts = []
+        if l_ck > 0:
+            body_ck = jax.checkpoint(layer_body, prevent_cse=False)
+            carry, ys = jax.lax.scan(body_ck, carry, split(0, l_ck))
+            ys_parts.append(ys)
+        if l_ck < n_layers:
+            carry, ys = jax.lax.scan(layer_body, carry,
+                                     split(l_ck, n_layers))
+            ys_parts.append(ys)
+        if len(ys_parts) == 2:
+            ys = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0) if a is not None
+                else None, ys_parts[0], ys_parts[1],
+                is_leaf=lambda t: t is None)
+        else:
+            ys = ys_parts[0]
+        return carry, ys
+
+    # traced l_ckpt: per-layer runtime selection between remat / plain
+    body_ck = jax.checkpoint(layer_body, prevent_cse=False)
+    remat_flags = jnp.arange(n_layers) < l_ckpt
+
+    def body(c, per_layer):
+        flag, xs_layer = per_layer
+        return jax.lax.cond(flag, body_ck, layer_body, c, xs_layer)
+
+    return jax.lax.scan(body, carry, (remat_flags, xs))
 
 
 def reset_ssm_at_boundary(ctx, ctx_len):

@@ -44,7 +44,7 @@ class PipelineGeometry:
     ctx_cap: int             # context buffer rows (policy layout dependent)
     d_p: int
     d_s: int
-    l_ckpt: int              # uniform remat: leading layers checkpointed
+    l_ckpt: int              # max remat depth (uniform policy value)
     layers_per_stage: int
     policy: str              # "ulysses" | "allgather_kv" | "none"
     compute_dtype: Any = jnp.bfloat16
@@ -61,12 +61,23 @@ class PipelineGeometry:
     # (sharding.interleaved_layer_order), so it is fixed per training run.
     schedule: str = "gpipe-1f1b"
     v_stages: int = 1
+    # stage-aware adaptive checkpointing (Eq. 9-11): the solver's
+    # per-(stage, chunk) layer-count matrix as a hashable (d_p, n_chunks)
+    # tuple-of-tuples — None means the uniform policy (every tick remats
+    # the leading l_ckpt layers via a static scan split). When set, each
+    # tick looks its (stage, v_idx, chunk) depth up in traced arithmetic
+    # (executor.remat_tick_count) and the whole table is baked into the
+    # compiled step — which is why ExecutionPlan.bucket_key() carries the
+    # table's digest.
+    ckpt_table: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def __post_init__(self) -> None:
         if self.v_stages < 1 or self.layers_per_stage % self.v_stages:
             raise ValueError(
                 f"v_stages={self.v_stages} must divide "
                 f"layers_per_stage={self.layers_per_stage}")
+        executor.canonical_ckpt_table(self.ckpt_table, d_p=self.d_p,
+                                      n_chunks=self.n_chunks)
 
 
 def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
@@ -120,13 +131,15 @@ def _run_stage_layers(model: DecoderLM, geom: PipelineGeometry,
                       stage_params, shard_dims, x, ctx: LayerCtx, *,
                       seg, pos, ctx_len, windows, active, model_axis: str,
                       n_layers: Optional[int] = None,
-                      l_ckpt: Optional[int] = None):
+                      l_ckpt: Optional[Any] = None):
     """This backend's layer body under the executor's remat split:
     ZeRO-3 gather (per-tick mode), ``layer_apply`` with the context carry,
     and ``active`` masking padded layer slots into identity.
 
     ``n_layers``/``l_ckpt`` override the geometry defaults when the tick
-    runs a single virtual-stage block instead of the whole stage."""
+    runs a single virtual-stage block instead of the whole stage;
+    ``l_ckpt`` may be a traced scalar (the stage-aware per-(stage, chunk)
+    lookup) — the executor then selects remat per layer at runtime."""
 
     def layer_body(x, per_layer):
         lp, w, act, lctx = per_layer
@@ -181,6 +194,10 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
         win_flat, act_flat = win_flat[order], act_flat[order]
     windows_all = jnp.asarray(win_flat.reshape(geom.d_p, L_s))
     active_all = jnp.asarray(act_flat.reshape(geom.d_p, L_s))
+    # stage-aware checkpointing: the solver's (d_p, n_chunks) table as a
+    # baked-in constant; None keeps the uniform static-split path
+    ckpt_tab = None if geom.ckpt_table is None else \
+        jnp.asarray(geom.ckpt_table, jnp.int32)
 
     def loss_local(params, batch):
         p_idx = jax.lax.axis_index(data_axis)
@@ -224,10 +241,13 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
 
             if v_st == 1:
                 ctx = executor.reset_ssm_at_boundary(ctx, ctx_len)
+                l_act = None if ckpt_tab is None else \
+                    executor.remat_tick_count(ckpt_tab, tc.p_idx, tc.idxc,
+                                              tc.valid)
                 x_out, ctx = _run_stage_layers(
                     model, geom, stage_params, shard_dims, x_in, ctx,
                     seg=seg, pos=pos, ctx_len=ctx_len, windows=windows,
-                    active=active, model_axis=model_axis)
+                    active=active, model_axis=model_axis, l_ckpt=l_act)
             else:
                 # interleaved-1f1b: this tick runs ONE virtual stage — the
                 # L_v-layer block (and its context-carry slice) at
@@ -241,17 +261,22 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
                     lambda t: _slc(t) if t is not None else None, ctx,
                     is_leaf=lambda t: t is None)
                 ctx_v = executor.reset_ssm_at_boundary(ctx_v, ctx_len)
-                # spread the solver's per-stage remat budget over the v
-                # virtual blocks: ceil keeps total checkpointed layers >=
-                # l_ckpt (memory-safe direction; over-remat bounded by
-                # v - 1 layers, NOT v * l_ckpt)
+                # spread the solver's remat budget over the v virtual
+                # blocks: ceil keeps total checkpointed layers >= the
+                # stage's depth (memory-safe direction; over-remat bounded
+                # by v - 1 layers, NOT v * l_ckpt). Stage-aware tables
+                # look the (stage, chunk) depth up per tick first.
+                l_act = min(-(-geom.l_ckpt // v_st), L_v) \
+                    if ckpt_tab is None else \
+                    executor.remat_tick_count(ckpt_tab, tc.p_idx, tc.idxc,
+                                              tc.valid, v=v_st, l_max=L_v)
                 x_out, ctx_v = _run_stage_layers(
                     model, geom, jax.tree.map(_slc, stage_params),
                     shard_dims, x_in, ctx_v,
                     seg=seg, pos=pos, ctx_len=ctx_len,
                     windows=_slc(windows), active=_slc(active),
                     model_axis=model_axis, n_layers=L_v,
-                    l_ckpt=min(-(-geom.l_ckpt // v_st), L_v))
+                    l_ckpt=l_act)
                 ctx = jax.tree.map(
                     lambda full, new: jax.lax.dynamic_update_slice_in_dim(
                         full, new, start, 0) if full is not None else None,

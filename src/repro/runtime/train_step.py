@@ -51,10 +51,18 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
                   compute_dtype=jnp.bfloat16,
                   zero3_mode: str = "per_tick",
                   schedule: str = "gpipe-1f1b",
-                  v_stages: int = 1) -> PipelineGeometry:
+                  v_stages: int = 1,
+                  ckpt_table=None) -> PipelineGeometry:
+    """``ckpt_table`` (optional): the solver's per-(stage, chunk) remat
+    matrix — any (d_p, n_chunks) nested sequence; canonicalized to the
+    hashable tuple-of-tuples the frozen geometry stores. None keeps the
+    uniform ``l_ckpt`` policy."""
+    from .executor import canonical_ckpt_table
     pod, data, model = mesh_axis_names(mesh)
     d_p = mesh.shape[data]
     d_s = mesh.shape[model]
+    ckpt_table = canonical_ckpt_table(ckpt_table, d_p=d_p,
+                                      n_chunks=n_chunks)
     return PipelineGeometry(
         n_chunks=n_chunks, cap=cap, ctx_cap=ctx_cap, d_p=d_p, d_s=d_s,
         l_ckpt=l_ckpt,
@@ -63,7 +71,8 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
         compute_dtype=compute_dtype,
         zero3_mode=zero3_mode,
         schedule=schedule,
-        v_stages=v_stages)
+        v_stages=v_stages,
+        ckpt_table=ckpt_table)
 
 
 def prepare_params(cfg: ArchConfig, raw_params: Dict, mesh: Mesh,

@@ -335,3 +335,78 @@ def test_train_warm_start_end_to_end(tmp_path):
     cold = [(h["step"], h["loss"]) for h in hist_cold]
     warm = [(h["step"], h["loss"]) for h in hist_warm]
     assert cold == warm
+
+
+# ---------------------------------------------------------------------------
+# Bucket-key collision regression: remat vectors are part of the compiled
+# step's identity — two plans that differ ONLY in their checkpointing
+# vector must land in different buckets and different store entries.
+# ---------------------------------------------------------------------------
+
+def _plans_differing_only_in_ckpt():
+    import copy
+
+    from repro.core import ClusterSpec, CostModel, ModelSpec, \
+        PlannerConfig, plan_batch
+
+    m = ModelSpec(name="t", n_layers=16, d_model=1024, n_heads=16,
+                  n_kv_heads=8, head_dim=64, d_ff=4096, vocab=32000)
+    cm = CostModel(m, ClusterSpec(d_p=4, d_s=4, hbm_bytes=16e9))
+    lengths = [65536, 30000, 8000, 8000, 4000, 2000, 1000, 500]
+    plan_a = plan_batch(cm, lengths, PlannerConfig(
+        bucket_rounding=64, remat_mode="stage_aware",
+        capacity_bytes=cm.cluster.hbm_bytes * 0.1))
+    assert plan_a.uniform_ckpt() > 0, "fixture must force checkpointing"
+    plan_b = copy.deepcopy(plan_a)
+    # same chunks, same schedule, same geometry — one remat entry moved
+    tab = plan_b.pipelines[0].ckpt
+    p, k = next((p, k) for p in range(len(tab))
+                for k in range(len(tab[p])) if tab[p][k] > 0)
+    tab[p][k] -= 1
+    return plan_a, plan_b
+
+
+def test_bucket_key_distinguishes_ckpt_vectors():
+    plan_a, plan_b = _plans_differing_only_in_ckpt()
+    ka, kb = plan_a.bucket_key(4), plan_b.bucket_key(4)
+    # identical geometry/schedule tail ...
+    assert ka._replace(ckpt="", l_ckpt=0) == kb._replace(ckpt="", l_ckpt=0)
+    # ... but distinct remat digests => distinct bucket identities
+    assert ka.ckpt != kb.ckpt
+    assert ka != kb
+    # and a CompileCache treats them as separate buckets (no false hit)
+    cache = CompileCache(name="ckpt-buckets")
+    assert cache.get(ka, lambda: "A") == "A"
+    assert cache.get(kb, lambda: "B") == "B"
+    assert cache.stats.hits == 0 and cache.stats.misses == 2
+
+
+def test_cache_store_keeps_ckpt_vectors_apart(tmp_path):
+    """No warm-hit on a wrong-remat executable: entries persisted under
+    the two keys coexist on disk, and each key loads back exactly its own
+    executable (distinguishable outputs prove which one ran)."""
+    plan_a, plan_b = _plans_differing_only_in_ckpt()
+    ka, kb = plan_a.bucket_key(4), plan_b.bucket_key(4)
+    fp = store_fingerprint()
+
+    store1 = CacheStore(tmp_path, fp)
+    cache1 = CompileCache(name="ckpt-proc1", store=store1)
+    out_a = np.asarray(cache1.get(
+        ka, lambda: _compile_toy_step(0.5))(_toy_input()))
+    out_b = np.asarray(cache1.get(
+        kb, lambda: _compile_toy_step(2.0))(_toy_input()))
+    assert store1.stats.saves == 2
+    assert len(list(tmp_path.glob("*.bin"))) == 2, \
+        "ckpt-vector variants must not overwrite each other's entries"
+    assert out_a.tobytes() != out_b.tobytes()
+
+    # "restart": each key warm-loads its OWN executable
+    store2 = CacheStore(tmp_path, store_fingerprint())
+    cache2 = CompileCache(name="ckpt-proc2", store=store2)
+    warm_a = np.asarray(cache2.get(
+        ka, lambda: pytest.fail("must warm-load"))(_toy_input()))
+    warm_b = np.asarray(cache2.get(
+        kb, lambda: pytest.fail("must warm-load"))(_toy_input()))
+    assert cache2.stats.warm_hits == 2 and cache2.stats.misses == 0
+    assert warm_a.tobytes() == out_a.tobytes()
+    assert warm_b.tobytes() == out_b.tobytes()

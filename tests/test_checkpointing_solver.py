@@ -101,3 +101,163 @@ def test_stage_awareness_window_depth():
         need.append(max(sum(cm.m_act(p, res.chunks[k], 0) for k in w)
                         for w in windows[p - 1]))
     assert need[0] >= need[1]
+
+
+# ---------------------------------------------------------------------------
+# Stage-aware roles: encoder vs decoder stages get different coefficients
+# (and so can get different l_ckpt depths) — the ROADMAP's enc/dec split.
+# ---------------------------------------------------------------------------
+
+def _encdec_setup(hbm=16e9, d_p=4, d_s=4, k=3):
+    from repro.core import chunk_sequences
+    m = ModelSpec(name="ed", n_layers=16, d_model=1024, n_heads=16,
+                  n_kv_heads=8, head_dim=64, d_ff=4096, vocab=32000,
+                  is_encoder_decoder=True, n_encoder_layers=16)
+    cm = CostModel(m, ClusterSpec(d_p=d_p, d_s=d_s, hbm_bytes=hbm))
+    lengths = [65536, 30000, 8000, 8000, 4000, 2000, 1000, 500]
+    res = chunk_sequences(cm, lengths, k)
+    f2b = backward_order(res.chunks)
+    ns = max(s.n_chunks for s in res.sequences)
+    return cm, res, f2b, ns
+
+
+def test_stage_roles_vector():
+    from repro.core import encoder_stage_split, stage_roles
+    dec = ModelSpec(name="d", n_layers=8, d_model=256, n_heads=8,
+                    n_kv_heads=4, head_dim=32, d_ff=1024, vocab=512)
+    assert stage_roles(dec, 4) == ("decoder",) * 4
+    ed = ModelSpec(name="e", n_layers=8, d_model=256, n_heads=8,
+                   n_kv_heads=4, head_dim=32, d_ff=1024, vocab=512,
+                   is_encoder_decoder=True, n_encoder_layers=8)
+    roles = stage_roles(ed, 4)
+    assert roles == ("encoder", "encoder", "decoder", "decoder")
+    # split is clamped so both sides keep at least one stage
+    assert encoder_stage_split(100, 1, 4) == (3, 1)
+    assert encoder_stage_split(1, 100, 4) == (1, 3)
+
+
+def test_all_decoder_roles_reproduce_roleless_problem():
+    cm, res, f2b, ns = _setup()
+    for frac in (0.2, 0.1):
+        cap = cm.cluster.hbm_bytes * frac
+        base = solve_checkpointing(cm, res.chunks, f2b, ns, capacity=cap)
+        roled = solve_checkpointing(cm, res.chunks, f2b, ns, capacity=cap,
+                                    roles=("decoder",) * cm.cluster.d_p)
+        assert base.status == roled.status
+        assert base.table == roled.table and base.diag == roled.diag
+        assert roled.roles == ("decoder",) * cm.cluster.d_p
+
+
+def test_solution_matrix_and_per_stage_views():
+    cm, res, f2b, ns = _setup()
+    sol = solve_checkpointing(cm, res.chunks, f2b, ns,
+                              capacity=cm.cluster.hbm_bytes * 0.1)
+    assert sol.status in ("optimal", "feasible")
+    mat = sol.as_matrix()
+    assert mat.shape == (cm.cluster.d_p, len(res.chunks))
+    assert sol.per_stage_max() == [int(r.max()) for r in mat]
+    assert (mat >= 0).all()
+
+
+def test_encoder_stages_can_checkpoint_differently():
+    """Under the encoder coefficient set a checkpointed layer frees the
+    FULL per-layer slab (no un-freeable KV), so for dependent-KV-heavy
+    chunks the encoder-role saving F is strictly larger: the same memory
+    need is coverable with fewer checkpointed layers. Assert the
+    structural fact on the coefficients and that the roled solve is never
+    worse (in total checkpointed layers) than the all-decoder solve."""
+    from repro.core.checkpointing import _coefficients
+    cm, res, f2b, ns = _encdec_setup()
+    I_d, F_d, _ = _coefficients(cm, res.chunks, "decoder")
+    I_e, F_e, _ = _coefficients(cm, res.chunks, "encoder")
+    dep = [c.has_dependents for c in res.chunks]
+    assert any(dep), "fixture needs split chunks with dependents"
+    for k, d in enumerate(dep):
+        if d:
+            assert F_e[k] > F_d[k]   # encoder frees more per layer
+            assert I_e[k] < I_d[k]   # and carries no dependent-KV base
+        else:
+            assert F_e[k] == F_d[k] and I_e[k] == I_d[k]
+
+    from repro.core import stage_roles
+    roles = stage_roles(cm.model, cm.cluster.d_p)
+    assert "encoder" in roles and "decoder" in roles
+    for frac in (0.12, 0.08, 0.05):
+        cap = cm.cluster.hbm_bytes * frac
+        plain = solve_checkpointing(cm, res.chunks, f2b, ns, capacity=cap)
+        roled = solve_checkpointing(cm, res.chunks, f2b, ns, capacity=cap,
+                                    roles=roles)
+        if roled.status == "infeasible" or plain.status == "infeasible":
+            continue
+        assert roled.total_layers <= plain.total_layers
+        if roled.table != plain.table:
+            return  # roles changed the solution — the point of the test
+    # at minimum the coefficient asymmetry above held; a solution change
+    # is workload-dependent, so only warn via assert on the last resort
+    assert True
+
+
+def test_roles_length_validated():
+    cm, res, f2b, ns = _setup()
+    with pytest.raises(ValueError, match="one entry per stage"):
+        solve_checkpointing(cm, res.chunks, f2b, ns, roles=("decoder",))
+
+
+def test_constant_table_collapses_to_uniform_despite_padding():
+    """Bucket padding appends masked all-zero columns; they must NOT block
+    the constant-table collapse — an effectively-uniform plan shares the
+    uniform executable and digests as "uN" (regression: the collapse check
+    once ran over the padded table and only ever fired when n_chunks was
+    an exact multiple of the rounding)."""
+    from repro.core import PlannerConfig, plan_batch
+    m = ModelSpec(name="t", n_layers=16, d_model=1024, n_heads=16,
+                  n_kv_heads=8, head_dim=64, d_ff=4096, vocab=32000)
+    cm = CostModel(m, ClusterSpec(d_p=4, d_s=4, hbm_bytes=16e9))
+    plan = plan_batch(cm, [4096] * 5, PlannerConfig(
+        bucket_rounding=64, remat_mode="stage_aware", full_ckpt=True))
+    key = plan.bucket_key(4)
+    n_real = sum(p.n_chunks for p in plan.pipelines)
+    assert key.n_chunks > n_real, "fixture must exercise bucket padding"
+    depth = plan.uniform_ckpt()
+    assert depth > 0
+    flat = {v for row in plan.ckpt_table() for v in row}
+    assert flat == {depth}, "full_ckpt fixture must give a constant table"
+    l_max, table, digest = plan.ckpt_policy(key.n_chunks)
+    assert table is None and digest == f"u{depth}" == key.ckpt
+    assert l_max == depth
+
+
+def test_role_capacity_bounds_respect_asymmetric_layer_counts():
+    """Encoder stacks with n_encoder_layers != n_layers: each stage's
+    solved depth must be bounded by the layers THAT stage actually holds
+    under the enc/dec split — not by the decoder-only n_layers // d_p
+    (which would both over-cap encoder stages and let the solver certify
+    memory bounds the executor cannot realize)."""
+    from repro.core import chunk_sequences, encoder_stage_split, stage_roles
+    m = ModelSpec(name="ed", n_layers=8, d_model=1024, n_heads=16,
+                  n_kv_heads=8, head_dim=64, d_ff=4096, vocab=32000,
+                  is_encoder_decoder=True, n_encoder_layers=32)
+    cm = CostModel(m, ClusterSpec(d_p=4, d_s=4, hbm_bytes=16e9))
+    roles = stage_roles(m, 4)
+    enc_st, dec_st = encoder_stage_split(32, 8, 4)
+    cap_enc = -(-32 // enc_st)
+    cap_dec = -(-8 // dec_st)
+    lengths = [65536, 30000, 8000, 8000, 4000, 2000, 1000, 500]
+    res = chunk_sequences(cm, lengths, 3)
+    f2b = backward_order(res.chunks)
+    ns = max(s.n_chunks for s in res.sequences)
+    solved = False
+    for frac in (0.15, 0.1, 0.06):
+        sol = solve_checkpointing(cm, res.chunks, f2b, ns, roles=roles,
+                                  capacity=cm.cluster.hbm_bytes * frac)
+        if sol.status == "infeasible" or sol.total_layers == 0:
+            continue
+        solved = True
+        for p, row in enumerate(sol.table):
+            cap = cap_enc if roles[p] == "encoder" else cap_dec
+            assert max(row) <= cap, (p, roles[p], max(row), cap)
+        # the old uniform bound (n_layers // d_p == 2) would have capped
+        # every stage at 2; the role-aware solve may exceed it on stages
+        # that genuinely hold more layers
+        assert max(max(r) for r in sol.table) <= max(cap_enc, cap_dec)
+    assert solved, "fixture never forced checkpointing"

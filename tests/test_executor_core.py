@@ -579,13 +579,14 @@ def test_bucket_key_named_fields():
     key = plan.bucket_key(4)
     assert isinstance(key, BucketKey)
     assert BucketKey._fields == ("schedule", "v_stages", "n_chunks",
-                                 "cap", "ctx_cap", "l_ckpt")
+                                 "cap", "ctx_cap", "l_ckpt", "ckpt")
     # named access agrees with the documented order (and stays a tuple:
     # hashable, comparable, usable as a cache key)
     assert key.schedule == key[0] == plan.schedule
     assert key.v_stages == key[1] == plan.v_stages
     assert key.n_chunks == key[2] and key.cap == key[3]
     assert key.ctx_cap == key[4] and key.l_ckpt == key[5]
+    assert key.ckpt == key[6] == f"u{plan.uniform_ckpt()}"
     assert key.n_chunks % 8 == 0 and key.cap % 4 == 0
     assert hash(key) == hash(tuple(key))
 

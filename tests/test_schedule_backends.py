@@ -15,6 +15,8 @@ Covers the acceptance contracts of the schedule registry:
 """
 
 import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
 
 from repro.core import (ClusterSpec, CostModel, ExecutionPlan, ModelSpec,
                         PlannerConfig, available_schedules, choose_schedule,
@@ -22,7 +24,25 @@ from repro.core import (ClusterSpec, CostModel, ExecutionPlan, ModelSpec,
                         simulate_occupancy, simulate_schedule)
 from repro.core.schedule import ScheduleSpec
 
-GRID = [(1, 2), (4, 2), (8, 4), (7, 4), (13, 4), (16, 8), (5, 8)]
+# small deterministic smoke grid — the hypothesis sweeps below are the
+# real coverage (random (n, d_p, v) far beyond these hand-picked points),
+# but property cases skip on a bare interpreter (conftest shim), so a
+# couple of fixed points keep the invariants exercised everywhere
+GRID = [(4, 2), (7, 4), (16, 8)]
+
+
+@st.composite
+def _spec_and_grid(draw):
+    """Random (spec, n_items, d_p): any registered backend, interleaved at
+    any v in [1, 4] (not just divisors of a layer block — the tick mapping
+    must hold for every v), n and d_p over ranges that cover n < d_p,
+    n == d_p, ragged groups (d_p not dividing n) and single-device."""
+    name = draw(st.sampled_from(
+        ["gpipe-1f1b", "zero-bubble-h1", "interleaved-1f1b"]))
+    v = draw(st.integers(1, 4)) if name == "interleaved-1f1b" else 1
+    n = draw(st.integers(1, 40))
+    d_p = draw(st.integers(1, 8))
+    return get_schedule(name, v), n, d_p
 
 
 def _specs():
@@ -55,7 +75,77 @@ def test_register_custom_backend():
 
 
 # ---------------------------------------------------------------------------
-# Occupancy simulator == tick-count formula (the acceptance criterion).
+# Property-based sweeps: the executor's traced arithmetic mirrors the spec
+# mapping and the occupancy simulator satisfies its invariants for RANDOM
+# (n, d_p, v, n_groups) — not just hand-picked grid points.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=80, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(_spec_and_grid())
+def test_prop_executor_coords_match_spec(case):
+    """engine-side ``schedule_tick_coords`` (overloaded arithmetic) ==
+    ``ScheduleSpec.tick_coords`` for every (t, p) of the whole scan."""
+    executor = pytest.importorskip("repro.runtime.executor")
+    spec, n, d_p = case
+    n_groups = spec.n_groups(n, d_p)
+    for t in range(spec.scan_ticks(n, d_p)):
+        for p in range(d_p):
+            idx, v_idx, valid = executor.schedule_tick_coords(
+                t, p, n=n, d_p=d_p, v=spec.v, n_groups=n_groups)
+            m_ref, j_ref, valid_ref = spec.tick_coords(t, p, n, d_p)
+            assert bool(valid) == bool(valid_ref), \
+                (spec.name, spec.v, n, d_p, t, p)
+            if valid_ref:
+                assert (idx, v_idx) == (m_ref, j_ref), \
+                    (spec.name, spec.v, n, d_p, t, p)
+
+
+@settings(max_examples=80, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(_spec_and_grid())
+def test_prop_occupancy_invariants(case):
+    """simulate_occupancy (which raises on duplicate/missing work or
+    causality violations) must additionally satisfy: every device runs
+    exactly n*v useful slots, the grid spans exactly scan_ticks rows, and
+    the measured bubble fraction equals the closed-form
+    ``scan_bubble_fraction``."""
+    spec, n, d_p = case
+    occ = simulate_occupancy(spec, n, d_p)
+    assert len(occ.grid) == spec.scan_ticks(n, d_p)
+    per_device = [sum(1 for row in occ.grid if row[p] is not None)
+                  for p in range(d_p)]
+    assert per_device == [n * spec.v] * d_p, (spec.name, spec.v, n, d_p)
+    assert occ.useful_slots == n * spec.v * d_p
+    assert occ.bubble_fraction == pytest.approx(
+        spec.scan_bubble_fraction(n, d_p), abs=1e-12)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(_spec_and_grid(),
+       st.floats(0.1, 4.0), st.floats(0.1, 4.0))
+def test_prop_event_sim_invariants(case, t_f, t_b):
+    """Duration-independent invariants of the event simulator (the
+    closed-form ``bubble_time`` is a MODEL, not a bound, away from the
+    canonical t_b = 2 t_f point — so the properties pin what always
+    holds): per-stage work is a makespan lower bound, the full 1F1B
+    ramp an upper bound, the bubble fraction is a fraction, and ZB-H1's
+    work-conserving W-grad filling never loses to plain 1F1B at equal
+    durations."""
+    spec, n, d_p = case
+    sim = simulate_schedule(spec, n, d_p, t_f, t_b)
+    assert sim["makespan"] >= n * (t_f + t_b) - 1e-9
+    assert sim["makespan"] <= (n + d_p - 1) * (t_f + t_b) + 1e-9
+    assert 0.0 <= sim["bubble_fraction"] <= 1.0
+    zb = simulate_schedule(get_schedule("zero-bubble-h1"), n, d_p, t_f, t_b)
+    g = simulate_schedule(get_schedule("gpipe-1f1b"), n, d_p, t_f, t_b)
+    assert zb["makespan"] <= g["makespan"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Occupancy simulator == tick-count formula (deterministic smoke — the
+# hypothesis sweeps above are the broad-coverage versions).
 # ---------------------------------------------------------------------------
 
 def test_occupancy_matches_scan_bubble_formula():
