@@ -39,6 +39,9 @@ def main() -> None:
             steps=8 if args.quick else 24),
         "ckpt_policy": lambda: pf.ckpt_policy_compare(
             batch=32 if args.quick else 64),
+        "serving_engine": lambda: __import__(
+            "benchmarks.serving", fromlist=["serving_engine"]
+        ).serving_engine(quick=args.quick),
     }
     only = {x.strip() for x in args.only.split(",") if x.strip()}
 
@@ -120,6 +123,15 @@ def _derived(name: str, rows) -> str:
         return (f"stage_aware_recompute_vs_uniform={ratio:.2f}x;"
                 f"layers={sa['ckpt_layers']}vs{un['ckpt_layers']};"
                 f"fits={sa['fits_memory']}")
+    if name.startswith("serving"):
+        by = {r["prefill_mode"]: r for r in rows}
+        il, se = by["interleaved"], by["serial"]
+        blowup = (se["tpot_s_p95"] / il["tpot_s_p95"]
+                  if il["tpot_s_p95"] else 1.0)
+        return (f"serial_tpot_p95_vs_interleaved={blowup:.2f}x;"
+                f"tok_s={il['tokens_per_s']};"
+                f"occ={il['kv_occupancy']:.2f};"
+                f"accept={il['spec_acceptance']:.2f}")
     if name.startswith("cache"):
         summaries = [r for r in rows
                      if str(r.get("step", "")).startswith("summary")]

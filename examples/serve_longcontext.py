@@ -1,5 +1,7 @@
-"""Long-context serving example (deliverable b): pipelined flash-decode with
-a sequence-sharded KV cache, batched requests.
+"""Serving example: the continuous-batching engine on a skewed request
+trace — chunked prefill co-scheduled with speculative (k=2) decode streams
+over the slotted KV pool, replayed twice to show the closed compile-cache
+bucket set (pass 2 compiles nothing).
 
     PYTHONPATH=src python examples/serve_longcontext.py
 """
@@ -10,5 +12,5 @@ import sys
 if __name__ == "__main__":
     sys.exit(subprocess.call(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-1b",
-         "--reduced", "--batch", "4", "--cache-len", "256",
-         "--decode-steps", "4"]))
+         "--reduced", "--requests", "16", "--passes", "2", "--k", "2",
+         "--verify", "2"]))

@@ -29,7 +29,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .costs import CostModel
 from .plan import Chunk, ChunkKind, SequenceInfo, Slice
 
-__all__ = ["ChunkingResult", "chunk_sequences", "seq_workload"]
+__all__ = ["ChunkingResult", "chunk_sequences", "prompt_slices",
+           "seq_workload"]
 
 
 def seq_workload(cm: CostModel, length: int, context: int = 0) -> float:
@@ -93,6 +94,28 @@ def _mesh_thresholds(cm: CostModel, max_len: int, k: int,
     window = cm.cluster.d_p + max(k, 1) - 1
     t_m = max(int(cap / window), max(mesh) if mesh else 1)
     return mesh, t_t, t_m
+
+
+def prompt_slices(cm: CostModel, length: int, capacity: int) -> List[int]:
+    """Capacity-bounded, workload-balanced slices of ONE sequence — Alg. 1
+    line 1 applied to a serving prompt (token-level PP reborn as chunked
+    prefill). The smallest ``K`` whose balanced mesh fits ``capacity``
+    tokens per slice is used, so later slices — which carry more causal
+    context and therefore more attention work per token — get fewer tokens,
+    exactly like the trainer's mesh.
+    """
+    if length <= 0:
+        return []
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if length <= capacity:
+        return [length]
+    k = max(2, -(-length // capacity))
+    while True:
+        mesh = cm.split_balanced(length, k)
+        if mesh and max(mesh) <= capacity:
+            return mesh
+        k += 1
 
 
 def chunk_sequences(cm: CostModel, lengths: Sequence[int], k: int, *,

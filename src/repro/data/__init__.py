@@ -1,5 +1,7 @@
 from .batching import ChunkBatch, materialize_chunks, materialize_plan
-from .synth import PRESETS, sample_corpus_batch, sample_lengths
+from .synth import (PRESETS, sample_corpus_batch, sample_lengths,
+                    sample_request_trace)
 
 __all__ = ["ChunkBatch", "materialize_chunks", "materialize_plan",
-           "PRESETS", "sample_corpus_batch", "sample_lengths"]
+           "PRESETS", "sample_corpus_batch", "sample_lengths",
+           "sample_request_trace"]

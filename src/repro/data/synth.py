@@ -15,7 +15,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 __all__ = ["LengthDistribution", "PRESETS", "sample_lengths",
-           "sample_corpus_batch"]
+           "sample_corpus_batch", "sample_request_trace"]
 
 
 @dataclass(frozen=True)
@@ -50,6 +50,39 @@ def sample_lengths(preset: str, n: int, context_limit: int,
     idx = rng.choice(n, n_long, replace=False)
     lens[idx] = context_limit
     return [int(x) for x in lens]
+
+
+def sample_request_trace(preset: str, n: int, context_limit: int,
+                         vocab: int, *, seed: int = 0,
+                         arrival_rate: float = 1.0,
+                         max_new_tokens: int = 16
+                         ) -> List[Dict[str, object]]:
+    """Synthetic serving trace: Poisson arrivals (exponential inter-arrival
+    gaps at ``arrival_rate`` requests per simulated second) over the same
+    skewed lognormal prompt-length presets the trainer uses — serving
+    request lengths are even more skewed than training documents, which is
+    exactly the regime chunked prefill exists for. Deterministic per seed,
+    so two passes over one trace are identical (the engine's zero-recompile
+    check relies on this).
+
+    Returns ``[{"arrival", "prompt", "max_new_tokens"}, ...]`` sorted by
+    arrival; the driver wraps them into ``repro.serve.Request`` objects.
+    """
+    lengths = sample_lengths(preset, n, context_limit, seed)
+    rng = np.random.default_rng(seed + 2)
+    gaps = rng.exponential(1.0 / max(arrival_rate, 1e-9), n)
+    arrivals = np.cumsum(gaps)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks ** 1.1
+    probs /= probs.sum()
+    out = []
+    for i, ln in enumerate(lengths):
+        out.append({
+            "arrival": float(arrivals[i]),
+            "prompt": rng.choice(vocab, size=ln, p=probs).astype(np.int32),
+            "max_new_tokens": int(max_new_tokens),
+        })
+    return out
 
 
 def sample_corpus_batch(preset: str, n: int, context_limit: int, vocab: int,

@@ -1,27 +1,82 @@
-"""Long-context serving driver: prefill via the EPP pipeline (split chunks
-fill the KV cache), then pipelined flash-decode steps.
+"""Continuous-batching serving driver: the thin launcher for
+``repro.serve.ServeEngine`` over a synthetic Poisson/lognormal request
+trace (``data/synth.sample_request_trace`` presets).
 
-CPU demo:
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced
+Each engine step packs chunked-prefill segments and (speculative) decode
+streams into ONE fixed-shape compiled program, so the compile cache holds
+exactly one engine bucket — ``--passes 2`` replays the identical trace and
+asserts the second pass compiles nothing. ``--cache-dir`` persists the
+executable so even a fresh process warm-starts; ``--gc-max-age-s`` /
+``--gc-max-bytes`` garbage-collect the store at startup.
+
+CPU demo (4 fake devices):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \\
+      --requests 24 --passes 2 --k 2 --stats-json serve-stats.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=256)
-    ap.add_argument("--decode-steps", type=int, default=4)
+    ap.add_argument("--mesh", default="2x2", help="DPxSP, e.g. 2x2")
     ap.add_argument("--devices", type=int, default=4)
+    # trace
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--trace", default="github",
+                    help="length preset (github/commoncrawl/uniform)")
+    ap.add_argument("--context-limit", type=int, default=96,
+                    help="max prompt length the trace samples")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="Poisson arrivals per simulated second")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--passes", type=int, default=1,
+                    help="replay the identical trace N times; pass 2+ must "
+                         "report zero fresh compiles (closed bucket set)")
+    # engine geometry (the single compile-cache bucket)
+    ap.add_argument("--items", type=int, default=4,
+                    help="packed chunk items per engine step")
+    ap.add_argument("--cap-t", type=int, default=32,
+                    help="tokens per item (= max prefill chunk)")
+    ap.add_argument("--slots", type=int, default=6, help="KV slots")
+    ap.add_argument("--s-cap", type=int, default=0,
+                    help="cache rows per slot; 0 = context-limit + max-new")
+    ap.add_argument("--k", type=int, default=1,
+                    help="decode tokens per stream per step (speculative "
+                         "draft width; k=1 is plain greedy)")
+    # scheduling policy (no recompile across these)
+    ap.add_argument("--prefill-mode", default="interleaved",
+                    choices=["interleaved", "serial"],
+                    help="'serial' = naive stop-the-world prefill baseline")
+    ap.add_argument("--decode-budget", type=int, default=0,
+                    help="decode tokens per step (0 = auto)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prefill tokens per step (0 = auto)")
+    # persistence
     ap.add_argument("--cache-dir", default="",
                     help="persistent compile-cache directory: a serving "
-                         "restart warm-starts the decode bucket instead of "
+                         "restart warm-starts the engine bucket instead of "
                          "recompiling")
+    ap.add_argument("--gc-max-age-s", type=float, default=0.0,
+                    help="cache-store gc at startup: drop entries not "
+                         "loaded in this many seconds (0 = off)")
+    ap.add_argument("--gc-max-bytes", type=int, default=0,
+                    help="cache-store gc at startup: shrink the store to "
+                         "this many payload bytes (0 = off)")
+    ap.add_argument("--stats-json", default="",
+                    help="write per-pass engine stats + cache/store stats "
+                         "to this JSON file (CI artifact)")
+    ap.add_argument("--verify", type=int, default=0,
+                    help="cross-check the first N requests' output ids "
+                         "against the one-shot reference path")
     args = ap.parse_args()
 
     import os
@@ -29,71 +84,127 @@ def main():
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
     import jax
     import jax.numpy as jnp
-    import numpy as np
-    from jax.sharding import PartitionSpec as P
 
     from repro.configs import get_arch
-    from repro.runtime import (CacheStore, CompileCache, TrainStepBuilder,
-                               make_geometry, store_fingerprint)
-    from repro.runtime.compile_cache import decode_bucket_key
-    from repro.runtime.serve_step import (decode_state_specs,
-                                          decode_state_struct,
-                                          decode_step_fn,
-                                          make_decode_geometry)
-    from repro.runtime.sharding import (mesh_axis_names, shard_dim_tree,
-                                        shard_map_compat)
+    from repro.data import sample_request_trace
+    from repro.runtime import CacheStore, store_fingerprint
+    from repro.runtime.compile_cache import CompileCache
+    from repro.serve import (EngineConfig, Request, ServeEngine,
+                             one_shot_generate)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = jax.make_mesh((2, 2), ("data", "model"))
-    pod, data, model = mesh_axis_names(mesh)
-    geom = make_decode_geometry(cfg, mesh, batch_per_pod=args.batch,
-                                cache_len=args.cache_len,
-                                compute_dtype=jnp.float32)
-    builder = TrainStepBuilder(cfg, mesh, make_geometry(
-        cfg, mesh, n_chunks=1, cap=4, ctx_cap=4,
-        compute_dtype=jnp.float32), param_dtype=jnp.float32)
-    params, _, _ = builder.init_all(jax.random.PRNGKey(0))
-    pspecs, _, _ = builder.specs(jax.eval_shape(lambda: params))
-    shard_dims = shard_dim_tree(params["stages"], mesh.shape[model])
-    store = None
+    dp, ds = (int(x) for x in args.mesh.split("x"))
+    mesh = jax.make_mesh((dp, ds), ("data", "model"))
+
+    s_cap = args.s_cap or (args.context_limit + args.max_new)
+    trace = sample_request_trace(args.trace, args.requests,
+                                 args.context_limit, cfg.spec.vocab,
+                                 seed=args.seed,
+                                 arrival_rate=args.arrival_rate,
+                                 max_new_tokens=args.max_new)
+    # admission validation UP FRONT: the old driver silently truncated an
+    # over-long prompt's context; the engine (and this check) reject it
+    longest = max(len(t["prompt"]) for t in trace)
+    if longest + args.max_new > s_cap:
+        print(f"error: longest sampled prompt ({longest}) + --max-new "
+              f"({args.max_new}) exceeds the KV slot capacity "
+              f"--s-cap ({s_cap}); raise --s-cap or lower "
+              f"--context-limit — context is never silently truncated",
+              file=sys.stderr)
+        return 2
+
+    store = gc_report = None
     if args.cache_dir:
         store = CacheStore(args.cache_dir,
                            store_fingerprint(mesh, spec=cfg.spec,
                                              compute_dtype=jnp.float32),
                            log=print)
-    cache = CompileCache(name="decode-step", log=print, store=store)
-    struct = decode_state_struct(cfg, geom, 1)
+        gc_report = store.gc(
+            max_age_s=args.gc_max_age_s or None,
+            max_bytes=args.gc_max_bytes or None)
+    cache = CompileCache(name="serve-engine", log=print, store=store)
 
-    def build_step():
-        fn = decode_step_fn(cfg, geom, shard_dims, pod_axis=pod,
-                            data_axis=data, model_axis=model)
-        sspecs = decode_state_specs(cfg, geom, pod=pod, data=data,
-                                    model=model)
-        jitted = jax.jit(shard_map_compat(
-            fn, mesh=mesh, in_specs=(pspecs, sspecs),
-            out_specs=(P(), sspecs), check_vma=False))
-        # AOT so the compiled decode step is serializable to the store
-        return jitted.lower(jax.eval_shape(lambda: params), struct).compile()
+    econf = EngineConfig(
+        n_items=args.items, cap_t=args.cap_t, n_slots=args.slots,
+        s_cap=s_cap, k=args.k,
+        decode_token_budget=args.decode_budget or None,
+        prefill_token_budget=args.prefill_budget or None,
+        prefill_mode=args.prefill_mode)
 
-    rng = np.random.default_rng(0)
-    state = {k: jnp.asarray(rng.normal(0, 0.3, v.shape).astype(
-        np.float32) * 0 + (rng.integers(0, cfg.spec.vocab, v.shape)
-                           if v.dtype == jnp.int32 else
-                           rng.normal(0, 0.3, v.shape))
-        , dtype=v.dtype) for k, v in struct.items()}
-    for i in range(args.decode_steps):
-        # per-step lookup, as a serving loop would do per request batch:
-        # the first step compiles the bucket, the rest hit the cache
-        step = cache.get(decode_bucket_key(geom), build_step)
-        ids, state = step(params, state)
-        print(f"decode step {i}: ids[0,:8] = {np.asarray(ids)[0, :8]}")
+    def requests():
+        return [Request(req_id=i, prompt=t["prompt"],
+                        max_new_tokens=t["max_new_tokens"],
+                        arrival=t["arrival"]) for i, t in enumerate(trace)]
+
+    passes = []
+    params = None
+    rc = 0
+    error = None
+    for p in range(max(1, args.passes)):
+        try:
+            engine = ServeEngine(cfg, mesh, econf, params=params,
+                                 param_dtype=jnp.float32, cache=cache,
+                                 seed=args.seed, log=print)
+        except NotImplementedError as e:
+            # SSM/hybrid, enc-dec and MLA archs have no engine path yet;
+            # their pipelined one-shot decode step (decode_step_fn) is
+            # still exercised by the dryrun decode cells
+            rc, error = 5, (f"arch {args.arch!r} is not servable by the "
+                            f"continuous-batching engine: {e}")
+            break
+        params = engine.params
+        misses_before = cache.stats.misses
+        results = engine.run(requests())
+        st = engine.stats()
+        st["pass"] = p
+        st["fresh_compiles"] = cache.stats.misses - misses_before
+        passes.append(st)
+        print(f"[pass {p}] completed={st['completed']}/{len(trace)} "
+              f"steps={st['steps']} tok/s={st['tokens_per_s']} "
+              f"ttft_p95={st['ttft_s_p95']}s "
+              f"occupancy={st['kv_pool']['mean_occupancy']} "
+              f"accept={st['speculative']['acceptance_rate']} "
+              f"fresh_compiles={st['fresh_compiles']}")
+        if p > 0 and st["fresh_compiles"]:
+            rc, error = 3, ("pass > 0 compiled fresh executables — the "
+                            "engine bucket set is not closed")
+            break
+        if p == 0 and args.verify:
+            n_v = min(args.verify, len(trace))
+            ref = one_shot_generate(cfg, mesh, params,
+                                    [t["prompt"] for t in trace[:n_v]],
+                                    args.max_new)
+            for i in range(n_v):
+                got = results[i].output_ids
+                if got != ref[i]:
+                    rc, error = 4, (f"request {i} engine ids {got} != "
+                                    f"one-shot ids {ref[i]}")
+                    break
+            if rc:
+                break
+            print(f"[verify] {n_v} requests match the one-shot path")
+
     print(f"[compile-cache] {cache.stats.summary()}")
+    out = {"config": vars(args), "passes": passes,
+           "compile_cache": cache.stats.as_dict(), "error": error}
     if store is not None:
-        print(f"[cache-store] {store.report()}")
+        rep = store.report()
+        out["cache_store"] = rep
+        out["cache_store_gc"] = gc_report
+        print(f"[cache-store] {rep}")
+    # the stats artifact is written even on a failed run — CI diagnoses
+    # exactly the failing case from it
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    if error:
+        print(f"error: {error}", file=sys.stderr)
+        return rc
     print("serve OK")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -38,6 +38,11 @@ class TrainLoopConfig:
     # ckpt_dir (<ckpt_dir>_compile_cache) when checkpointing is on; ""
     # disables the store (in-memory cache only).
     cache_dir: Optional[str] = None
+    # cache-store gc at startup: drop entries not loaded within
+    # cache_gc_age_s seconds / shrink the store to cache_gc_bytes payload
+    # bytes. None disables the corresponding limit.
+    cache_gc_age_s: Optional[float] = None
+    cache_gc_bytes: Optional[int] = None
     bucket_rounding: int = 256
     compute_dtype: str = "bfloat16"
     # pipeline schedule backend (core/schedule.py registry name); None lets
@@ -92,11 +97,17 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         p = Path(loop.ckpt_dir)
         cache_dir = str(p.with_name(p.name + "_compile_cache"))
     store = None
+    gc_report = None
     if cache_dir:
         store = CacheStore(cache_dir,
                            store_fingerprint(mesh, spec=cfg_arch.spec,
                                              compute_dtype=dtype),
                            log=log)
+        # age/size-budget gc before the run touches the store: stale
+        # topologies and cold buckets age out, recently-loaded entries
+        # survive (load() refreshes their mtime)
+        gc_report = store.gc(max_age_s=loop.cache_gc_age_s,
+                             max_bytes=loop.cache_gc_bytes)
     step_cache = CompileCache(name="train-step", log=log, store=store)
     params = opt = None
     start_step = 0
@@ -251,6 +262,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         history[-1]["compile_cache"] = step_cache.stats.as_dict()
         if rep is not None:
             history[-1]["cache_store"] = rep
+            history[-1]["cache_store_gc"] = gc_report
     return params, opt, history
 
 
@@ -272,6 +284,12 @@ def main():
                          "plan buckets across restarts); default: "
                          "<ckpt-dir>_compile_cache when --ckpt-dir is set, "
                          "'' disables")
+    ap.add_argument("--cache-gc-age-s", type=float, default=0.0,
+                    help="cache-store gc at startup: drop entries not "
+                         "loaded in this many seconds (0 = off)")
+    ap.add_argument("--cache-gc-bytes", type=int, default=0,
+                    help="cache-store gc at startup: shrink the store to "
+                         "this many payload bytes (0 = off)")
     ap.add_argument("--stats-json", default="",
                     help="write the run history + compile-cache/store "
                          "stats to this JSON file (CI artifact)")
@@ -306,6 +324,8 @@ def main():
                            context=args.context, dataset=args.dataset,
                            ckpt_dir=args.ckpt_dir, resume=args.resume,
                            cache_dir=args.cache_dir,
+                           cache_gc_age_s=args.cache_gc_age_s or None,
+                           cache_gc_bytes=args.cache_gc_bytes or None,
                            compute_dtype="float32" if args.reduced
                            else "bfloat16",
                            schedule=args.schedule, v_stages=args.v_stages,
@@ -317,7 +337,8 @@ def main():
         with open(args.stats_json, "w") as f:
             json.dump({"history": history,
                        "compile_cache": last.get("compile_cache", {}),
-                       "cache_store": last.get("cache_store", {})},
+                       "cache_store": last.get("cache_store", {}),
+                       "cache_store_gc": last.get("cache_store_gc")},
                       f, indent=1)
 
 

@@ -122,6 +122,8 @@ class StoreStats:
     corrupt_skips: int = 0   # bad sha / unreadable blob -> cold compile
     load_errors: int = 0     # deserialize raised -> cold compile
     save_errors: int = 0     # artifact not serializable / IO error
+    gc_removed: int = 0      # entries evicted by gc()
+    gc_removed_bytes: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -219,6 +221,12 @@ class CacheStore:
                       f"{e!r} — cold compile")
             return None
         self.stats.loads += 1
+        try:
+            # recency marker for gc(): least-recently-LOADED entries are
+            # evicted first, not just least-recently-written ones
+            os.utime(bin_path)
+        except OSError:  # pragma: no cover - touch is best-effort
+            pass
         return compiled
 
     # ------------------------------------------------------------------
@@ -268,6 +276,71 @@ class CacheStore:
         tmp = path.with_name(path.name + f".tmp{os.getpid()}")
         tmp.write_bytes(data)
         os.replace(tmp, path)
+
+    # ------------------------------------------------------------------
+    def gc(self, max_age_s: Optional[float] = None,
+           max_bytes: Optional[int] = None) -> Dict[str, Any]:
+        """Evict stale bulk from the store: entries not loaded (or written)
+        within ``max_age_s`` are removed, then — oldest first — entries are
+        removed until the payload total fits ``max_bytes``. ``load()``
+        touches an entry's mtime, so "oldest" means least-recently-USED,
+        not least-recently-written. ``None`` disables the corresponding
+        limit (gc(None, None) is a no-op). Train/serve call this at
+        startup; removal order is fingerprint-blind — a topology nobody
+        runs anymore ages out like any other entry.
+
+        Deletion removes the ``.bin`` before its sidecar: a crash in
+        between leaves an orphan sidecar, which ``load()`` treats as a
+        plain miss (never a false stale/corrupt signal)."""
+        ents = []
+        for bin_path in self.dir.glob("*.bin"):
+            try:
+                st = bin_path.stat()
+            except OSError:
+                continue
+            ents.append((st.st_mtime, st.st_size, bin_path))
+        ents.sort()
+        now = time.time()
+        removed = removed_bytes = 0
+        kept: List[tuple] = []
+        for mtime, size, p in ents:
+            if max_age_s is not None and now - mtime > max_age_s:
+                if self._remove_entry(p):
+                    removed += 1
+                    removed_bytes += size
+            else:
+                kept.append((mtime, size, p))
+        if max_bytes is not None:
+            total = sum(sz for _, sz, _ in kept)
+            for mtime, size, p in kept:
+                if total <= max_bytes:
+                    break
+                if self._remove_entry(p):
+                    removed += 1
+                    removed_bytes += size
+                    total -= size
+        self.stats.gc_removed += removed
+        self.stats.gc_removed_bytes += removed_bytes
+        out = {"removed": removed, "removed_bytes": removed_bytes,
+               "remaining_bytes": self.size_bytes()}
+        if removed:
+            self._say(f"[cache-store] gc removed {removed} entries "
+                      f"({removed_bytes / 1e6:.2f} MB), "
+                      f"{out['remaining_bytes'] / 1e6:.2f} MB remain")
+        return out
+
+    def _remove_entry(self, bin_path: Path) -> bool:
+        meta_path = bin_path.with_name(
+            bin_path.name[:-len(".bin")] + ".meta.json")
+        try:
+            bin_path.unlink()
+        except OSError:
+            return False
+        try:
+            meta_path.unlink()
+        except OSError:  # orphan sidecar == plain miss; harmless
+            pass
+        return True
 
     # ------------------------------------------------------------------
     def entries(self) -> List[Dict[str, Any]]:

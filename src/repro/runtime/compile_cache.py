@@ -48,7 +48,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Hashable, Optional, Set, Tuple
 
 __all__ = ["CacheStats", "CompileCache", "decode_bucket_key",
-           "global_cache_stats", "reset_global_caches"]
+           "engine_bucket_key", "global_cache_stats",
+           "reset_global_caches"]
 
 # every live cache registers here (weakly) so process-wide stats can be
 # aggregated without keeping dead caches — and their executables — alive
@@ -262,9 +263,21 @@ class CompileCache:
 
 def decode_bucket_key(geom) -> Tuple:
     """Bucket key for a pipelined-decode executable: the static decode
-    geometry (one compiled program per (batch, cache-length) bucket)."""
+    geometry (one compiled program per (batch, cache-length) bucket).
+    ``cache_len`` and the compute dtype are both part of executable
+    identity — a decode step compiled for one context size must never be
+    handed a state of another."""
     return ("decode", geom.batch_per_pod, geom.cache_len, geom.d_p,
-            geom.d_s, geom.n_micro)
+            geom.d_s, geom.n_micro, getattr(geom, "dtype_name", "bfloat16"))
+
+
+def engine_bucket_key(geom) -> Tuple:
+    """Bucket key for a serving-engine step executable. The engine's whole
+    point is that this set is CLOSED: per-request lengths are data, so one
+    (items, cap_t, slots, s_cap, k) geometry serves every request mix and
+    the second pass over any trace compiles nothing."""
+    return ("engine", geom.n_items, geom.cap_t, geom.n_slots, geom.s_cap,
+            geom.k, geom.d_p, geom.d_s, geom.dtype_name)
 
 
 def global_cache_stats() -> Dict[str, Any]:

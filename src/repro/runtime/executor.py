@@ -262,11 +262,32 @@ def fold_streaming_ce(tc: TickContext, h_last, head_w, tgt, seg, acc, *,
 
 
 def fold_greedy_ids(tc: TickContext, h_last, head_w, ids_acc, *,
-                    model_axis: str, vocab_true: int):
+                    model_axis: str, vocab_true: int,
+                    token_sharded: bool = False):
     """Fold one item's greedy next-token ids into ``ids_acc`` at row
-    ``tc.idxc`` (prefill and pipelined decode share this)."""
-    ids = sp.sharded_greedy(h_last, head_w, model_axis,
-                            vocab_true=vocab_true)
+    ``tc.idxc`` (prefill, the serving engine and pipelined decode share
+    this).
+
+    ``sharded_greedy``'s cross-rank argmax merge assumes every model rank
+    holds the SAME tokens (true for decode, whose psum'd attention leaves
+    ``h_last`` replicated). Prefill/engine hidden states are TOKEN-sharded
+    over the model axis — pass ``token_sharded=True`` so the rows are
+    all-gathered before the vocab-parallel argmax (same collective the
+    streaming-CE fold already pays) and this rank's block sliced back out;
+    without it the pmax/pmin merge compares argmax candidates of
+    *different* tokens across ranks and the ids are garbage whenever
+    ``d_s > 1``.
+    """
+    if token_sharded:
+        loc = h_last.shape[0]
+        h_g = jax.lax.all_gather(h_last, model_axis, axis=0, tiled=True)
+        ids_full = sp.sharded_greedy(h_g, head_w, model_axis,
+                                     vocab_true=vocab_true)
+        off = jax.lax.axis_index(model_axis) * loc
+        ids = jax.lax.dynamic_slice_in_dim(ids_full, off, loc, axis=0)
+    else:
+        ids = sp.sharded_greedy(h_last, head_w, model_axis,
+                                vocab_true=vocab_true)
     sel = tc.valid & tc.is_last_stage
     new_ids = jnp.where(sel, ids, ids_acc[tc.idxc])
     return ids_acc.at[tc.idxc].set(new_ids)

@@ -289,10 +289,12 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
                     model_axis=model_axis, vocab_true=s.vocab)
             else:
                 # prefill: greedy next-token ids per position (the KV fills
-                # the context carry — it IS the prefill cache)
+                # the context carry — it IS the prefill cache). h_last is
+                # token-sharded here, unlike decode's replicated rows.
                 ids = executor.fold_greedy_ids(
                     tc, h_last, head_w, acc[0],
-                    model_axis=model_axis, vocab_true=s.vocab)
+                    model_axis=model_axis, vocab_true=s.vocab,
+                    token_sharded=True)
                 acc = (ids, acc[1])
             return x_out, ctx, acc
 

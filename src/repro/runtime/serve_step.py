@@ -38,11 +38,37 @@ from repro.models.ssm import dt_rank_of
 
 from . import executor, sp
 from .program import StageProgram
-from .sharding import gather_layer_params, mesh_axis_names, shard_dim_tree
+from .sharding import (gather_layer_params, mesh_axis_names, shard_dim_tree,
+                       shard_map_compat)
 from .train_step import param_pspecs, prepare_params
 
 __all__ = ["DecodeGeometry", "decode_step_fn", "decode_state_struct",
-           "DecodeStepBuilder"]
+           "DecodeStepBuilder",
+           "EngineGeometry", "EngineStepBuilder", "make_engine_geometry",
+           "engine_step_fn", "engine_pool_struct", "engine_pool_specs",
+           "engine_batch_struct"]
+
+
+def _dtype_name(dtype) -> str:
+    """Canonical dtype string for bucket keys (the compiled HLO differs
+    per compute dtype, so keys must too)."""
+    import numpy as _np
+    return _np.dtype(dtype).name
+
+
+def _layer_tables(cfg: ArchConfig, d_p: int, L_s: int):
+    """Per-stage ``[d_p, L_s]`` sliding-window sizes + active-layer mask
+    (padded layer slots inactive) — shared by the decode and engine step
+    builders so window/padding semantics can never diverge between the
+    two serve paths."""
+    import numpy as _np
+    L_pad = d_p * L_s
+    win = [cfg.layer_window(i) for i in range(cfg.spec.n_layers)]
+    win += [0] * (L_pad - cfg.spec.n_layers)
+    windows = jnp.asarray(win, jnp.int32).reshape(d_p, L_s)
+    active = jnp.asarray(
+        (_np.arange(L_pad) < cfg.spec.n_layers).reshape(d_p, L_s))
+    return windows, active
 
 
 @dataclass(frozen=True)
@@ -68,6 +94,10 @@ class DecodeGeometry:
     @property
     def s_loc(self) -> int:
         return self.s_cap // self.d_s
+
+    @property
+    def dtype_name(self) -> str:
+        return _dtype_name(self.compute_dtype)
 
 
 def make_decode_geometry(cfg: ArchConfig, mesh: Mesh, *, batch_per_pod: int,
@@ -171,13 +201,7 @@ def decode_step_fn(cfg: ArchConfig, geom: DecodeGeometry, shard_dims, *,
     nm, bm = geom.n_micro, geom.bm
     dt = geom.compute_dtype
     S, S_loc = geom.cache_len, geom.s_loc
-    L_pad = d_p * L_s
-    import numpy as _np
-    win_flat = [cfg.layer_window(i) for i in range(s.n_layers)]
-    win_flat += [0] * (L_pad - s.n_layers)
-    windows_all = jnp.asarray(win_flat, jnp.int32).reshape(d_p, L_s)
-    active_all = jnp.asarray(
-        (_np.arange(L_pad) < s.n_layers).reshape(d_p, L_s))
+    windows_all, active_all = _layer_tables(cfg, d_p, L_s)
     scale = 1.0 / math.sqrt(s.head_dim + (s.qk_rope_dim if s.kv_lora_rank
                                           else 0)) if not s.attn_free else 0.0
 
@@ -399,3 +423,338 @@ def decode_step_fn(cfg: ArchConfig, geom: DecodeGeometry, shard_dims, *,
         return out_ids, new_state
 
     return step_local
+
+
+# ===========================================================================
+# Continuous-batching serving engine: one stage program for chunked prefill
+# AND k-token (speculative) decode over a SLOTTED KV-cache pool.
+#
+# The unit of work is a *packed token chunk* — the trainer's chunk
+# abstraction reborn for serving. Every engine-step item is a fixed-shape
+# buffer of ``cap_t`` tokens carrying per-token metadata:
+#
+#   tokens[t]    the token id fed at this position
+#   slot[t]      the KV slot its segment owns (``n_slots`` = trash slot:
+#                padding and bubble-tick writes land there)
+#   pos[t]       absolute position in the owning sequence == the cache row
+#                this token's KV is written to
+#   seg[t]       item-local segment id (-1 = padding); intra-chunk attention
+#                is same-segment causal
+#   ctx_base[t]  committed cache rows of the segment's slot at step start;
+#                cache attention sees rows [0, ctx_base) only
+#
+# A prefill chunk is a segment of prompt tokens (pos = offset..offset+c-1,
+# ctx_base = offset); a decode tick is a segment of k tokens (the last
+# accepted token + k-1 draft tokens, ctx_base = committed length). Both run
+# the SAME compiled program: per token, attention = softmax over
+# [slot-gathered cache rows ‖ intra-chunk same-segment causal rows], then
+# the token's KV row is scattered into (slot, pos). Rows at pos >= ctx_base
+# written by rejected drafts are invisible (masked) until overwritten.
+#
+# Per-stream lengths are DATA, not shape: one executable serves every
+# request mix, so the engine's bucket-key set is closed
+# (compile_cache.engine_bucket_key). Decode runs remat-free (static
+# l_ckpt=0 — the ROADMAP's per-chunk remat-free decode item).
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class EngineGeometry:
+    """Static geometry of one compiled engine step (a serve bucket)."""
+    n_items: int             # packed chunk items per engine step
+    cap_t: int               # tokens per item (global; sharded over model)
+    n_slots: int             # user KV slots (buffer holds n_slots + 1)
+    s_cap: int               # cache rows per slot (max prompt + generated)
+    k: int                   # decode tokens per stream per step (1 = greedy)
+    d_p: int
+    d_s: int
+    layers_per_stage: int
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def trash_slot(self) -> int:
+        """Write target for padding/bubble/out-of-range rows."""
+        return self.n_slots
+
+    @property
+    def dtype_name(self) -> str:
+        return _dtype_name(self.compute_dtype)
+
+
+def make_engine_geometry(cfg: ArchConfig, mesh: Mesh, *, n_items: int,
+                         cap_t: int, n_slots: int, s_cap: int, k: int = 1,
+                         compute_dtype=jnp.bfloat16) -> EngineGeometry:
+    s = cfg.spec
+    if s.attn_free or s.ssm_state > 0:
+        raise NotImplementedError(
+            "serving engine supports attention archs only (SSM/hybrid decode "
+            "uses the one-shot decode_step_fn path)")
+    if s.is_encoder_decoder:
+        raise NotImplementedError("serving engine is decoder-only")
+    if s.kv_lora_rank > 0:
+        raise NotImplementedError(
+            "MLA latent cache rows are not wired into the slot pool yet "
+            "(see ROADMAP follow-ons)")
+    pod, data, model = mesh_axis_names(mesh)
+    if pod is not None:
+        raise NotImplementedError("engine runs on a (data, model) mesh; "
+                                  "multi-pod request routing is a ROADMAP "
+                                  "follow-on")
+    d_p, d_s = mesh.shape[data], mesh.shape[model]
+    if cap_t % d_s:
+        raise ValueError(f"cap_t={cap_t} must be divisible by the model "
+                         f"axis d_s={d_s}")
+    if min(n_items, cap_t, n_slots, s_cap, k) < 1:
+        raise ValueError("n_items/cap_t/n_slots/s_cap/k must all be >= 1")
+    if k > cap_t:
+        raise ValueError(f"k={k} cannot exceed cap_t={cap_t}")
+    return EngineGeometry(
+        n_items=n_items, cap_t=cap_t, n_slots=n_slots, s_cap=s_cap, k=k,
+        d_p=d_p, d_s=d_s,
+        layers_per_stage=-(-cfg.spec.n_layers // d_p),
+        compute_dtype=compute_dtype)
+
+
+def engine_pool_struct(cfg: ArchConfig, geom: EngineGeometry) -> Dict:
+    """Global ShapeDtypeStructs of the slotted KV pool: per stage (d_p over
+    "data"), per layer, ``n_slots + 1`` slots (last = trash) of ``s_cap``
+    rows, replicated over the model axis (every rank owns full rows and
+    performs every write — sequence-sharding the pool is the paged-attention
+    follow-on)."""
+    s = cfg.spec
+    shape = (geom.d_p, geom.layers_per_stage, geom.n_slots + 1, geom.s_cap,
+             s.n_kv_heads, s.head_dim)
+    st = jax.ShapeDtypeStruct(shape, geom.compute_dtype)
+    return {"cache_k": st, "cache_v": st}
+
+
+def engine_pool_specs(data: str = "data") -> Dict:
+    p = P(data, None, None, None, None, None)
+    return {"cache_k": p, "cache_v": p}
+
+
+def engine_batch_struct(geom: EngineGeometry) -> Dict:
+    """Per-step packed chunk buffers (global shapes; token dim sharded over
+    the model axis like the trainer's chunk buffers)."""
+    n, c = geom.n_items, geom.cap_t
+    st = jax.ShapeDtypeStruct((n, c), jnp.int32)
+    return {"tokens": st, "slot": st, "pos": st, "seg": st, "ctx_base": st}
+
+
+def _engine_attention(q, k_cache, v_cache, k_intra, v_intra, ok_cache,
+                      ok_intra, *, scale):
+    """Per-token attention over [slot cache rows ‖ intra-chunk rows].
+
+    q: [T, Hq, Dh]; k/v_cache: [T, S, Hkv, Dh] (rows gathered per token by
+    slot); k/v_intra: [C, Hkv, Dh] (the whole chunk, all ranks);
+    ok_cache: [T, S] bool; ok_intra: [T, C] bool. One softmax over the
+    concatenated row axis — no cross-source LSE merge needed because both
+    sources are fully resident. Returns [T, Hq, Dh]."""
+    Hq, Hkv = q.shape[1], k_intra.shape[1]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+        k_intra = jnp.repeat(k_intra, rep, axis=1)
+        v_intra = jnp.repeat(v_intra, rep, axis=1)
+    qf = q.astype(jnp.float32)
+    s_c = jnp.einsum("thd,tshd->ths", qf,
+                     k_cache.astype(jnp.float32)) * scale
+    s_i = jnp.einsum("thd,shd->ths", qf,
+                     k_intra.astype(jnp.float32)) * scale
+    s_c = jnp.where(ok_cache[:, None, :], s_c, -1e30)
+    s_i = jnp.where(ok_intra[:, None, :], s_i, -1e30)
+    s_all = jnp.concatenate([s_c, s_i], axis=-1)
+    m = s_all.max(axis=-1)
+    p = jnp.exp(s_all - m[..., None])
+    l = p.sum(axis=-1)
+    n_s = s_c.shape[-1]
+    acc = jnp.einsum("ths,tshd->thd", p[..., :n_s],
+                     v_cache.astype(jnp.float32))
+    acc = acc + jnp.einsum("ths,shd->thd", p[..., n_s:],
+                           v_intra.astype(jnp.float32))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def engine_step_fn(cfg: ArchConfig, geom: EngineGeometry, shard_dims, *,
+                   data_axis: str = "data",
+                   model_axis: str = "model") -> Callable:
+    """Returns step_local(params, pool, batch) -> (ids [n, cap_loc], pool');
+    call inside shard_map. ``ids[i, t]`` is the greedy next-token id after
+    consuming batch token ``(i, t)`` (the same fold the prefill path uses);
+    the host reads decode/prefill outputs at its packed offsets."""
+    s = cfg.spec
+    L_s, d_p, d_s = geom.layers_per_stage, geom.d_p, geom.d_s
+    n = geom.n_items
+    dt = geom.compute_dtype
+    windows_all, active_all = _layer_tables(cfg, d_p, L_s)
+    scale = 1.0 / math.sqrt(s.head_dim)
+    moe_fn = None
+    if s.n_experts > 0:
+        from .ep import make_moe_ep
+        moe_fn = make_moe_ep(model_axis, d_s)
+
+    def step_local(params, pool, batch):
+        p_idx = jax.lax.axis_index(data_axis)
+        stage_params = jax.tree.map(lambda x: x[0], params["stages"])
+        windows = windows_all[p_idx]
+        active = active_all[p_idx]
+        fn_gamma = params["final_norm"]
+        if fn_gamma.shape[0] != s.d_model:
+            fn_gamma = jax.lax.all_gather(fn_gamma, model_axis, axis=0,
+                                          tiled=True)
+        head_w = params.get("unembed", params["embed"])
+        cap_loc = batch["tokens"].shape[-1]
+
+        tokens_a = batch["tokens"].reshape(n, cap_loc)
+        slot_a = batch["slot"].reshape(n, cap_loc)
+        pos_a = batch["pos"].reshape(n, cap_loc)
+        seg_a = batch["seg"].reshape(n, cap_loc)
+        base_a = batch["ctx_base"].reshape(n, cap_loc)
+
+        # local pool view: drop the stage dim sharded over "data"
+        ck0 = pool["cache_k"].reshape(pool["cache_k"].shape[1:])
+        cv0 = pool["cache_v"].reshape(pool["cache_v"].shape[1:])
+        rows = jnp.arange(geom.s_cap)
+        big = jnp.int32(2 ** 30)
+
+        def tick(tc, x_recv, state, ids_acc):
+            ck, cv = state
+            idxc = tc.idxc
+            tok = tokens_a[idxc]
+            seg_l = jnp.where(tc.valid, seg_a[idxc], -1)
+            pos_l = pos_a[idxc]
+            slot_l = slot_a[idxc]
+            base_l = base_a[idxc]
+            # full-chunk metadata: intra attention + the replicated writes
+            # need every rank to see all cap_t rows
+            seg_g = jax.lax.all_gather(seg_l, model_axis, axis=0, tiled=True)
+            pos_g = jax.lax.all_gather(pos_l, model_axis, axis=0, tiled=True)
+            slot_g = jax.lax.all_gather(slot_l, model_axis, axis=0,
+                                        tiled=True)
+
+            x_emb = sp.sharded_embed(params["embed"], tok, model_axis, dt)
+            if cfg.embed_scale:
+                x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
+            x = jnp.where(tc.is_first_stage, x_emb, x_recv)
+
+            def layer_body(x, per_layer):
+                lp, w, act, ck_l, cv_l = per_layer
+                lp = gather_layer_params(lp, shard_dims, model_axis)
+                h_in = rms_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k_new, v_new = project_qkv(cfg, lp["attn"], h_in, pos_l)
+                k_g = jax.lax.all_gather(k_new, model_axis, axis=0,
+                                         tiled=True)
+                v_g = jax.lax.all_gather(v_new, model_axis, axis=0,
+                                         tiled=True)
+                w_eff = jnp.where(w > 0, w, big)
+                # cache rows: committed prefix of my slot, window-masked
+                ok_c = (rows[None, :] < base_l[:, None]) \
+                    & (seg_l >= 0)[:, None] \
+                    & ((pos_l[:, None] - rows[None, :]) < w_eff)
+                # intra-chunk: same segment, causal, window-masked
+                ok_i = (seg_g[None, :] == seg_l[:, None]) \
+                    & (seg_l >= 0)[:, None] \
+                    & (pos_g[None, :] <= pos_l[:, None]) \
+                    & ((pos_l[:, None] - pos_g[None, :]) < w_eff)
+                out = _engine_attention(q, ck_l[slot_l], cv_l[slot_l],
+                                        k_g, v_g, ok_c, ok_i, scale=scale)
+                y = jnp.einsum("th,hd->td", out.reshape(out.shape[0], -1),
+                               lp["attn"]["wo"].astype(x.dtype))
+                # scatter the chunk's KV rows into (slot, pos); padding,
+                # bubble ticks, inactive layer slots and out-of-range rows
+                # all land in the trash slot
+                w_ok = (seg_g >= 0) & tc.valid & act \
+                    & (pos_g < geom.s_cap)
+                slot_w = jnp.where(w_ok, slot_g, geom.trash_slot)
+                row_w = jnp.clip(pos_g, 0, geom.s_cap - 1)
+                ck_l = ck_l.at[slot_w, row_w].set(k_g.astype(ck_l.dtype))
+                cv_l = cv_l.at[slot_w, row_w].set(v_g.astype(cv_l.dtype))
+                x_new = x + y
+                h2 = rms_norm(x_new, lp["ln2"], cfg.rms_eps)
+                if s.n_experts > 0:
+                    x_new = x_new + moe_fn(cfg, lp["moe"], h2)
+                else:
+                    x_new = x_new + swiglu_apply(lp["mlp"], h2)
+                x = jnp.where(act, x_new, x)
+                return x, (ck_l, cv_l)
+
+            # remat-free: serving never differentiates, so l_ckpt=0 keeps
+            # the plain single-scan layer path
+            x_out, (ck, cv) = executor.run_stage_layers(
+                layer_body, x, (stage_params, windows, active, ck, cv),
+                l_ckpt=0, n_layers=L_s)
+            h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
+            ids_acc = executor.fold_greedy_ids(
+                tc, h_last, head_w, ids_acc,
+                model_axis=model_axis, vocab_true=s.vocab,
+                token_sharded=True)
+            return x_out, (ck, cv), ids_acc
+
+        x0 = jnp.zeros((cap_loc, s.d_model), dt)
+        ids0 = jnp.zeros((n, cap_loc), jnp.int32)
+        program = StageProgram(n_items=n, d_p=d_p, data_axis=data_axis,
+                               tick=tick, psum_acc=True)
+        _, (ck, cv), ids = executor.run_stage_program(
+            program, x0, (ck0, cv0), ids0)
+        new_pool = {"cache_k": ck.reshape(pool["cache_k"].shape),
+                    "cache_v": cv.reshape(pool["cache_v"].shape)}
+        return ids, new_pool
+
+    return step_local
+
+
+@dataclass
+class EngineStepBuilder:
+    """Builds the AOT-compiled engine step for a mesh + engine geometry.
+
+    AOT (``lower().compile()``) so the executable is serializable into the
+    persistent :class:`~repro.runtime.cache_store.CacheStore` — a serving
+    restart warm-starts its (single) engine bucket."""
+    cfg: ArchConfig
+    mesh: Mesh
+    geom: EngineGeometry
+    param_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        self.pod_axis, self.data_axis, self.model_axis = \
+            mesh_axis_names(self.mesh)
+        if self.pod_axis is not None:
+            raise NotImplementedError("engine runs on a (data, model) mesh")
+
+    # ------------------------------------------------------------------
+    def init_params(self, key) -> Dict:
+        raw = DecoderLM(self.cfg).init(key, jnp.float32)
+        return prepare_params(self.cfg, raw, self.mesh, self.param_dtype)
+
+    def abstract_params(self, key=None) -> Dict:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self.init_params(k), key)
+
+    def init_pool(self) -> Dict:
+        return {k: jnp.zeros(v.shape, v.dtype)
+                for k, v in engine_pool_struct(self.cfg, self.geom).items()}
+
+    # ------------------------------------------------------------------
+    def build(self, params_shape=None):
+        params_shape = params_shape or self.abstract_params()
+        pspecs = param_pspecs(self.cfg, params_shape, self.mesh)
+        shard_dims = shard_dim_tree(params_shape["stages"],
+                                    self.mesh.shape[self.model_axis])
+        from .sharding import batch_specs
+        bspecs = batch_specs(engine_batch_struct(self.geom), pod=None,
+                             model=self.model_axis)
+        poolspecs = engine_pool_specs(self.data_axis)
+        fn = engine_step_fn(self.cfg, self.geom, shard_dims,
+                            data_axis=self.data_axis,
+                            model_axis=self.model_axis)
+        mapped = shard_map_compat(
+            fn, mesh=self.mesh,
+            in_specs=(pspecs, poolspecs, bspecs),
+            out_specs=(P(None, self.model_axis), poolspecs),
+            check_vma=False)
+        pool_struct = engine_pool_struct(self.cfg, self.geom)
+        batch_struct_ = engine_batch_struct(self.geom)
+        return jax.jit(mapped).lower(
+            params_shape, pool_struct, batch_struct_).compile()

@@ -1,0 +1,36 @@
+"""Continuous-batching serving engine on the EPP runtime.
+
+The package is split host/device: everything here is host-side
+orchestration (admission, scheduling, slot accounting, speculative
+verify); the compiled stage program lives in
+``repro.runtime.serve_step`` (``engine_step_fn`` + ``EngineStepBuilder``)
+and its bucket key in ``repro.runtime.compile_cache.engine_bucket_key``.
+
+Heavy imports (jax, the model stack) resolve lazily through
+:mod:`.engine`; the scheduler, slot pool and speculative helpers are
+import-light and usable from host-only tooling.
+"""
+
+from .kv_manager import KVSlotPool, PoolStats
+from .scheduler import SchedulerConfig, Segment, StepPlan, TickScheduler
+from .speculative import SpecStats, propose_draft, verify_greedy
+
+__all__ = ["EngineConfig", "KVSlotPool", "PoolStats", "Request",
+           "RequestResult", "SchedulerConfig", "Segment", "ServeEngine",
+           "SpecStats", "StepPlan", "TickScheduler", "one_shot_generate",
+           "propose_draft", "verify_greedy"]
+
+_LAZY = {
+    "EngineConfig": ".engine",
+    "Request": ".engine",
+    "RequestResult": ".engine",
+    "ServeEngine": ".engine",
+    "one_shot_generate": ".engine",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name], __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

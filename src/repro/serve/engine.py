@@ -1,0 +1,541 @@
+"""Continuous-batching serving engine on the EPP pipeline.
+
+Request lifecycle::
+
+    submit() ──> waiting ──admit (KV slot alloc)──> prefill ──> decode ──> done
+                   │                                  │            │
+                   └── queue (pool full / budget) ────┴── step() packs both
+                       into ONE fixed-shape engine program per step
+
+Every :meth:`ServeEngine.step` builds one packed batch for the compiled
+engine program (``runtime.serve_step.engine_step_fn``): decode segments
+(k tokens per running stream — speculative drafts verified on the host)
+co-scheduled with chunked-prefill segments (prompts sliced by the
+trainer's ``core.chunking.prompt_slices`` capacity logic). Because
+per-request lengths are data rather than shape, the compile cache sees
+exactly ONE bucket key per engine configuration
+(``compile_cache.engine_bucket_key``) — the second pass over any trace
+compiles nothing, and a persistent :class:`CacheStore` warm-starts even
+the first.
+
+:func:`one_shot_generate` is the parity oracle: the pre-engine one-shot
+serve path (whole-prompt prefill through ``pipeline_loss_fn``'s prefill
+mode, teacher-forced full recompute per emitted token — no KV reuse). The
+engine's greedy output ids must match it exactly at every ``k``
+(tests/test_serve_engine.py).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .kv_manager import KVSlotPool
+from .scheduler import SchedulerConfig, Segment, StepPlan, TickScheduler
+from .speculative import SpecStats, propose_draft, verify_greedy
+
+__all__ = ["EngineConfig", "Request", "RequestResult", "ServeEngine",
+           "one_shot_generate"]
+
+
+@dataclass
+class EngineConfig:
+    """Host-visible engine knobs. (n_items, cap_t, n_slots, s_cap, k) are
+    the compiled geometry — one bucket per distinct tuple; the budgets and
+    the prefill mode are pure packing policy (no recompile)."""
+    n_items: int = 4             # packed chunk items per engine step
+    cap_t: int = 64              # tokens per item
+    n_slots: int = 8             # KV slots (max concurrently-resident reqs)
+    s_cap: int = 256             # cache rows per slot (prompt + generated)
+    k: int = 1                   # decode tokens per stream per step
+    prefill_chunk: Optional[int] = None   # max prefill chunk (default cap_t)
+    decode_token_budget: Optional[int] = None
+    prefill_token_budget: Optional[int] = None
+    prefill_mode: str = "interleaved"     # | "serial" (stop-the-world)
+    draft_ngram: int = 3
+    sim_dt: float = 1.0          # simulated seconds per engine step
+    # preempt a decode stream when the admission queue's head has waited
+    # this many steps with the pool full (None = never): the victim's slot
+    # is freed and it requeues for a resume-prefill of its history —
+    # outputs are unchanged (greedy is deterministic), only latency moves
+    preempt_waiting_steps: Optional[int] = None
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray           # int32 [L]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    arrival: float = 0.0         # simulated arrival time
+
+
+@dataclass
+class RequestResult:
+    req_id: int
+    prompt_len: int
+    output_ids: List[int]
+    submitted_step: int
+    first_token_step: int        # TTFT in engine steps
+    finished_step: int
+    ttft_s: float                # wall-clock submit -> first token
+    tpot_s: float                # wall-clock mean per output token after 1st
+    preempted: int = 0           # times this request lost its slot
+
+    @property
+    def ttft_steps(self) -> int:
+        return self.first_token_step - self.submitted_step
+
+
+@dataclass
+class _ReqState:
+    req: Request
+    slot: int = -1
+    phase: str = "waiting"       # waiting | prefill | decode | done
+    committed: int = 0           # valid cache rows (tokens fed & accepted)
+    chunks: List[Tuple[int, int]] = field(default_factory=list)
+    next_chunk: int = 0
+    # tokens being prefilled: the prompt on first admission; on a resume
+    # after preemption, history[:-1] (everything but the un-fed last token)
+    prefill_target: List[int] = field(default_factory=list)
+    waiting_since: int = 0
+    next_token: int = -1         # last emitted, not yet fed token
+    output: List[int] = field(default_factory=list)
+    history: List[int] = field(default_factory=list)  # prompt + output
+    submitted_step: int = 0
+    submit_wall: float = 0.0
+    first_token_step: int = -1
+    first_wall: float = 0.0
+    finished_step: int = -1
+    done_wall: float = 0.0
+    preempted: int = 0
+
+
+class ServeEngine:
+    """Continuous-batching engine over one compiled EPP stage program."""
+
+    def __init__(self, cfg_arch, mesh, config: EngineConfig, *,
+                 params: Optional[Dict] = None, param_dtype=None,
+                 compute_dtype=None, cache=None, store=None,
+                 seed: int = 0, log: Optional[Callable] = None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import ClusterSpec, CostModel
+        from repro.runtime.compile_cache import CompileCache
+        from repro.runtime.serve_step import (EngineStepBuilder,
+                                              make_engine_geometry)
+
+        self.cfg_arch = cfg_arch
+        self.mesh = mesh
+        self.config = config
+        self.log = log
+        param_dtype = param_dtype or jnp.float32
+        compute_dtype = compute_dtype or param_dtype
+        self.geom = make_engine_geometry(
+            cfg_arch, mesh, n_items=config.n_items, cap_t=config.cap_t,
+            n_slots=config.n_slots, s_cap=config.s_cap, k=config.k,
+            compute_dtype=compute_dtype)
+        self.builder = EngineStepBuilder(cfg_arch, mesh, self.geom,
+                                         param_dtype=param_dtype)
+        self.params = params if params is not None else \
+            self.builder.init_params(jax.random.PRNGKey(seed))
+        self._params_shape = jax.eval_shape(lambda: self.params)
+        self.cache = cache if cache is not None else \
+            CompileCache(name="serve-engine", log=log, store=store)
+        self.pool_state = self.builder.init_pool()
+        self.pool = KVSlotPool(config.n_slots, config.s_cap)
+        self.scheduler = TickScheduler(SchedulerConfig(
+            n_items=config.n_items, cap_t=config.cap_t, k=config.k,
+            decode_token_budget=config.decode_token_budget,
+            prefill_token_budget=config.prefill_token_budget,
+            prefill_mode=config.prefill_mode))
+        # prompt slicing reuses the trainer's workload-balanced capacity
+        # logic (Alg. 1 line 1) — chunked prefill IS token-level PP
+        pod, data, model = _axes(mesh)
+        self._cm = CostModel(cfg_arch.spec,
+                             ClusterSpec(d_p=mesh.shape[data],
+                                         d_s=mesh.shape[model]))
+        self.spec_stats = SpecStats()
+        self._waiting: "deque[_ReqState]" = deque()
+        self._running: List[_ReqState] = []      # prefill + decode phases
+        self._states: Dict[int, _ReqState] = {}
+        self.results: Dict[int, RequestResult] = {}
+        self.rejected: Dict[int, str] = {}
+        self.step_count = 0
+        self.sim_time = 0.0
+        self._emitted_total = 0
+        self._run_wall = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def bucket_key(self):
+        from repro.runtime.compile_cache import engine_bucket_key
+        return engine_bucket_key(self.geom)
+
+    def _build_step(self):
+        return self.builder.build(self._params_shape)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request. Admission is validated against the slot
+        geometry up front — an over-long prompt is REJECTED with a clear
+        error instead of silently truncating its context (the old
+        launch/serve.py failure mode)."""
+        plen = int(len(req.prompt))
+        need = plen + req.max_new_tokens
+        if plen < 1:
+            raise ValueError(f"request {req.req_id}: empty prompt")
+        if req.req_id in self._states:
+            raise ValueError(f"request id {req.req_id} already submitted")
+        if need > self.geom.s_cap:
+            raise ValueError(
+                f"request {req.req_id}: prompt ({plen}) + max_new_tokens "
+                f"({req.max_new_tokens}) = {need} exceeds the KV slot "
+                f"capacity s_cap={self.geom.s_cap}; raise --s-cap or split "
+                f"the request (context is never silently truncated)")
+        st = _ReqState(req=req, submitted_step=self.step_count,
+                       submit_wall=time.perf_counter(),
+                       waiting_since=self.step_count,
+                       history=[int(t) for t in req.prompt])
+        self._states[req.req_id] = st
+        self._waiting.append(st)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._waiting) + len(self._running)
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        from repro.core.chunking import prompt_slices
+        cap = min(self.config.prefill_chunk or self.geom.cap_t,
+                  self.geom.cap_t)
+        while self._waiting:
+            st = self._waiting[0]
+            slot = self.pool.alloc(st.req.req_id)
+            if slot is None:
+                if self._maybe_preempt(st):
+                    continue    # retry into the freed slot
+                return
+            self._waiting.popleft()
+            st.slot = slot
+            st.phase = "prefill"
+            st.committed = 0
+            st.next_chunk = 0
+            # resume after preemption: re-prefill everything already fed
+            # (history minus the un-fed last token); fresh requests
+            # prefill the prompt
+            st.prefill_target = st.history[:-1] if st.output \
+                else [int(t) for t in st.req.prompt]
+            off, st.chunks = 0, []
+            for ln in prompt_slices(self._cm, len(st.prefill_target), cap):
+                st.chunks.append((off, ln))
+                off += ln
+            self._running.append(st)
+
+    def _maybe_preempt(self, head: _ReqState) -> bool:
+        """Pool-full admission policy: once the queue's head has waited
+        ``preempt_waiting_steps`` steps, evict the most recently admitted
+        decode stream (its first token is already out — decode-phase
+        implies progress) and requeue it for a resume-prefill. Greedy
+        decode is deterministic, so preemption can never change a
+        request's output ids — only its latency (tested)."""
+        n = self.config.preempt_waiting_steps
+        if n is None or self.step_count - head.waiting_since < n:
+            return False
+        victims = [s for s in self._running if s.phase == "decode"]
+        if not victims:
+            return False
+        victim = victims[-1]
+        self.pool.preempt(victim.slot)
+        victim.slot = -1
+        victim.phase = "waiting"
+        victim.preempted += 1
+        victim.waiting_since = self.step_count
+        self._running.remove(victim)
+        self._waiting.append(victim)
+        return True
+
+    # ------------------------------------------------------------------
+    def _candidates(self) -> Tuple[List[Segment], List[List[Segment]]]:
+        dec: List[Segment] = []
+        pre: List[List[Segment]] = []
+        k = self.geom.k
+        for st in self._running:
+            rid = st.req.req_id
+            if st.phase == "decode":
+                draft = propose_draft(st.history, k - 1,
+                                      ngram=self.config.draft_ngram)
+                dec.append(Segment(
+                    req_id=rid, kind="decode",
+                    tokens=(st.next_token, *draft),
+                    slot=st.slot, base=st.committed))
+            elif st.phase == "prefill":
+                segs = []
+                for off, ln in st.chunks[st.next_chunk:]:
+                    segs.append(Segment(
+                        req_id=rid, kind="prefill",
+                        tokens=tuple(st.prefill_target[off:off + ln]),
+                        slot=st.slot, base=off))
+                pre.append(segs)
+        return dec, pre
+
+    def _pack(self, plan: StepPlan):
+        import jax.numpy as jnp
+        g = self.geom
+        n, c = g.n_items, g.cap_t
+        tokens = np.zeros((n, c), np.int32)
+        slot = np.full((n, c), g.trash_slot, np.int32)
+        pos = np.zeros((n, c), np.int32)
+        seg = np.full((n, c), -1, np.int32)
+        base = np.zeros((n, c), np.int32)
+        placements = []
+        for i, item in enumerate(plan.items):
+            cur = 0
+            for s_idx, sg in enumerate(item):
+                ln = len(sg.tokens)
+                tokens[i, cur:cur + ln] = sg.tokens
+                slot[i, cur:cur + ln] = sg.slot
+                pos[i, cur:cur + ln] = np.arange(sg.start, sg.start + ln)
+                seg[i, cur:cur + ln] = s_idx
+                base[i, cur:cur + ln] = sg.base
+                placements.append((sg, i, cur))
+                cur += ln
+        batch = {"tokens": jnp.asarray(tokens), "slot": jnp.asarray(slot),
+                 "pos": jnp.asarray(pos), "seg": jnp.asarray(seg),
+                 "ctx_base": jnp.asarray(base)}
+        return batch, placements
+
+    # ------------------------------------------------------------------
+    def _finish(self, st: _ReqState) -> None:
+        st.phase = "done"
+        st.finished_step = self.step_count
+        st.done_wall = time.perf_counter()
+        self.pool.free(st.slot)
+        st.slot = -1
+        self._running.remove(st)
+        n_out = len(st.output)
+        tpot = 0.0
+        if n_out > 1:
+            tpot = (st.done_wall - st.first_wall) / (n_out - 1)
+        self.results[st.req.req_id] = RequestResult(
+            req_id=st.req.req_id, prompt_len=len(st.req.prompt),
+            output_ids=list(st.output),
+            submitted_step=st.submitted_step,
+            first_token_step=st.first_token_step,
+            finished_step=st.finished_step,
+            ttft_s=st.first_wall - st.submit_wall, tpot_s=tpot,
+            preempted=st.preempted)
+
+    def _emit(self, st: _ReqState, token: int,
+              events: List[Tuple[int, int]]) -> bool:
+        """Append one output token; returns True when the request is
+        done (caller must stop consuming further tokens this step)."""
+        st.output.append(int(token))
+        st.history.append(int(token))
+        self._emitted_total += 1
+        events.append((st.req.req_id, int(token)))
+        if st.first_token_step < 0:
+            st.first_token_step = self.step_count
+            st.first_wall = time.perf_counter()
+        eos = st.req.eos_id
+        if (eos is not None and token == eos) \
+                or len(st.output) >= st.req.max_new_tokens:
+            self._finish(st)
+            return True
+        st.next_token = int(token)
+        return False
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """Run one engine step; returns the (req_id, token) stream emitted
+        by this step (per-request output streams in arrival order)."""
+        self._admit()
+        dec_c, pre_c = self._candidates()
+        plan = self.scheduler.plan(dec_c, pre_c)
+        batch, placements = self._pack(plan)
+        step_fn = self.cache.get(self.bucket_key, self._build_step)
+        ids, self.pool_state = step_fn(self.params, self.pool_state, batch)
+        ids = np.asarray(ids)
+
+        events: List[Tuple[int, int]] = []
+        for sg, item, off in placements:
+            st = self._states[sg.req_id]
+            if st.phase == "done":
+                continue
+            out = ids[item, off:off + len(sg.tokens)]
+            if sg.kind == "prefill":
+                st.committed += len(sg.tokens)
+                st.next_chunk += 1
+                if st.committed == len(st.prefill_target):
+                    st.phase = "decode"
+                    if not st.output:
+                        # the final chunk's last-position greedy id is the
+                        # first generated token (the TTFT token)
+                        self._emit(st, int(out[-1]), events)
+                    # resumed prefill: next_token (the un-fed last emitted
+                    # token) is already set; out[-1] re-predicts it
+            else:
+                emitted = verify_greedy(sg.tokens, out)
+                self.spec_stats.decode_ticks += 1
+                self.spec_stats.drafted += len(sg.tokens) - 1
+                self.spec_stats.accepted += len(emitted) - 1
+                self.spec_stats.emitted += len(emitted)
+                st.committed += len(emitted)
+                for tok in emitted:
+                    if self._emit(st, tok, events):
+                        break
+        self.pool.note_tick()
+        self.step_count += 1
+        self.sim_time += self.config.sim_dt
+        return events
+
+    # ------------------------------------------------------------------
+    def run(self, trace: Sequence[Request], *,
+            max_steps: int = 100_000) -> Dict[int, RequestResult]:
+        """Drive a full trace (simulated arrival times) to completion."""
+        t0 = time.perf_counter()
+        pending = sorted(trace, key=lambda r: r.arrival)
+        i = 0
+        while (i < len(pending) or self.n_active) \
+                and self.step_count < max_steps:
+            while i < len(pending) and pending[i].arrival <= self.sim_time:
+                try:
+                    self.submit(pending[i])
+                except ValueError as e:
+                    # one bad request (over-long, duplicate id) must not
+                    # abort the trace — record the rejection and move on
+                    self.rejected[pending[i].req_id] = str(e)
+                i += 1
+            if not self.n_active and i < len(pending):
+                # idle: fast-forward simulated time to the next arrival
+                self.sim_time = pending[i].arrival
+                continue
+            self.step()
+        self._run_wall += time.perf_counter() - t0
+        if self.n_active:
+            raise RuntimeError(
+                f"trace did not drain in {max_steps} steps: "
+                f"{self.n_active} requests still active")
+        return self.results
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        res = list(self.results.values())
+        ttft_s = [r.ttft_s for r in res]
+        ttft_steps = [r.ttft_steps for r in res]
+        tpot = [r.tpot_s for r in res if r.tpot_s > 0]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        wall = max(self._run_wall, 1e-9)
+        return {
+            "completed": len(res),
+            "rejected": len(self.rejected),
+            "steps": self.step_count,
+            "emitted_tokens": self._emitted_total,
+            "tokens_per_s": round(self._emitted_total / wall, 2),
+            "wall_s": round(self._run_wall, 3),
+            "ttft_s_p50": round(pct(ttft_s, 50), 4),
+            "ttft_s_p95": round(pct(ttft_s, 95), 4),
+            "ttft_steps_p50": pct(ttft_steps, 50),
+            "ttft_steps_p95": pct(ttft_steps, 95),
+            "tpot_s_p50": round(pct(tpot, 50), 5),
+            "tpot_s_p95": round(pct(tpot, 95), 5),
+            "kv_pool": self.pool.stats.as_dict(),
+            "speculative": self.spec_stats.as_dict(),
+            "compile_cache": self.cache.stats.as_dict(),
+        }
+
+
+def _axes(mesh):
+    from repro.runtime.sharding import mesh_axis_names
+    return mesh_axis_names(mesh)
+
+
+# ===========================================================================
+# The one-shot reference path (parity oracle).
+# ===========================================================================
+
+def one_shot_generate(cfg_arch, mesh, params, prompts: Sequence[Sequence[int]],
+                      max_new: int, *, cap: Optional[int] = None,
+                      compute_dtype=None,
+                      eos_id: Optional[int] = None) -> List[List[int]]:
+    """The pre-engine one-shot serve path: each output token is produced by
+    a FULL teacher-forced prefill of (prompt + generated-so-far) through
+    the EPP pipeline (``pipeline_loss_fn`` mode="prefill") — no KV reuse,
+    no continuous batching, one request at a time. Quadratically slow and
+    exactly right: the oracle the engine's slotted-cache incremental
+    decode is tested against (ids must match at every k).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import LayerCtx
+    from repro.runtime import make_geometry
+    from repro.runtime.pipeline import pipeline_loss_fn
+    from repro.runtime.sharding import (batch_specs, mesh_axis_names,
+                                        shard_dim_tree, shard_map_compat)
+    from repro.runtime.train_step import batch_struct, param_pspecs
+
+    compute_dtype = compute_dtype or jnp.float32
+    pod, data, model = mesh_axis_names(mesh)
+    if pod is not None:
+        raise NotImplementedError("one-shot reference runs on a "
+                                  "(data, model) mesh")
+    d_s = mesh.shape[model]
+    need = max((len(p) for p in prompts), default=1) + max_new
+    cap = max(cap or 0, need)
+    cap = -(-cap // d_s) * d_s
+    geom = make_geometry(cfg_arch, mesh, n_chunks=1, cap=cap, ctx_cap=cap,
+                         l_ckpt=0, compute_dtype=compute_dtype)
+    params_shape = jax.eval_shape(lambda: params)
+    pspecs = param_pspecs(cfg_arch, params_shape, mesh)
+    shard_dims = shard_dim_tree(params["stages"], d_s)
+    bspecs = batch_specs(batch_struct(geom, 1), pod=None, model=model)
+    if geom.policy == "ulysses":
+        kspec = P(data, None, model, None)
+    else:
+        kspec = P(data, None, None, None)
+    ctx_spec = LayerCtx(kspec, kspec, None, None)
+    fn = pipeline_loss_fn(cfg_arch, geom, shard_dims, pod_axis=None,
+                          data_axis=data, model_axis=model, mode="prefill")
+    mapped = jax.jit(shard_map_compat(
+        fn, mesh=mesh, in_specs=(pspecs, bspecs),
+        out_specs=(P(None, model), ctx_spec), check_vma=False))
+
+    outs: List[List[int]] = []
+    for prompt in prompts:
+        seq = [int(t) for t in prompt]
+        gen: List[int] = []
+        for _ in range(max_new):
+            n = len(seq)
+            if n > cap:
+                raise ValueError(f"sequence length {n} exceeds cap {cap}")
+            tokens = np.zeros((1, cap), np.int32)
+            tokens[0, :n] = seq
+            seg = np.full((1, cap), -1, np.int32)
+            seg[0, :n] = 0
+            pos = np.zeros((1, cap), np.int32)
+            pos[0, :n] = np.arange(n)
+            batch = {
+                "tokens": jnp.asarray(tokens),
+                "targets": jnp.asarray(np.full((1, cap), -1, np.int32)),
+                "seg": jnp.asarray(seg),
+                "pos": jnp.asarray(pos),
+                "ctx_len": jnp.zeros((1,), jnp.int32),
+            }
+            ids, _ = mapped(params, batch)
+            nxt = int(np.asarray(ids)[0, n - 1])
+            gen.append(nxt)
+            seq.append(nxt)
+            if eos_id is not None and nxt == eos_id:
+                break
+        outs.append(gen)
+    return outs

@@ -1,0 +1,142 @@
+"""Slotted KV-cache pool accounting (host side).
+
+The device-side pool (``runtime.serve_step.engine_pool_struct``) is a fixed
+``[d_p, L_s, n_slots + 1, s_cap, Hkv, Dh]`` buffer per stage — slot
+``n_slots`` is the trash row padding and bubble-tick writes land in. This
+module owns the *host* view: which request holds which slot, a free list
+with O(1) alloc/free and **no defragmentation ever** (slots are
+fixed-size, so any free slot fits any request), and the occupancy /
+failure / preemption counters the engine's stats and the serving benchmark
+surface.
+
+Invariants (property-tested in tests/test_serve_engine.py):
+
+* the free list and the allocated set partition ``range(n_slots)``;
+* request <-> slot is a bijection on the allocated set;
+* the trash slot is never handed out;
+* ``peak_in_use`` is a running max of the allocated-set size.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+__all__ = ["KVSlotPool", "PoolStats"]
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    alloc_failures: int = 0      # alloc() with an empty free list
+    preemptions: int = 0         # running requests evicted for admission
+    peak_in_use: int = 0
+    occupancy_sum: float = 0.0   # sum over sampled ticks of in_use/n_slots
+    occupancy_ticks: int = 0
+
+    @property
+    def mean_occupancy(self) -> float:
+        if not self.occupancy_ticks:
+            return 0.0
+        return self.occupancy_sum / self.occupancy_ticks
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "allocs": self.allocs,
+            "frees": self.frees,
+            "alloc_failures": self.alloc_failures,
+            "preemptions": self.preemptions,
+            "peak_in_use": self.peak_in_use,
+            "mean_occupancy": round(self.mean_occupancy, 4),
+        }
+
+
+class KVSlotPool:
+    """Fixed pool of ``n_slots`` KV slots of ``s_cap`` rows each."""
+
+    def __init__(self, n_slots: int, s_cap: int):
+        if n_slots < 1 or s_cap < 1:
+            raise ValueError("n_slots and s_cap must be >= 1")
+        self.n_slots = n_slots
+        self.s_cap = s_cap
+        # pop() hands out low slot ids first (stable, debuggable layouts)
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._owner: Dict[int, int] = {}      # slot -> req_id
+        self._slot: Dict[int, int] = {}       # req_id -> slot
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    @property
+    def in_use(self) -> int:
+        return len(self._owner)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def occupancy(self) -> float:
+        return self.in_use / self.n_slots
+
+    def note_tick(self) -> None:
+        """Sample occupancy once per engine step (mean surfaces in stats)."""
+        self.stats.occupancy_sum += self.occupancy()
+        self.stats.occupancy_ticks += 1
+
+    def slot_of(self, req_id: int) -> Optional[int]:
+        return self._slot.get(req_id)
+
+    def owner_of(self, slot: int) -> Optional[int]:
+        return self._owner.get(slot)
+
+    # ------------------------------------------------------------------
+    def alloc(self, req_id: int) -> Optional[int]:
+        """Grab a free slot for ``req_id``; None (counted) when the pool is
+        full — the engine keeps the request queued."""
+        if req_id in self._slot:
+            raise ValueError(f"request {req_id} already holds slot "
+                             f"{self._slot[req_id]}")
+        if not self._free:
+            self.stats.alloc_failures += 1
+            return None
+        slot = self._free.pop()
+        self._owner[slot] = req_id
+        self._slot[req_id] = slot
+        self.stats.allocs += 1
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        return slot
+
+    def free(self, slot: int) -> int:
+        """Release ``slot`` (request completed). Returns the former owner.
+        Slot reuse needs no cleanup: a new owner starts at ctx_base 0, so
+        the previous tenant's rows are unreachable until overwritten."""
+        if slot not in self._owner:
+            raise ValueError(f"slot {slot} is not allocated")
+        req_id = self._owner.pop(slot)
+        del self._slot[req_id]
+        self._free.append(slot)
+        self.stats.frees += 1
+        return req_id
+
+    def preempt(self, slot: int) -> int:
+        """Evict a running request from its slot (the engine requeues it
+        for a fresh prefill). Same mechanics as :meth:`free`, counted
+        separately."""
+        req_id = self.free(slot)
+        self.stats.preemptions += 1
+        return req_id
+
+    # ------------------------------------------------------------------
+    def check(self) -> None:
+        """Assert the pool invariants (tests; cheap enough for debug use)."""
+        free = set(self._free)
+        used = set(self._owner)
+        assert len(free) == len(self._free), "duplicate slot in free list"
+        assert not (free & used), f"slot both free and allocated: {free & used}"
+        assert free | used == set(range(self.n_slots)), \
+            "free + allocated must partition the pool"
+        assert self.n_slots not in used and self.n_slots not in free, \
+            "trash slot leaked into the pool"
+        assert {s: r for r, s in self._slot.items()} == self._owner, \
+            "request<->slot maps disagree"
+        assert self.stats.peak_in_use >= self.in_use

@@ -410,3 +410,82 @@ def test_cache_store_keeps_ckpt_vectors_apart(tmp_path):
     assert cache2.stats.warm_hits == 2 and cache2.stats.misses == 0
     assert warm_a.tobytes() == out_a.tobytes()
     assert warm_b.tobytes() == out_b.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# gc(): age / size-budget eviction, least-recently-loaded first
+# ---------------------------------------------------------------------------
+
+def test_gc_noop_without_limits(tmp_path):
+    store = CacheStore(tmp_path, {"v": 1})
+    CompileCache(name="gc0", store=store).get(
+        ("k",), lambda: _compile_toy_step(1.0))
+    rep = store.gc()
+    assert rep["removed"] == 0 and store.report()["entries"] == 1
+    assert store.stats.gc_removed == 0
+
+
+def test_gc_age_evicts_old_entries_only(tmp_path):
+    import os
+    import time
+
+    store = CacheStore(tmp_path, {"v": 1})
+    cache = CompileCache(name="gca", store=store)
+    cache.get(("old",), lambda: _compile_toy_step(1.0))
+    cache.get(("new",), lambda: _compile_toy_step(2.0))
+    # age the first entry far past the cutoff
+    old_bin = next(p for p in tmp_path.glob("*.bin")
+                   if json.loads(p.with_name(
+                       p.name[:-4] + ".meta.json").read_text())["key"]
+                   == repr(("old",)))
+    past = time.time() - 1000
+    os.utime(old_bin, (past, past))
+    rep = store.gc(max_age_s=100)
+    assert rep["removed"] == 1
+    assert store.stats.gc_removed == 1 and store.stats.gc_removed_bytes > 0
+    # the aged entry is a plain miss now; the fresh one still loads
+    fresh = CompileCache(name="gca2", store=CacheStore(tmp_path, {"v": 1}))
+    built = []
+    fresh.get(("old",), lambda: built.append(1) or _compile_toy_step(1.0))
+    fresh.get(("new",), lambda: built.append(2) or _compile_toy_step(2.0))
+    assert built == [1], "old must cold-compile, new must warm-start"
+
+
+def test_gc_size_budget_keeps_recently_loaded(tmp_path):
+    import os
+    import time
+
+    store = CacheStore(tmp_path, {"v": 1})
+    cache = CompileCache(name="gcs", store=store)
+    cache.get(("a",), lambda: _compile_toy_step(1.0))
+    cache.get(("b",), lambda: _compile_toy_step(2.0))
+    # stamp distinct mtimes, then LOAD "a" through a fresh store — the
+    # load-touch must protect it from the size-budget eviction
+    for i, p in enumerate(sorted(tmp_path.glob("*.bin"))):
+        os.utime(p, (time.time() - 500 + i, time.time() - 500 + i))
+    store2 = CacheStore(tmp_path, {"v": 1})
+    assert CompileCache(name="gcs2", store=store2).get(
+        ("a",), lambda: pytest.fail("should warm-start")) is not None
+    one_entry = max(p.stat().st_size for p in tmp_path.glob("*.bin"))
+    rep = store2.gc(max_bytes=one_entry)
+    assert rep["removed"] == 1
+    assert rep["remaining_bytes"] <= one_entry
+    # survivor is the recently-loaded "a"
+    store3 = CacheStore(tmp_path, {"v": 1})
+    cache3 = CompileCache(name="gcs3", store=store3)
+    built = []
+    cache3.get(("a",), lambda: built.append("a") or _compile_toy_step(1.0))
+    cache3.get(("b",), lambda: built.append("b") or _compile_toy_step(2.0))
+    assert built == ["b"], built
+
+
+def test_gc_removal_is_miss_not_stale(tmp_path):
+    """A gc'd entry must read as a plain miss — not a misleading stale or
+    corrupt skip (the .bin goes first, orphan sidecars are ignored)."""
+    store = CacheStore(tmp_path, {"v": 1})
+    CompileCache(name="gcm", store=store).get(
+        ("k",), lambda: _compile_toy_step(1.0))
+    assert store.gc(max_age_s=0)["removed"] == 1
+    store2 = CacheStore(tmp_path, {"v": 1})
+    assert store2.load(("k",)) is None
+    assert store2.stats.stale_skips == 0 and store2.stats.corrupt_skips == 0

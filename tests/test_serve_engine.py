@@ -1,0 +1,354 @@
+"""Serving-engine guarantees.
+
+Device-level (subprocess, 4 fake CPU devices, 2x2 mesh — see
+test_executor_core.py for the pattern):
+
+(a) continuous-batching engine greedy ids == the one-shot serve path
+    (whole-prompt prefill + teacher-forced recompute, no KV reuse) at
+    k=1, over a staggered multi-request trace — and the engine's
+    compile-cache bucket set is CLOSED: a second identical trace pass
+    compiles nothing.
+(c) speculative k=2 output ids == k=1 greedy (acceptance is exact for
+    greedy self-speculation), with a nonzero draft-acceptance rate.
+(d) chunked prefill (cap_t smaller than the prompts) == whole-prompt
+    prefill, on a sliding-window arch (gemma3 reduced).
+
+Host-level (no jax):
+
+(b) KV slot pool invariants under random admission/completion
+    (hypothesis), plus scheduler packing laws (budgets, capacity, the
+    per-request item-ordering constraint chunk pipelining relies on) and
+    the speculative draft/verify rules.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve import (KVSlotPool, SchedulerConfig, Segment,
+                         TickScheduler, propose_draft, verify_greedy)
+
+_COMMON = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    jax.config.update("jax_default_matmul_precision", "highest")
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.serve import (EngineConfig, Request, ServeEngine,
+                             one_shot_generate)
+
+    def llama():
+        return get_arch("llama3.2-3b").reduced(n_layers=4, d_model=64,
+                                               n_heads=4, head_dim=16,
+                                               vocab=256)
+
+    def gemma():
+        # n_layers=5 puts one GLOBAL layer (idx 4) among the window-8
+        # locals, so both mask paths run
+        return get_arch("gemma3-1b").reduced(n_layers=5, d_model=64,
+                                             n_heads=4, head_dim=16,
+                                             vocab=256)
+
+    def trace(n, seed=7, lo=3, hi=28, max_new=6, spread=0.4):
+        rng = np.random.default_rng(seed)
+        out = []
+        for i in range(n):
+            ln = int(rng.integers(lo, hi))
+            out.append(Request(
+                req_id=i, prompt=rng.integers(0, 256, ln).astype(np.int32),
+                max_new_tokens=max_new, arrival=float(i) * spread))
+        return out
+
+    def run_engine(cfg, mesh, econf, reqs, params=None, cache=None,
+                   seed=3):
+        eng = ServeEngine(cfg, mesh, econf, params=params,
+                          param_dtype=jnp.float32, cache=cache, seed=seed)
+        res = eng.run(reqs)
+        return eng, {r: res[r].output_ids for r in res}
+""")
+
+
+def _run(case: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c",
+                        _COMMON + textwrap.dedent(case)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr[-4000:]}")
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# (a) engine == one-shot path at k=1; bucket set closed on a replay
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_one_shot_and_bucket_closure():
+    _run("""
+        cfg = llama()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        econf = EngineConfig(n_items=4, cap_t=16, n_slots=4, s_cap=48, k=1)
+        reqs = trace(20, max_new=5)
+        eng, got = run_engine(cfg, mesh, econf, reqs)
+        assert len(got) == 20, got.keys()
+
+        # one bucket total; replaying the identical trace compiles nothing
+        assert eng.cache.stats.misses == 1, eng.cache.stats.as_dict()
+        eng2, got2 = run_engine(cfg, mesh, econf, trace(20, max_new=5),
+                                params=eng.params, cache=eng.cache)
+        assert eng.cache.stats.misses == 1, eng.cache.stats.as_dict()
+        assert got2 == got
+
+        # the one-shot serve path (no continuous batching, no KV reuse)
+        # produces identical ids for every request
+        ref = one_shot_generate(cfg, mesh, eng.params,
+                                [r.prompt for r in reqs], 5)
+        for r in reqs:
+            assert got[r.req_id] == ref[r.req_id], (
+                r.req_id, len(r.prompt), got[r.req_id], ref[r.req_id])
+        print("OK one-shot parity", sum(map(len, got.values())))
+    """)
+
+
+# ---------------------------------------------------------------------------
+# (c) speculative k=2 == k=1 greedy (exact acceptance), drafts accepted
+# ---------------------------------------------------------------------------
+
+def test_speculative_k2_matches_k1():
+    _run("""
+        cfg = llama()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        reqs = lambda: trace(8, seed=11, max_new=6)
+        e1, g1 = run_engine(
+            cfg, mesh, EngineConfig(n_items=4, cap_t=16, n_slots=4,
+                                    s_cap=48, k=1), reqs())
+        e2, g2 = run_engine(
+            cfg, mesh, EngineConfig(n_items=4, cap_t=16, n_slots=4,
+                                    s_cap=48, k=2), reqs(),
+            params=e1.params)
+        assert g2 == g1, (g1, g2)
+        sp = e2.spec_stats
+        assert sp.drafted > 0 and sp.decode_ticks > 0
+        # zipf-ish tokens repeat, so the n-gram self-draft must land some
+        assert sp.accepted > 0, sp.as_dict()
+        assert e1.spec_stats.drafted == 0
+        print("OK speculative", sp.as_dict())
+    """)
+
+
+# ---------------------------------------------------------------------------
+# (d) chunked prefill == whole-prompt prefill (sliding-window arch)
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_matches_whole_prompt():
+    _run("""
+        cfg = gemma()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        reqs = lambda: trace(6, seed=5, lo=10, hi=30, max_new=4)
+        # cap_t=8 slices every prompt into multiple pipelined chunks;
+        # cap_t=32 prefills each prompt whole
+        e_chunk, g_chunk = run_engine(
+            cfg, mesh, EngineConfig(n_items=6, cap_t=8, n_slots=4,
+                                    s_cap=64, k=1), reqs())
+        e_whole, g_whole = run_engine(
+            cfg, mesh, EngineConfig(n_items=4, cap_t=32, n_slots=4,
+                                    s_cap=64, k=1), reqs(),
+            params=e_chunk.params)
+        assert g_chunk == g_whole, (g_chunk, g_whole)
+        ref = one_shot_generate(cfg, mesh, e_chunk.params,
+                                [r.prompt for r in reqs()], 4)
+        assert g_chunk == {i: ref[i] for i in range(len(ref))}
+        print("OK chunked prefill", g_chunk[0])
+    """)
+
+
+# ---------------------------------------------------------------------------
+# (b) KV slot pool invariants under random admission/completion
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 12),
+       st.lists(st.tuples(st.booleans(), st.integers(0, 30)), max_size=80))
+def test_slot_pool_invariants(n_slots, ops):
+    pool = KVSlotPool(n_slots, s_cap=32)
+    live = {}
+    next_req = 0
+    for is_alloc, pick in ops:
+        if is_alloc:
+            slot = pool.alloc(next_req)
+            if slot is None:
+                assert len(live) == n_slots   # only a full pool fails
+            else:
+                assert 0 <= slot < n_slots    # trash slot never handed out
+                live[next_req] = slot
+                next_req += 1
+        elif live:
+            rid = sorted(live)[pick % len(live)]
+            assert pool.free(live.pop(rid)) == rid
+        pool.check()
+        assert pool.in_use == len(live)
+        assert pool.in_use + pool.n_free == n_slots
+    assert pool.stats.allocs == len(live) + pool.stats.frees
+    assert pool.stats.peak_in_use <= n_slots
+
+
+def test_slot_pool_errors_and_preemption():
+    pool = KVSlotPool(2, s_cap=8)
+    a = pool.alloc(10)
+    b = pool.alloc(11)
+    assert {a, b} == {0, 1}
+    assert pool.alloc(12) is None
+    assert pool.stats.alloc_failures == 1
+    with pytest.raises(ValueError):
+        pool.alloc(10)          # double admission
+    assert pool.preempt(a) == 10
+    assert pool.stats.preemptions == 1
+    with pytest.raises(ValueError):
+        pool.free(a)            # double free
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# scheduler packing laws
+# ---------------------------------------------------------------------------
+
+def _dec(rid, k=1, slot=0, base=10):
+    return Segment(req_id=rid, kind="decode", tokens=tuple(range(k)),
+                   slot=slot, base=base)
+
+
+def _pre(rid, lens, slot=1):
+    segs, off = [], 0
+    for ln in lens:
+        segs.append(Segment(req_id=rid, kind="prefill",
+                            tokens=tuple(range(ln)), slot=slot, base=off))
+        off += ln
+    return segs
+
+
+def test_scheduler_capacity_and_ordering():
+    sched = TickScheduler(SchedulerConfig(n_items=3, cap_t=8, k=1))
+    plan = sched.plan([_dec(0), _dec(1)], [_pre(2, [8, 8, 8, 8])])
+    # never over cap_t per item
+    for item in plan.items:
+        assert sum(len(s.tokens) for s in item) <= 8
+    # same-request segments in strictly increasing item indices (the
+    # pipeline ordering that makes chunk j+1 see chunk j's cache writes)
+    seen = {}
+    for i, item in enumerate(plan.items):
+        for s in item:
+            assert seen.get(s.req_id, -1) < i
+            seen[s.req_id] = i
+    # chunk 4 of request 2 cannot fit this step and is deferred, never
+    # reordered or truncated
+    placed_pre = [s for it in plan.items for s in it if s.req_id == 2]
+    assert [s.base for s in placed_pre] == sorted(s.base for s in placed_pre)
+    assert plan.deferred_prefill == 1
+    assert plan.decode_tokens == 2
+
+
+def test_scheduler_budgets_and_serial_mode():
+    # decode budget caps streams per step (round-robin defers the rest)
+    sched = TickScheduler(SchedulerConfig(n_items=2, cap_t=4, k=2,
+                                          decode_token_budget=4))
+    plan = sched.plan([_dec(i, k=2, slot=i) for i in range(4)], [])
+    assert plan.decode_tokens == 4 and plan.deferred_decode == 2
+    # round-robin start rotates so deferred streams go first next step
+    plan2 = sched.plan([_dec(i, k=2, slot=i) for i in range(4)], [])
+    first_ids = {s.req_id for it in plan.items for s in it}
+    second_ids = {s.req_id for it in plan2.items for s in it}
+    assert first_ids != second_ids
+    # serial (stop-the-world) mode: no decode while prefill is pending
+    sched = TickScheduler(SchedulerConfig(n_items=2, cap_t=8, k=1,
+                                          prefill_mode="serial"))
+    plan = sched.plan([_dec(0)], [_pre(1, [8])])
+    kinds = {s.kind for it in plan.items for s in it}
+    assert kinds == {"prefill"} and plan.deferred_decode == 1
+    # ...and decodes run once nothing is prefilling
+    plan = sched.plan([_dec(0)], [])
+    assert {s.kind for it in plan.items for s in it} == {"decode"}
+
+
+# ---------------------------------------------------------------------------
+# speculative draft/verify rules (host-side)
+# ---------------------------------------------------------------------------
+
+def test_verify_greedy_rules():
+    # k=1: emit exactly the model's one id
+    assert verify_greedy([5], [9]) == [9]
+    # full acceptance: drafts equal the model's ids shifted by one
+    assert verify_greedy([5, 9, 4], [9, 4, 7]) == [9, 4, 7]
+    # first disagreement stops acceptance; its correction is emitted
+    assert verify_greedy([5, 9, 4], [9, 8, 7]) == [9, 8]
+    assert verify_greedy([5, 1, 4], [9, 8, 7]) == [9]
+    with pytest.raises(ValueError):
+        verify_greedy([5, 9], [1])
+
+
+def test_propose_draft_ngram_lookup():
+    # the continuation of the last occurrence of the suffix is proposed
+    hist = [1, 2, 3, 7, 8, 1, 2, 3]
+    assert propose_draft(hist, 2, ngram=3) == [7, 8]
+    # no match: repeat the last token
+    assert propose_draft([4, 5, 6], 3, ngram=3) == [6, 6, 6]
+    assert propose_draft([], 2) == [0, 0]
+    assert propose_draft(hist, 0) == []
+    # deterministic and bounded
+    assert len(propose_draft(hist, 5)) == 5
+
+
+# ---------------------------------------------------------------------------
+# preemption: starvation evicts a decode stream; outputs NEVER change
+# ---------------------------------------------------------------------------
+
+def test_preemption_preserves_outputs():
+    _run("""
+        cfg = llama()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        reqs = lambda: trace(5, seed=9, lo=4, hi=16, max_new=6, spread=0.0)
+        # 2 slots for 5 simultaneous requests + aggressive preemption:
+        # queue-head starvation must evict decode streams...
+        tight = EngineConfig(n_items=4, cap_t=16, n_slots=2, s_cap=48,
+                             k=1, preempt_waiting_steps=2)
+        e_t, g_t = run_engine(cfg, mesh, tight, reqs())
+        assert e_t.pool.stats.preemptions > 0, e_t.pool.stats.as_dict()
+        assert any(r.preempted for r in e_t.results.values())
+        # ...and greedy determinism means the emitted ids are identical to
+        # an uncontended run (only latency moves)
+        roomy = EngineConfig(n_items=4, cap_t=16, n_slots=5, s_cap=48, k=1)
+        e_r, g_r = run_engine(cfg, mesh, roomy, reqs(), params=e_t.params)
+        assert e_r.pool.stats.preemptions == 0
+        assert g_t == g_r, (g_t, g_r)
+        print("OK preemption", e_t.pool.stats.as_dict())
+    """)
+
+
+def test_run_records_rejections_instead_of_aborting():
+    _run("""
+        cfg = llama()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        econf = EngineConfig(n_items=4, cap_t=16, n_slots=4, s_cap=32, k=1)
+        eng = ServeEngine(cfg, mesh, econf, param_dtype=jnp.float32, seed=3)
+        reqs = trace(3, seed=2, lo=4, hi=10, max_new=4)
+        # prompt + max_new exceeds s_cap: rejected, not fatal, and the
+        # rest of the trace still completes
+        reqs.append(Request(req_id=99,
+                            prompt=np.zeros(40, np.int32),
+                            max_new_tokens=4, arrival=0.0))
+        res = eng.run(reqs)
+        assert sorted(res) == [0, 1, 2]
+        assert list(eng.rejected) == [99], eng.rejected
+        assert "never silently truncated" in eng.rejected[99]
+        assert eng.stats()["rejected"] == 1
+        print("OK rejection", eng.rejected[99][:40])
+    """)
