@@ -39,6 +39,7 @@ def main() -> None:
             steps=8 if args.quick else 24),
         "ckpt_policy": lambda: pf.ckpt_policy_compare(
             batch=32 if args.quick else 64),
+        "pipeline_bubble": pf.pipeline_bubble,
         "serving_engine": lambda: __import__(
             "benchmarks.serving", fromlist=["serving_engine"]
         ).serving_engine(quick=args.quick),
@@ -132,6 +133,13 @@ def _derived(name: str, rows) -> str:
                 f"tok_s={il['tokens_per_s']};"
                 f"occ={il['kv_occupancy']:.2f};"
                 f"accept={il['spec_acceptance']:.2f}")
+    if name.startswith("pipeline_bubble"):
+        by = {r["schedule"]: r for r in rows}
+        zb, fb = by["zero-bubble-h1"], by["gpipe-1f1b"]
+        return (f"zb_realized={zb['realized_bubble']:.2f}"
+                f"vs1f1b={fb['realized_bubble']:.2f};"
+                f"zb_over_model={zb['realized_over_model']:.3f};"
+                f"zb_speedup={zb['speedup_vs_1f1b']:.3f}x")
     if name.startswith("cache"):
         summaries = [r for r in rows
                      if str(r.get("step", "")).startswith("summary")]

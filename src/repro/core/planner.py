@@ -170,9 +170,14 @@ def _pick_schedules(cm: CostModel, pipelines, cfg: PlannerConfig
     (``PipelinePlan.sched_backend``); the plan-level pick — the one the
     single compiled executable actually runs, and the one ``bucket_key()``
     carries — minimizes the summed *realized* executor bubble across
-    pipelines (so zero-bubble-h1, whose W-grad fill stays fused in this
-    executor's HLO, never shadows interleaving's real gain; pin it to run
-    it). A pinned ``cfg.schedule`` restricts the candidates to that backend
+    pipelines. The realized model is backend-capability-aware: with the
+    executor's B/W backward split compiled in (``schedule.
+    SPLIT_BWD_REALIZED``, the default), zero-bubble-h1's realized bubble
+    is ``(d_p-1)(t_f+t_b-t_w)`` — its W-grad cooldown fill exists in the
+    HLO — so it competes on real footing; with the split disabled it
+    falls back to the fused wasted-slot model and never shadows
+    interleaving's gain. A pinned ``cfg.schedule`` restricts the
+    candidates to that backend
     (with the ``v`` sweep still running for interleaved unless ``v_stages``
     pins it too); a pinned ``v_stages`` — including an explicit 1 — is
     honored, and one that cannot divide the stage's layer block is an

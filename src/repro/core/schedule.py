@@ -64,6 +64,13 @@ __all__ = [
 # matmul-dominated transformer layers) — the zero-bubble split point
 WGRAD_FRACTION = 0.5
 
+# Executor capability: the compiled step realizes the B-grad/W-grad split for
+# ``split_bwd`` backends (runtime/executor.py's split-backward stage wrapper +
+# W-drain tick map). With this on, ``realized_bubble_time`` prices ZB-H1's
+# W-grad fill instead of collapsing it to plain 1F1B — tests monkeypatch it
+# to model executors without the split path.
+SPLIT_BWD_REALIZED = True
+
 
 # ---------------------------------------------------------------------------
 # Schedule backends.
@@ -121,6 +128,22 @@ class ScheduleSpec:
         if self.v == 1:
             return n_items + d_p - 1
         return self.n_groups(n_items, d_p) * self.v * d_p + d_p - 1
+
+    def drain_ticks(self, n_items: int, d_p: int) -> int:
+        """W-grad drain ticks appended to the tick map by ``split_bwd``
+        backends: one per (item, virtual stage) a device runs. In the
+        compiled program these are a primal no-op scan *preceding* the
+        forward scan whose autodiff transpose runs *after* every B-grad
+        tick — the backward cooldown — popping the per-item weight-grad
+        stash (see runtime/executor.py). Zero for fused backends."""
+        if not self.split_bwd or n_items <= 0:
+            return 0
+        return n_items * self.v
+
+    def total_ticks(self, n_items: int, d_p: int) -> int:
+        """Forward-scan ticks plus the split-backward drain ticks — the
+        tick count of the whole stage program."""
+        return self.scan_ticks(n_items, d_p) + self.drain_ticks(n_items, d_p)
 
     def tick_coords(self, t: int, p: int, n_items: int,
                     d_p: int) -> Tuple[int, int, bool]:
@@ -192,19 +215,40 @@ class ScheduleSpec:
         return bub / (work + bub)
 
     def realized_bubble_time(self, n_items: int, d_p: int, t_f: float,
-                             t_b: float) -> float:
+                             t_b: float, t_w: Optional[float] = None,
+                             split_realized: Optional[bool] = None) -> float:
         """Per-stage idle seconds the lockstep-SPMD executor actually
         realizes: wasted scan slots at ``1/v`` of a stage's fwd+bwd each.
 
-        Differs from :meth:`bubble_time` only for ``split_bwd`` backends —
-        the compiled program keeps W-grad fused with B-grad (the backward
-        is the autodiff transpose), so zero-bubble's modeled fill does NOT
-        materialize in HLO and its realized bubble equals plain 1F1B's.
-        The planner's default pick ranks by THIS, so a modeled-but-unpaid
-        advantage can never shadow interleaving's real one.
+        For ``split_bwd`` backends this is backend-capability-aware
+        (``split_realized``, default the module's
+        :data:`SPLIT_BWD_REALIZED`). With the split compiled
+        (runtime/executor.py): B-grad ticks genuinely drop the weight-grad
+        work from the critical path and the W-drain ticks are bubble-free
+        (stash slots hold real items only), but the lockstep scan cannot
+        retask its own (d_p - 1) cooldown garbage B-ticks — every tick runs
+        the same HLO — so the realized bubble is
+
+            (d_p - 1) * (t_f + t_b - t_w)
+
+        sitting between :meth:`bubble_time`'s ideal
+        ``(d_p - 1) * (t_f + t_b - 2 t_w)`` (free-form W placement) and
+        plain 1F1B's ``(d_p - 1) * (t_f + t_b)``; the two converge as the
+        weight-grad share shrinks — exactly the long-context regime, where
+        attention dgrad is O(T^2 d) but wgrad only O(T d^2). Without the
+        capability, W stays fused in the autodiff transpose and the
+        realized bubble equals plain 1F1B's. The planner's default pick
+        ranks by THIS, so a modeled-but-unpaid advantage can never shadow
+        interleaving's real one.
         """
         if n_items <= 0 or d_p <= 1:
             return 0.0
+        if split_realized is None:
+            split_realized = SPLIT_BWD_REALIZED
+        if self.split_bwd and split_realized:
+            if t_w is None:
+                t_w = WGRAD_FRACTION * t_b
+            return (d_p - 1) * max(t_f + t_b - t_w, 0.0)
         wasted = self.scan_ticks(n_items, d_p) - n_items * self.v
         return wasted * (t_f + t_b) / self.v
 
@@ -464,20 +508,25 @@ def candidate_schedules(layers_per_stage: int, *,
 
 def schedule_tiebreak(spec: ScheduleSpec) -> Tuple[int, str]:
     """Equal-bubble tie-break: fewer virtual stages, then the plain backend
-    (stable bucket keys — and zero-bubble-h1, whose realized bubble ties
-    1F1B's, is only ever run when pinned)."""
+    (stable bucket keys). Since the executor compiles the B/W split
+    (:data:`SPLIT_BWD_REALIZED`), zero-bubble-h1 normally wins or loses on
+    its realized bubble and only reaches this tie-break at ``t_w == 0``."""
     return (spec.v, "" if spec.name == "gpipe-1f1b" else spec.name)
 
 
 def rank_schedule(spec: ScheduleSpec, n_items: int, d_p: int, t_f: float,
                   t_b: float, t_p2p: float = 0.0, *,
-                  realized: bool = True) -> Tuple[float, int, str]:
+                  realized: bool = True,
+                  t_w: Optional[float] = None) -> Tuple[float, int, str]:
     """Schedule-selection sort key: lower (bubble + extra hand-off) cost
     first (the *realized* executor bubble by default — see
-    ``realized_bubble_time``; ``t_p2p`` charges interleaving's extra ring
-    trips), then :func:`schedule_tiebreak`."""
-    bub = (spec.realized_bubble_time(n_items, d_p, t_f, t_b) if realized
-           else spec.bubble_time(n_items, d_p, t_f, t_b))
+    ``realized_bubble_time``, which prices split-backward backends'
+    W-grad fill whenever the executor compiles it; ``t_p2p`` charges
+    interleaving's extra ring trips), then :func:`schedule_tiebreak`.
+    ``t_w`` overrides the default ``WGRAD_FRACTION * t_b`` weight-grad
+    share for split backends."""
+    bub = (spec.realized_bubble_time(n_items, d_p, t_f, t_b, t_w) if realized
+           else spec.bubble_time(n_items, d_p, t_f, t_b, t_w))
     bub += spec.comm_overhead_time(n_items, d_p, t_p2p)
     return (bub, *schedule_tiebreak(spec))
 

@@ -12,13 +12,72 @@ Axis semantics (DESIGN.md §2.2):
 
 from __future__ import annotations
 
+import math
+import os
 from typing import Optional, Tuple
+
+# XLA flags that let the compiled hand-off actually overlap: async
+# collectives (on by default since XLA 2024; older jaxlibs spelled it
+# --xla_gpu_enable_async_collectives, since removed) run the stream
+# ppermute on its own stream, and the latency-hiding scheduler hoists its
+# start above independent compute (runtime/executor.py issues the
+# ppermute before the accumulator fold for exactly this reason). The
+# triton fusion/gemm flags ride along from the same production recipe.
+# Every flag here must parse on the pinned jaxlib — XLA aborts the
+# process on unknown XLA_FLAGS entries.
+LATENCY_HIDING_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true "
+    "--xla_gpu_triton_gemm_any=True "
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true"
+)
+
+# set to any non-empty value to leave XLA_FLAGS alone
+OPT_OUT_ENV = "REPRO_NO_LATENCY_HIDING"
+
+
+def configure_latency_hiding(*, enable: Optional[bool] = None) -> bool:
+    """Prepend the latency-hiding XLA flags to ``XLA_FLAGS``.
+
+    Must run before the first ``import jax`` (XLA reads the env var once
+    at backend init); launchers call it at the top of ``main()``. On by
+    default; opt out with ``enable=False`` or by setting the
+    ``REPRO_NO_LATENCY_HIDING`` env var. Idempotent — flags already
+    present are not duplicated. Returns True when the flags are (now) in
+    ``XLA_FLAGS``.
+    """
+    if enable is None:
+        enable = not os.environ.get(OPT_OUT_ENV)
+    if not enable:
+        return False
+    import sys
+    if "jax" in sys.modules:
+        import warnings
+        warnings.warn(
+            "configure_latency_hiding() called after jax was imported; "
+            "XLA may already have initialized its backend and will ignore "
+            "the new flags. Call it before the first jax import.",
+            stacklevel=2)
+    current = os.environ.get("XLA_FLAGS", "")
+    if LATENCY_HIDING_FLAGS in current:
+        return True
+    os.environ["XLA_FLAGS"] = (LATENCY_HIDING_FLAGS + " " + current).strip()
+    return True
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    have = jax.device_count()
+    if have < need:
+        raise ValueError(
+            f"make_production_mesh(multi_pod={multi_pod}) needs {need} "
+            f"devices for mesh {dict(zip(axes, shape))} but "
+            f"jax.device_count() == {have}; use launch.mesh.make_mesh() "
+            f"with a shape matching your slice, or (CPU dry-runs) raise "
+            f"--xla_force_host_platform_device_count.")
     return jax.make_mesh(shape, axes)
 
 

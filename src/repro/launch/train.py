@@ -63,6 +63,10 @@ class TrainLoopConfig:
     # (workloads whose table solves to a constant, incl. the common
     # all-zero case, collapse to the uniform digest automatically).
     ckpt_policy: str = "stage-aware"
+    # zero-bubble B/W backward split: "auto" follows the schedule backend
+    # (split for zero-bubble-h1, fused otherwise), "on"/"off" force it.
+    # Parity is guaranteed either way (tests/test_split_backward.py).
+    split_bwd: str = "auto"
 
 
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
@@ -135,6 +139,10 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
 
     def get_step(plan):
         key = plan.bucket_key(d_s)
+        # a forced B/W split changes the compiled HLO without changing the
+        # bucket geometry — give it its own cache identity. "auto" keeps
+        # the historical key so persisted stores stay warm.
+        ckey = key if loop.split_bwd == "auto" else (key, loop.split_bwd)
         # the builder is cheap host-side state (geometry + specs); only
         # the compiled executable is cached — and, via the store, persisted.
         # ckpt_policy() canonicalizes the remat vector (padded to the
@@ -142,11 +150,13 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         # scalar) — the same canonical form key.ckpt digests, so the cache
         # can never hand this geometry a wrong-remat executable.
         l_max, table, _digest = plan.ckpt_policy(key.n_chunks)
+        split = (None if loop.split_bwd == "auto"
+                 else loop.split_bwd == "on")
         geom = make_geometry(cfg_arch, mesh, n_chunks=key.n_chunks,
                              cap=key.cap, ctx_cap=key.ctx_cap,
                              l_ckpt=l_max, compute_dtype=dtype,
                              schedule=key.schedule, v_stages=key.v_stages,
-                             ckpt_table=table)
+                             ckpt_table=table, split_bwd=split)
         builder = TrainStepBuilder(cfg_arch, mesh, geom, param_dtype=dtype)
 
         def build():
@@ -157,7 +167,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
             bstruct = batch_struct(geom, n_pods)
             return builder.build(params_shape).lower(
                 params_shape, opt_shape, None, bstruct).compile()
-        return builder, step_cache.get(key, build)
+        return builder, step_cache.get(ckey, build)
 
     # --- bootstrap: plan step 0 to learn the first bucket ---
     plan, corpus = plan_for(0)
@@ -307,11 +317,30 @@ def main():
                          "'stage-aware' threads the ILP's per-(stage, "
                          "chunk) checkpoint vector into the executor; "
                          "'uniform' collapses it to one max depth")
+    ap.add_argument("--split-bwd", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="zero-bubble B/W backward split: 'auto' follows "
+                         "the schedule backend (split for zero-bubble-h1), "
+                         "'on'/'off' force it for any backend (parity is "
+                         "guaranteed either way)")
+    ap.add_argument("--no-latency-hiding", action="store_true",
+                    help="do not prepend the async-collective / "
+                         "latency-hiding-scheduler XLA flags (also: set "
+                         "REPRO_NO_LATENCY_HIDING=1)")
     args = ap.parse_args()
 
     import os
-    os.environ.setdefault(
-        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+    from repro.launch.mesh import configure_latency_hiding
+    configure_latency_hiding(
+        enable=False if args.no_latency_hiding else None)
+    # append (not setdefault — the latency-hiding flags may already be in
+    # XLA_FLAGS) the CPU placeholder-device count unless the caller set one
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
     import jax
 
     from repro.configs import get_arch
@@ -329,7 +358,8 @@ def main():
                            compute_dtype="float32" if args.reduced
                            else "bfloat16",
                            schedule=args.schedule, v_stages=args.v_stages,
-                           ckpt_policy=args.ckpt_policy)
+                           ckpt_policy=args.ckpt_policy,
+                           split_bwd=args.split_bwd)
     _, _, history = train(cfg, mesh, loop)
     if args.stats_json:
         import json

@@ -47,7 +47,7 @@ from .program import StageProgram, TickContext
 
 __all__ = ["run_stage_program", "run_stage_layers", "ppermute_streams",
            "schedule_tick_coords", "remat_tick_count",
-           "canonical_ckpt_table",
+           "canonical_ckpt_table", "split_backward_stage", "make_stash",
            "reset_ssm_at_boundary", "fold_streaming_ce", "fold_greedy_ids"]
 
 
@@ -133,6 +133,149 @@ def ppermute_streams(streams, data_axis: str, d_p: int, *,
         lambda x: jax.lax.ppermute(x, data_axis, perm), streams)
 
 
+# ---------------------------------------------------------------------------
+# Split backward (zero-bubble B-grad / W-grad): the stage wrapper and the
+# W-drain tick map.
+#
+# The lockstep scan runs ONE tick HLO on every device, so a masked or
+# conditional W-grad inside the existing ticks realizes nothing — the win
+# needs ticks with *different* HLO. The compiled structure:
+#
+# * every forward tick wraps its stage computation in
+#   :func:`split_backward_stage` — a ``jax.custom_vjp`` whose forward is the
+#   unmodified stage math (loss stays bitwise-identical) saving the stage's
+#   ``jax.vjp`` closure as residuals, and whose backward (the B-grad tick)
+#   applies the saved vjp, returns ONLY the input/context cotangents —
+#   dropping the weight cotangents, so XLA dead-code-eliminates exactly the
+#   wgrad GEMMs off the critical path — and pushes the boundary pair
+#   ``(x_in, ctx_in, ybar, ctx_bar)`` into a per-item stash slot;
+# * the stash rides the scan carry as a *cotangent mailbox*: its primal is
+#   dead zeros threaded through untouched, while its cotangent accumulates
+#   the pushed entries as the transposed scan walks ticks in reverse;
+# * ``spec.drain_ticks`` dedicated W-grad ticks are prepended to the
+#   *primal* program as a no-op scan (:func:`_run_drain_scan`) feeding the
+#   stash into the forward scan — so in the autodiff transpose they run
+#   LAST, exactly the backward cooldown, each popping one slot and
+#   computing that item's stage weight grads (ZB-H1's W-grad fill, now in
+#   the HLO).
+#
+# Bubble ticks push nothing (the push is valid-masked); their weight-grad
+# contribution is exactly zero in the fused transpose too — bubble outputs
+# never reach the loss, so their cotangents are exact zeros — which keeps
+# split-vs-fused gradients at parity (tests/test_split_backward.py).
+# ---------------------------------------------------------------------------
+
+
+def make_stash(entry_struct, n_slots: int):
+    """Zero-filled stash: one buffer of ``n_slots`` rows per (non-None)
+    leaf of ``entry_struct`` — the pytree a single
+    :func:`split_backward_stage` push writes, i.e.
+    ``(x_in, ctx_in, ybar_like_x, ctx_bar_like_ctx)``."""
+    return jax.tree.map(
+        lambda a: jnp.zeros((n_slots, *a.shape), a.dtype), entry_struct)
+
+
+def _stash_push(stash, slot, entry, valid):
+    """Write ``entry`` at row ``slot`` of every stash leaf; bubble ticks
+    (``valid`` False) leave the stash untouched."""
+    return jax.tree.map(
+        lambda buf, leaf: buf.at[slot].set(
+            jnp.where(valid, leaf.astype(buf.dtype), buf[slot])),
+        stash, entry)
+
+
+def split_backward_stage(stage_fn: Callable, x, ctx, params, stash, slot,
+                         valid, aux=()):
+    """Run ``stage_fn(x, ctx, params, aux) -> (y, new_ctx)`` with the
+    zero-bubble B/W split.
+
+    Forward: the unmodified stage computation (its ``jax.vjp`` closure is
+    saved as the custom_vjp residuals — no recompute on the critical
+    path); the stash passes through untouched. Backward (B-grad tick):
+    apply the saved vjp, drop the weight cotangents (their GEMMs become
+    dead code on this tick) and push ``(x, ctx, ybar, ctx_bar)`` into
+    ``stash``'s cotangent at row ``slot`` — the W-drain ticks pop it
+    during cooldown (see :func:`_run_drain_scan`).
+
+    ``stage_fn`` must NOT close over any traced value: the custom_vjp's
+    backward is re-traced at scan-transpose time, when closure-captured
+    tracers of the (long-dead) forward scan trace are leaked garbage —
+    everything per-tick comes in through ``aux``, a pytree of FLOAT arrays
+    (cast integer values to float32 at the caller; exact below 2**24, and
+    its zero cotangent then stays an ordinary float — custom_vjp cannot
+    return cotangents for integer operands). ``slot``/``valid`` enter as
+    float32 for the same reason. Returns ``(y, new_ctx, stash)``.
+    """
+
+    def _run(x, ctx, params, stash, slot_f, valid_f, aux):
+        y, new_ctx = stage_fn(x, ctx, params, aux)
+        return y, new_ctx, stash
+
+    def _fwd(x, ctx, params, stash, slot_f, valid_f, aux):
+        (y, new_ctx), f_vjp = jax.vjp(
+            lambda xx, cc, pp: stage_fn(xx, cc, pp, aux), x, ctx, params)
+        return (y, new_ctx, stash), (f_vjp, x, ctx, slot_f, valid_f)
+
+    def _bwd(res, cots):
+        f_vjp, x, ctx, slot_f, valid_f = res
+        ybar, ctx_bar, stash_bar = cots
+        xbar, ctxbar, _wbar = f_vjp((ybar, ctx_bar))  # _wbar dropped: DCE
+        slot = slot_f.astype(jnp.int32)
+        valid = valid_f > 0.5
+        stash_bar = _stash_push(stash_bar, slot, (x, ctx, ybar, ctx_bar),
+                                valid)
+        wzero = jax.tree.map(jnp.zeros_like, params)
+        return (xbar, ctxbar, wzero, stash_bar,
+                jnp.zeros_like(slot_f), jnp.zeros_like(valid_f),
+                jax.tree.map(jnp.zeros_like, aux))
+
+    run = jax.custom_vjp(_run)
+    run.defvjp(_fwd, _bwd)
+    return run(x, ctx, params, stash,
+               jnp.asarray(slot, jnp.float32),
+               jnp.asarray(valid, jnp.float32), aux)
+
+
+def _run_drain_scan(drain_tick: Callable, stage_params, init_stash,
+                    n_drain: int, aux=()):
+    """The split-backward W-grad tick map: a primal no-op scan over
+    ``n_drain`` slots threading the stash through one custom_vjp per tick.
+
+    In the transposed program these ticks run after every B-grad tick (the
+    backward cooldown); tick ``j`` pops stash row ``j`` and calls
+    ``drain_tick(j, entry, stage_params, aux) -> params-cotangent`` — the
+    backend's weight-grad recomputation for that (item, virtual-stage)
+    slot. The per-tick contributions accumulate into ``stage_params``'s
+    cotangent through the scan transpose. Like
+    :func:`split_backward_stage`, ``drain_tick`` must not close over
+    traced values — batch lookups etc. come in through ``aux`` (float
+    arrays only).
+    """
+
+    def _nop(stash, params, j_f, aux):
+        return stash
+
+    def _fwd(stash, params, j_f, aux):
+        return stash, (params, j_f, aux)
+
+    def _bwd(res, stash_bar):
+        params, j_f, aux = res
+        j = j_f.astype(jnp.int32)
+        entry = jax.tree.map(lambda buf: buf[j], stash_bar)
+        wbar = drain_tick(j, entry, params, aux)
+        return (stash_bar, wbar, jnp.zeros_like(j_f),
+                jax.tree.map(jnp.zeros_like, aux))
+
+    drain = jax.custom_vjp(_nop)
+    drain.defvjp(_fwd, _bwd)
+
+    def body(stash, j):
+        return drain(stash, stage_params, j.astype(jnp.float32), aux), None
+
+    stash, _ = jax.lax.scan(body, init_stash, jnp.arange(n_drain))
+    return stash
+
+
 def run_stage_program(program: StageProgram, init_streams, init_state,
                       init_acc) -> Tuple[Any, Any, Any]:
     """Run one stage program: the scanned tick loop all backends share.
@@ -152,26 +295,69 @@ def run_stage_program(program: StageProgram, init_streams, init_state,
     Returns the final ``(streams, state, acc)``; ``acc`` is psummed over
     the pipeline axis when ``program.psum_acc`` (only the last stage folds
     real output, the rest contribute zeros / stale rows).
+
+    Two optional program hooks extend the tick map:
+
+    * ``program.fold`` — double-buffered stage hand-off: the tick hook
+      only computes, the engine issues the stream ``ppermute`` against the
+      carry's (second) receive buffer, and ``fold(tc, streams, state,
+      acc)`` then folds the *pre-permute* buffer into the accumulator —
+      the permute-independent fold work (the vocab-parallel CE matmul is
+      the big one) overlaps the in-flight collective under XLA's async
+      collectives + latency-hiding scheduler (launch/mesh.py flags). Same
+      values, same per-value op order: losses stay bitwise-identical.
+    * ``program.split_bwd`` — the zero-bubble B/W split: the engine runs
+      ``spec.drain_ticks`` W-grad ticks (:func:`_run_drain_scan`) feeding
+      a stash buffer into the forward scan's carry; the tick hook (called
+      as ``tick(tc, streams, state, acc, stash)``) threads it through
+      :func:`split_backward_stage`. In the transpose the W ticks run
+      after the whole B-grad scan — the cooldown drain.
     """
     n, d_p, v = program.n_items, program.d_p, program.v
     n_groups = program.spec.n_groups(n, d_p)
+    split = program.split_bwd
 
     def _tick(carry, t):
-        streams, state, acc = carry
+        if split:
+            streams, state, acc, stash = carry
+        else:
+            streams, state, acc = carry
         p_idx = jax.lax.axis_index(program.data_axis)
         idx, v_idx, valid = schedule_tick_coords(
             t, p_idx, n=n, d_p=d_p, v=v, n_groups=n_groups)
         idxc = jnp.clip(idx, 0, n - 1)
         tc = TickContext(t=t, idx=idx, idxc=idxc, valid=valid, p_idx=p_idx,
                          n_items=n, d_p=d_p, v_idx=v_idx, v=v)
-        streams, state, acc = program.tick(tc, streams, state, acc)
-        streams = ppermute_streams(streams, program.data_axis, d_p,
-                                   ring=(v > 1))
-        return (streams, state, acc), None
+        if split:
+            streams, state, acc, stash = program.tick(tc, streams, state,
+                                                      acc, stash)
+        else:
+            streams, state, acc = program.tick(tc, streams, state, acc)
+        sent = ppermute_streams(streams, program.data_axis, d_p,
+                                ring=(v > 1))
+        if program.fold is not None:
+            # double-buffered hand-off: fold the pre-permute buffer while
+            # the collective is in flight
+            acc = program.fold(tc, streams, state, acc)
+        if split:
+            return (sent, state, acc, stash), None
+        return (sent, state, acc), None
 
-    (streams, state, acc), _ = jax.lax.scan(
-        _tick, (init_streams, init_state, init_acc),
-        jnp.arange(program.n_ticks))
+    if split:
+        # one W tick per (item, virtual stage) — ``spec.drain_ticks`` for
+        # split_bwd backends, but derived from the program geometry so the
+        # split path also runs under fused-schedule names (parity tests)
+        n_drain = n * v
+        stash0 = _run_drain_scan(program.drain_tick, program.stage_params,
+                                 program.init_stash, n_drain,
+                                 aux=program.drain_aux)
+        (streams, state, acc, _), _ = jax.lax.scan(
+            _tick, (init_streams, init_state, init_acc, stash0),
+            jnp.arange(program.n_ticks))
+    else:
+        (streams, state, acc), _ = jax.lax.scan(
+            _tick, (init_streams, init_state, init_acc),
+            jnp.arange(program.n_ticks))
     if program.psum_acc:
         acc = jax.tree.map(
             lambda a: jax.lax.psum(a, program.data_axis), acc)

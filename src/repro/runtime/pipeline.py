@@ -70,6 +70,17 @@ class PipelineGeometry:
     # compiled step — which is why ExecutionPlan.bucket_key() carries the
     # table's digest.
     ckpt_table: Optional[Tuple[Tuple[int, ...], ...]] = None
+    # zero-bubble split backward: B-grad ticks drop the weight-grad GEMMs
+    # from the critical path (executor.split_backward_stage) and dedicated
+    # W-drain ticks replay them during the backward cooldown. Train mode
+    # only; runs under any schedule backend (the parity tests exercise all
+    # three), defaulted on by zero-bubble-h1 in make_geometry.
+    split_bwd: bool = False
+    # double-buffered stage hand-off: the executor issues the stream
+    # ppermute before the accumulator fold, so the fold (the vocab-parallel
+    # CE matmul) overlaps the in-flight collective under the latency-hiding
+    # XLA flags (launch/mesh.py). Bitwise-identical results.
+    overlap_handoff: bool = True
 
     def __post_init__(self) -> None:
         if self.v_stages < 1 or self.layers_per_stage % self.v_stages:
@@ -226,12 +237,57 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
 
         ctx0 = init_stage_ctx(cfg, geom)
         x0 = jnp.zeros((cap_loc, s.d_model), dt)
+        split = geom.split_bwd and mode == "train"
 
-        def tick(tc, x_recv, ctx, acc):
+        def fold_acc(tc, x_out, ctx, acc):  # noqa: ARG001 (ctx unused)
+            """Fold one tick's output into the accumulator (CE / greedy
+            ids). With ``overlap_handoff`` the executor calls this AFTER
+            issuing the stream ppermute, so the vocab-parallel matmul here
+            overlaps the in-flight collective (double-buffered hand-off).
+            """
+            seg = jnp.where(tc.valid, seg_a[tc.idxc], -1)
+            tgt = targets_a[tc.idxc]
+            h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
+            if mode == "train":
+                return executor.fold_streaming_ce(
+                    tc, h_last, head_w, tgt, seg, acc,
+                    model_axis=model_axis, vocab_true=s.vocab)
+            # prefill: greedy next-token ids per position (the KV fills
+            # the context carry — it IS the prefill cache). h_last is
+            # token-sharded here, unlike decode's replicated rows.
+            ids = executor.fold_greedy_ids(
+                tc, h_last, head_w, acc[0],
+                model_axis=model_axis, vocab_true=s.vocab,
+                token_sharded=True)
+            return (ids, acc[1])
+
+        def _pack_aux(seg, pos, ctx_len, l_act, start=None):
+            """Float32-cast pytree of the traced per-tick values the split
+            stage closure needs: executor.split_backward_stage's backward
+            is re-traced at scan-transpose time, so NOTHING traced may be
+            closure-captured — it all rides through this explicit aux (and
+            float32 keeps the cotangents ordinary zeros; every value here
+            is an integer far below 2**24, so the round trip is exact)."""
+            aux = {"seg": seg, "pos": pos, "ctx_len": ctx_len,
+                   "windows": windows, "active": active}
+            if l_act is not None and not isinstance(l_act, int):
+                aux["l_ckpt"] = l_act
+            if start is not None:
+                aux["start"] = start
+            return jax.tree.map(
+                lambda a: jnp.asarray(a).astype(jnp.float32), aux)
+
+        def _unpack_aux(af):
+            i32 = lambda k: af[k].astype(jnp.int32)  # noqa: E731
+            return (i32("seg"), i32("pos"), i32("ctx_len"), i32("windows"),
+                    af["active"] > 0.5,
+                    i32("l_ckpt") if "l_ckpt" in af else None,
+                    i32("start") if "start" in af else None)
+
+        def tick(tc, x_recv, ctx, acc, stash=None):
             tokens = tokens_a[tc.idxc]
             seg = jnp.where(tc.valid, seg_a[tc.idxc], -1)
             pos = pos_a[tc.idxc]
-            tgt = targets_a[tc.idxc]
             ctx_len = jnp.where(tc.valid, ctxlen_a[tc.idxc], 0)
 
             x_emb = sp.sharded_embed(params["embed"], tokens, model_axis, dt)
@@ -240,14 +296,32 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
             x_in = jnp.where(tc.is_first_stage, x_emb, x_recv)
 
             if v_st == 1:
-                ctx = executor.reset_ssm_at_boundary(ctx, ctx_len)
+                ctx_in = executor.reset_ssm_at_boundary(ctx, ctx_len)
                 l_act = None if ckpt_tab is None else \
                     executor.remat_tick_count(ckpt_tab, tc.p_idx, tc.idxc,
                                               tc.valid)
-                x_out, ctx = _run_stage_layers(
-                    model, geom, stage_params, shard_dims, x_in, ctx,
-                    seg=seg, pos=pos, ctx_len=ctx_len, windows=windows,
-                    active=active, model_axis=model_axis, l_ckpt=l_act)
+                if split:
+                    # zero-bubble B/W split: the custom_vjp drops the wgrad
+                    # GEMMs from this tick's backward and stashes the
+                    # boundary pair at the item's slot for the W drain
+                    def sfn(xx, cc, pp, af):
+                        a_seg, a_pos, a_cl, a_win, a_act, a_l, _ = \
+                            _unpack_aux(af)
+                        return _run_stage_layers(
+                            model, geom, pp, shard_dims, xx, cc,
+                            seg=a_seg, pos=a_pos, ctx_len=a_cl,
+                            windows=a_win, active=a_act,
+                            model_axis=model_axis,
+                            l_ckpt=geom.l_ckpt if a_l is None else a_l)
+                    x_out, ctx, stash = executor.split_backward_stage(
+                        sfn, x_in, ctx_in, stage_params, stash,
+                        tc.idxc, tc.valid,
+                        aux=_pack_aux(seg, pos, ctx_len, l_act))
+                else:
+                    x_out, ctx = _run_stage_layers(
+                        model, geom, stage_params, shard_dims, x_in, ctx_in,
+                        seg=seg, pos=pos, ctx_len=ctx_len, windows=windows,
+                        active=active, model_axis=model_axis, l_ckpt=l_act)
             else:
                 # interleaved-1f1b: this tick runs ONE virtual stage — the
                 # L_v-layer block (and its context-carry slice) at
@@ -270,41 +344,109 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
                     if ckpt_tab is None else \
                     executor.remat_tick_count(ckpt_tab, tc.p_idx, tc.idxc,
                                               tc.valid, v=v_st, l_max=L_v)
-                x_out, ctx_v = _run_stage_layers(
-                    model, geom, jax.tree.map(_slc, stage_params),
-                    shard_dims, x_in, ctx_v,
-                    seg=seg, pos=pos, ctx_len=ctx_len,
-                    windows=_slc(windows), active=_slc(active),
-                    model_axis=model_axis, n_layers=L_v,
-                    l_ckpt=l_act)
+                if split:
+                    # slot = (virtual stage, item); the stage_fn takes the
+                    # FULL stage tree and slices inside (by the traced
+                    # start riding aux), so the drain's weight grads land
+                    # on the right block via the dynamic_slice transpose
+                    def sfn(xx, cc, pp, af):
+                        a_seg, a_pos, a_cl, a_win, a_act, a_l, a_st = \
+                            _unpack_aux(af)
+
+                        def _s(t):
+                            return jax.lax.dynamic_slice_in_dim(
+                                t, a_st, L_v, 0)
+                        return _run_stage_layers(
+                            model, geom, jax.tree.map(_s, pp),
+                            shard_dims, xx, cc,
+                            seg=a_seg, pos=a_pos, ctx_len=a_cl,
+                            windows=_s(a_win), active=_s(a_act),
+                            model_axis=model_axis, n_layers=L_v,
+                            l_ckpt=l_act if a_l is None else a_l)
+                    x_out, ctx_v, stash = executor.split_backward_stage(
+                        sfn, x_in, ctx_v, stage_params, stash,
+                        tc.v_idx * n + tc.idxc, tc.valid,
+                        aux=_pack_aux(seg, pos, ctx_len, l_act, start))
+                else:
+                    x_out, ctx_v = _run_stage_layers(
+                        model, geom, jax.tree.map(_slc, stage_params),
+                        shard_dims, x_in, ctx_v,
+                        seg=seg, pos=pos, ctx_len=ctx_len,
+                        windows=_slc(windows), active=_slc(active),
+                        model_axis=model_axis, n_layers=L_v,
+                        l_ckpt=l_act)
                 ctx = jax.tree.map(
                     lambda full, new: jax.lax.dynamic_update_slice_in_dim(
                         full, new, start, 0) if full is not None else None,
                     ctx, ctx_v, is_leaf=lambda t: t is None)
 
-            h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
-            if mode == "train":
-                acc = executor.fold_streaming_ce(
-                    tc, h_last, head_w, tgt, seg, acc,
-                    model_axis=model_axis, vocab_true=s.vocab)
-            else:
-                # prefill: greedy next-token ids per position (the KV fills
-                # the context carry — it IS the prefill cache). h_last is
-                # token-sharded here, unlike decode's replicated rows.
-                ids = executor.fold_greedy_ids(
-                    tc, h_last, head_w, acc[0],
-                    model_axis=model_axis, vocab_true=s.vocab,
-                    token_sharded=True)
-                acc = (ids, acc[1])
+            if not geom.overlap_handoff:
+                acc = fold_acc(tc, x_out, ctx, acc)
+            if split:
+                return x_out, ctx, acc, stash
             return x_out, ctx, acc
+
+        def drain_tick(j, entry, sp_full, af):
+            """W-grad tick ``j`` (transposed cooldown): replay stage
+            weight grads for item ``j % n`` / virtual block ``j // n``
+            from the stashed ``(x_in, ctx_in, ybar, ctx_bar)`` boundary
+            pair. ``l_ckpt=0``: this IS a recompute, no nested remat.
+            Batch lookups come through ``af`` (the float-cast drain aux) —
+            custom_vjp hooks cannot close over traced values."""
+            x_st, ctx_st, ybar, cbar = entry
+            m = j % n
+            seg = af["seg_a"].astype(jnp.int32)[m]
+            pos = af["pos_a"].astype(jnp.int32)[m]
+            ctx_len = af["ctxlen_a"].astype(jnp.int32)[m]
+            d_win = af["windows"].astype(jnp.int32)
+            d_act = af["active"] > 0.5
+            if v_st == 1:
+                def f(pp):
+                    return _run_stage_layers(
+                        model, geom, pp, shard_dims, x_st, ctx_st,
+                        seg=seg, pos=pos, ctx_len=ctx_len, windows=d_win,
+                        active=d_act, model_axis=model_axis, l_ckpt=0)
+            else:
+                start = (j // n) * L_v
+
+                def _slcj(t):
+                    return jax.lax.dynamic_slice_in_dim(t, start, L_v, 0)
+
+                def f(pp):
+                    return _run_stage_layers(
+                        model, geom, jax.tree.map(_slcj, pp), shard_dims,
+                        x_st, ctx_st,
+                        seg=seg, pos=pos, ctx_len=ctx_len,
+                        windows=_slcj(d_win), active=_slcj(d_act),
+                        model_axis=model_axis, n_layers=L_v, l_ckpt=0)
+            _, wv = jax.vjp(f, sp_full)
+            (wbar,) = wv((ybar, cbar))
+            return wbar
 
         if mode == "train":
             acc0: Tuple = (jnp.float32(0), jnp.float32(0))
         else:
             acc0 = (jnp.zeros((n, cap_loc), jnp.int32), jnp.float32(0))
+        stash0 = None
+        drain_aux = ()
+        if split:
+            ctx_struct = ctx0 if v_st == 1 else jax.tree.map(
+                lambda t: t[:L_v], ctx0)
+            stash0 = executor.make_stash(
+                (x0, ctx_struct, x0, ctx_struct), n * v_st)
+            drain_aux = jax.tree.map(
+                lambda a: a.astype(jnp.float32),
+                {"seg_a": seg_a, "pos_a": pos_a, "ctxlen_a": ctxlen_a,
+                 "windows": windows, "active": active})
         program = StageProgram(n_items=n, d_p=d_p, data_axis=data_axis,
                                tick=tick, psum_acc=(mode == "train"),
-                               schedule=geom.schedule, v=geom.v_stages)
+                               schedule=geom.schedule, v=geom.v_stages,
+                               fold=fold_acc if geom.overlap_handoff
+                               else None,
+                               split_bwd=split, init_stash=stash0,
+                               drain_tick=drain_tick if split else None,
+                               stage_params=stage_params if split else None,
+                               drain_aux=drain_aux)
         xf, ctxf, acc = executor.run_stage_program(program, x0, ctx0, acc0)
         if mode == "train":
             # only the last stage accumulated loss; psum'd by the executor

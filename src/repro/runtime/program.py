@@ -97,6 +97,23 @@ class StageProgram:
     ``repro.core.schedule``'s registry; the engine mirrors its
     ``tick_coords`` mapping in traced arithmetic and runs ``spec.
     scan_ticks(n_items, d_p)`` ticks.
+
+    Optional hooks extending the tick map (see
+    ``executor.run_stage_program``):
+
+    * ``fold(tc, streams, state, acc) -> acc`` — double-buffered hand-off:
+      when set, the tick hook must NOT touch ``acc``; the engine issues
+      the stream ppermute first and folds the pre-permute buffer while the
+      collective is in flight.
+    * ``split_bwd`` — zero-bubble B/W split: the tick hook is called as
+      ``tick(tc, streams, state, acc, stash) -> (streams, state, acc,
+      stash)`` and must thread the stash through
+      ``executor.split_backward_stage``; ``init_stash`` is the zero-filled
+      stash (``executor.make_stash``), ``drain_tick(j, entry,
+      stage_params, aux) -> params-cotangent`` recomputes slot ``j``'s
+      stage weight grads (``drain_aux``: the float-cast pytree of traced
+      values it needs — custom_vjp hooks cannot close over tracers), and
+      ``stage_params`` is the tree those cotangents accumulate into.
     """
 
     n_items: int
@@ -106,6 +123,12 @@ class StageProgram:
     psum_acc: bool = True
     schedule: str = "gpipe-1f1b"
     v: int = 1
+    fold: Any = None
+    split_bwd: bool = False
+    init_stash: Any = None
+    drain_tick: Any = None
+    stage_params: Any = None
+    drain_aux: Any = ()
 
     @property
     def spec(self):

@@ -52,17 +52,26 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
                   zero3_mode: str = "per_tick",
                   schedule: str = "gpipe-1f1b",
                   v_stages: int = 1,
-                  ckpt_table=None) -> PipelineGeometry:
+                  ckpt_table=None,
+                  split_bwd: Optional[bool] = None,
+                  overlap_handoff: bool = True) -> PipelineGeometry:
     """``ckpt_table`` (optional): the solver's per-(stage, chunk) remat
     matrix — any (d_p, n_chunks) nested sequence; canonicalized to the
     hashable tuple-of-tuples the frozen geometry stores. None keeps the
-    uniform ``l_ckpt`` policy."""
+    uniform ``l_ckpt`` policy.
+
+    ``split_bwd`` (optional): force the zero-bubble B/W backward split on
+    or off; None defaults to the schedule backend's capability
+    (``ScheduleSpec.split_bwd`` — i.e. on for ``zero-bubble-h1``)."""
     from .executor import canonical_ckpt_table
+    from repro.core.schedule import get_schedule
     pod, data, model = mesh_axis_names(mesh)
     d_p = mesh.shape[data]
     d_s = mesh.shape[model]
     ckpt_table = canonical_ckpt_table(ckpt_table, d_p=d_p,
                                       n_chunks=n_chunks)
+    if split_bwd is None:
+        split_bwd = get_schedule(schedule, v_stages).split_bwd
     return PipelineGeometry(
         n_chunks=n_chunks, cap=cap, ctx_cap=ctx_cap, d_p=d_p, d_s=d_s,
         l_ckpt=l_ckpt,
@@ -72,7 +81,9 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
         zero3_mode=zero3_mode,
         schedule=schedule,
         v_stages=v_stages,
-        ckpt_table=ckpt_table)
+        ckpt_table=ckpt_table,
+        split_bwd=split_bwd,
+        overlap_handoff=overlap_handoff)
 
 
 def prepare_params(cfg: ArchConfig, raw_params: Dict, mesh: Mesh,

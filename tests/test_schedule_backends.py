@@ -264,13 +264,14 @@ def test_choose_schedule_prefers_lower_bubble():
     cm = _cm()  # n_layers=8, d_p=4 -> layers_per_stage=2, divisors {2}
     chunks = [Chunk(kind=ChunkKind.BATCHED, context=0,
                     slices=(Slice(i, 0, 1024, True),)) for i in range(8)]
-    # default objective is the REALIZED executor bubble: zero-bubble-h1's
-    # W-grad fill stays fused in this executor's HLO, so it ties 1F1B and
-    # must not shadow interleaving's real (d_p-1)/v gain
+    # default objective is the REALIZED executor bubble. ZB-H1's split
+    # backward now compiles, pricing its bubble at
+    # (d_p-1)(t_f + t_b - t_w); at this geometry interleaving's
+    # (d_p-1)(t_f+t_b)/2 + ring-trip comm still narrowly wins
     best = choose_schedule(cm, chunks)
     assert (best.name, best.v) == ("interleaved-1f1b", 2)
-    # under the MODELED objective (what a split-backward executor would
-    # realize), ZB-H1's ramp ((d_p-1) t_f) beats interleaving at v=2
+    # under the MODELED objective (free-form W placement,
+    # (d_p-1)(t_f + t_b - 2 t_w)), ZB-H1 beats interleaving at v=2
     assert choose_schedule(cm, chunks, realized=False).name == \
         "zero-bubble-h1"
     only_interleaved = [get_schedule("interleaved-1f1b", v) for v in (1, 2)]
@@ -280,22 +281,81 @@ def test_choose_schedule_prefers_lower_bubble():
     assert choose_schedule(_cm(d_p=1), chunks).name == "gpipe-1f1b"
 
 
-def test_auto_pick_never_selects_unrealized_zero_bubble():
-    """plan_batch's default pick ranks by realized bubble: it returns
-    interleaved when a divisor v exists, else plain 1F1B — never
-    zero-bubble-h1 (which only runs when pinned)."""
+def test_auto_pick_capability_aware_zero_bubble(monkeypatch):
+    """plan_batch's default pick ranks by the realized executor bubble,
+    which is backend-capability-aware: with the split backward compiled
+    (SPLIT_BWD_REALIZED, the default) zero-bubble-h1 can win the default
+    pick outright; with the capability monkeypatched off (an executor
+    whose backward stays the fused autodiff transpose) ZB-H1 collapses to
+    1F1B's bubble and must never be auto-picked — the pre-split behavior,
+    kept as a regression."""
+    import repro.core.schedule as sched_mod
     cm = _cm()
+    # 2048-token chunks: hand-off cost makes interleaving's extra ring
+    # trips pricier than ZB-H1's realized (d_p-1)(t_f + t_b - t_w) ramp
     plan = plan_batch(cm, [2048] * 8, PlannerConfig(bucket_rounding=64))
-    assert (plan.schedule, plan.v_stages) == ("interleaved-1f1b", 2)
-    # explicit v_stages=1 is a pin, not auto: no interleaved candidates
+    assert (plan.schedule, plan.v_stages) == ("zero-bubble-h1", 1)
+    # v_stages=1 pin keeps only v=1 backends; ZB-H1 beats gpipe on the
+    # realized bubble now that the W-drain exists in the HLO
     plan1 = plan_batch(cm, [2048] * 8,
                        PlannerConfig(bucket_rounding=64, v_stages=1))
-    assert plan1.schedule == "gpipe-1f1b" and plan1.v_stages == 1
+    assert plan1.schedule == "zero-bubble-h1" and plan1.v_stages == 1
     # explicit v_stages>1 without a schedule implies interleaving at that
     # exact v — never a silent fallback to a v=1 backend
     plan2 = plan_batch(cm, [2048] * 8,
                        PlannerConfig(bucket_rounding=64, v_stages=2))
     assert (plan2.schedule, plan2.v_stages) == ("interleaved-1f1b", 2)
+
+    # capability off: realized ZB == 1F1B, never auto-picked
+    monkeypatch.setattr(sched_mod, "SPLIT_BWD_REALIZED", False)
+    plan = plan_batch(cm, [2048] * 8, PlannerConfig(bucket_rounding=64))
+    assert (plan.schedule, plan.v_stages) == ("interleaved-1f1b", 2)
+    plan1 = plan_batch(cm, [2048] * 8,
+                       PlannerConfig(bucket_rounding=64, v_stages=1))
+    assert plan1.schedule == "gpipe-1f1b" and plan1.v_stages == 1
+
+
+def test_ranking_flips_to_zero_bubble_when_t_w_positive():
+    """Regression for the planner bugfix: rank_schedule(realized=True)
+    used to price ZB-H1's fill at zero (realized == 1F1B), so ZB-H1 could
+    only ever win by tiebreak — which it lost to gpipe. With the compiled
+    split, any t_w > 0 must flip the v=1 ranking to ZB-H1."""
+    from repro.core.schedule import rank_schedule
+    g = get_schedule("gpipe-1f1b")
+    z = get_schedule("zero-bubble-h1")
+    n, d_p, t_f, t_b = 8, 4, 1.0, 2.0
+    # t_w == 0: nothing to drain, realized bubbles tie, tiebreak -> gpipe
+    assert rank_schedule(z, n, d_p, t_f, t_b, t_w=0.0) > \
+        rank_schedule(g, n, d_p, t_f, t_b, t_w=0.0)
+    # any positive weight-grad share: ZB-H1 wins the realized ranking
+    for t_w in (0.1, 0.5, 1.0):
+        assert rank_schedule(z, n, d_p, t_f, t_b, t_w=t_w) < \
+            rank_schedule(g, n, d_p, t_f, t_b, t_w=t_w)
+    # capability off: back to the tie (ZB realized == 1F1B) -> gpipe
+    assert z.realized_bubble_time(n, d_p, t_f, t_b, t_w=1.0,
+                                  split_realized=False) == \
+        g.realized_bubble_time(n, d_p, t_f, t_b)
+    # realized sits between the model's ideal and plain 1F1B, converging
+    # to the model as t_w -> 0 (the long-context regime)
+    t_w = 0.5
+    assert z.bubble_time(n, d_p, t_f, t_b, t_w) < \
+        z.realized_bubble_time(n, d_p, t_f, t_b, t_w) < \
+        g.bubble_time(n, d_p, t_f, t_b)
+
+
+def test_drain_and_total_ticks():
+    """split_bwd backends append one W-drain tick per (item, virtual
+    stage); fused backends drain nothing."""
+    z = get_schedule("zero-bubble-h1")
+    g = get_schedule("gpipe-1f1b")
+    i2 = get_schedule("interleaved-1f1b", 2)
+    for n, d_p in GRID:
+        assert z.drain_ticks(n, d_p) == n
+        assert z.total_ticks(n, d_p) == z.scan_ticks(n, d_p) + n
+        assert g.drain_ticks(n, d_p) == 0
+        assert g.total_ticks(n, d_p) == g.scan_ticks(n, d_p)
+        assert i2.drain_ticks(n, d_p) == 0
+    assert z.drain_ticks(0, 4) == 0
 
 
 # ---------------------------------------------------------------------------
