@@ -22,7 +22,6 @@ chunk (containing the tail) last within its sequence, batched chunks after.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 

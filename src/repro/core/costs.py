@@ -30,11 +30,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .plan import Chunk, ChunkKind, ClusterSpec, Coefficients, ModelSpec
+from .plan import Chunk, ClusterSpec, Coefficients, ModelSpec
 
 __all__ = ["CostModel", "fit_coefficients", "analytic_coefficients"]
 

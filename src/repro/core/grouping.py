@@ -20,10 +20,10 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .checkpointing import CkptSolution, solve_checkpointing, stage_roles
+from .checkpointing import solve_checkpointing, stage_roles
 from .chunking import ChunkingResult
 from .costs import CostModel
-from .plan import Chunk, ChunkKind, PipelinePlan
+from .plan import Chunk, PipelinePlan
 from .schedule import PipelineSimulator, backward_order
 
 __all__ = ["group_sequences", "GroupingResult"]

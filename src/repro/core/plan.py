@@ -16,10 +16,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import json
-import math
 from dataclasses import dataclass, field
-from typing import (Any, Dict, Iterable, List, NamedTuple, Optional, Sequence,
-                    Tuple)
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 __all__ = [
     "BucketKey",
@@ -417,6 +415,14 @@ class BucketKey(NamedTuple):
     ckpt: str           # canonical remat-policy digest ("uN" uniform depth
                         # N; "v<sha12>" a per-(stage, chunk) vector) — plans
                         # with different remat never alias one executable
+    split_bwd: bool = False   # RESOLVED zero-bubble B/W split: "auto"
+                        # resolves to the schedule backend's capability,
+                        # so auto and an explicit matching force share
+                        # one bucket (identical HLO) while a true
+                        # override gets its own executable
+    dtype: str = "bfloat16"   # compute dtype baked into the step — a
+                        # float32 (--reduced) and a bf16 run must never
+                        # alias one executable
 
 
 @dataclass
@@ -513,10 +519,12 @@ class ExecutionPlan:
                 "v" + hashlib.sha256(blob).hexdigest()[:12])
 
     def bucket_key(self, d_s: int, *, chunk_rounding: int = 8,
-                   cap_quantum: int = 0) -> BucketKey:
+                   cap_quantum: int = 0, split_bwd: Any = "auto",
+                   dtype: str = "bfloat16") -> BucketKey:
         """The compiled-executable bucket this plan lands in:
         :class:`BucketKey` ``(schedule, v_stages, n_chunks, cap, ctx_cap,
-        l_ckpt, ckpt)`` — access fields by name, not position.
+        l_ckpt, ckpt, split_bwd, dtype)`` — access fields by name, not
+        position.
 
         The schedule backend leads the key: tick count, stream routing and
         layer stacking are all schedule-shaped, so two plans that agree on
@@ -534,6 +542,15 @@ class ExecutionPlan:
         varying chunk capacities, so a coarser quantum trades masked
         padding tokens for executable reuse (benchmarks/run.py's
         ``cache_bucket_reuse`` measures the curve).
+
+        ``split_bwd`` / ``dtype`` mirror the executor knobs of the same
+        names (launch/train.py ``--split-bwd`` / compute dtype). Both
+        change the compiled HLO without changing the geometry, so both
+        are key fields — the lint pass ``plan-bucket-key`` enforces that
+        every such axis stays visible here. ``split_bwd`` accepts the
+        tri-state ``"auto"``/``"on"``/``"off"`` (or a bool) and stores
+        the RESOLVED bool: "auto" on zero-bubble-h1 and a forced "on"
+        compile the same program and share one bucket.
         """
         chunks = [c for p in self.pipelines for c in p.chunks]
         n = -(-len(chunks) // chunk_rounding) * chunk_rounding
@@ -548,9 +565,24 @@ class ExecutionPlan:
         # bucket: two plans agreeing on geometry but not on remat would
         # otherwise warm-hit a wrong-remat executable
         l_max, _, digest = self.ckpt_policy(n)
+        if isinstance(split_bwd, str):
+            if split_bwd == "auto":
+                # lazy import: core/schedule.py imports this module at
+                # load time, so the resolution direction must defer
+                from .schedule import get_schedule
+                split = get_schedule(self.schedule, self.v_stages).split_bwd
+            elif split_bwd in ("on", "off"):
+                split = split_bwd == "on"
+            else:
+                raise ValueError(
+                    f"split_bwd must be 'auto'/'on'/'off' or a bool, "
+                    f"got {split_bwd!r}")
+        else:
+            split = bool(split_bwd)
         return BucketKey(schedule=self.schedule, v_stages=self.v_stages,
                          n_chunks=n, cap=cap, ctx_cap=ctx_cap,
-                         l_ckpt=l_max, ckpt=digest)
+                         l_ckpt=l_max, ckpt=digest, split_bwd=split,
+                         dtype=str(dtype))
 
     def to_json(self) -> Dict[str, Any]:
         return {

@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .chunking import ChunkingResult, chunk_sequences
 from .costs import CostModel
 from .grouping import GroupingResult, group_sequences
-from .plan import ClusterSpec, ExecutionPlan, ModelSpec
+from .plan import ExecutionPlan
 from .schedule import build_schedule, choose_schedule
 
 __all__ = ["plan_batch", "PlannerConfig"]

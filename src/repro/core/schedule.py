@@ -32,14 +32,12 @@ the ``f2b`` map (slices reversed within each sequence).
 
 from __future__ import annotations
 
-import heapq
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence, Set,
                     Tuple)
 
 from .costs import CostModel
-from .plan import Chunk, ChunkKind, Tick, TickOp
+from .plan import Chunk, Tick, TickOp
 
 __all__ = [
     "ScheduleSpec",
@@ -47,6 +45,7 @@ __all__ = [
     "available_schedules",
     "get_schedule",
     "register_schedule",
+    "stream_perm",
     "simulate_occupancy",
     "simulate_schedule",
     "candidate_schedules",
@@ -310,6 +309,22 @@ def _mk_zb_h1(v: int) -> ScheduleSpec:
 register_schedule("gpipe-1f1b", _mk_gpipe)
 register_schedule("interleaved-1f1b", _mk_interleaved)
 register_schedule("zero-bubble-h1", _mk_zb_h1)
+
+
+def stream_perm(d_p: int, *, ring: bool = False) -> List[Tuple[int, int]]:
+    """(src, dst) pairs of the stage hand-off ppermute: every stream
+    moves stage ``p -> p + 1``; ``ring=True`` closes the loop
+    (``d_p - 1 -> 0``) for interleaved virtual-stage routing.
+
+    This is the single definition both the executor
+    (``runtime/executor.ppermute_streams``) and the plan lint pass
+    (``lint/plan_checks``: ``plan-ppermute-ring``) consume, so the
+    audited permutation is by construction the one that runs."""
+    if d_p <= 1:
+        return []
+    if ring:
+        return [(i, (i + 1) % d_p) for i in range(d_p)]
+    return [(i, i + 1) for i in range(d_p - 1)]
 
 
 @dataclass

@@ -18,11 +18,11 @@ Conventions the executor depends on:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core.plan import Chunk, ChunkKind, ExecutionPlan
+from repro.core.plan import Chunk, ExecutionPlan
 
 __all__ = ["ChunkBatch", "materialize_plan", "materialize_chunks"]
 

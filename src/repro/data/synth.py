@@ -10,7 +10,7 @@ fraction of max-length sequences models LLaMA-3-style long-context mixing
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import numpy as np
 

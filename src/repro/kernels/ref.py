@@ -19,7 +19,6 @@ Packed-varlen mask rule (shared by every implementation):
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -94,13 +93,15 @@ def blocked_flash_attention(q, k, v, seg_q, seg_kv, pos_q, pos_kv, *,
     sb = seg_kv.reshape(nb, block_kv)
     pb = pos_kv.reshape(nb, block_kv)
 
-    qf = q.astype(jnp.float32)
     window = jnp.asarray(window)
 
     def body(carry, blk):
         acc, m_run, l_run = carry
         kk, vv, sseg, ppos = blk
-        s = jnp.einsum("thd,shd->hts", qf, kk.astype(jnp.float32)) * scale
+        # QK in the input dtype with f32 accumulation: bf16 products are
+        # exact in f32, and the matmul reads half the HBM of upcast inputs
+        s = jnp.einsum("thd,shd->hts", q, kk,
+                       preferred_element_type=jnp.float32) * scale
         msk = _mask(seg_q, sseg, pos_q, ppos, causal, window)
         s = jnp.where(msk[None], s, NEG_INF)
         m_new = jnp.maximum(m_run, s.max(axis=-1))
@@ -155,13 +156,14 @@ def streaming_cross_entropy(hidden, w_vocab, targets, valid, *,
             [w_vocab, jnp.zeros((pad, D), w_vocab.dtype)])
     nb = w_vocab.shape[0] // block_v
     wb = w_vocab.reshape(nb, block_v, D)
-    hf = hidden.astype(jnp.float32)
     tgt = targets.astype(jnp.int32)
 
     def body(carry, inp):
         m_run, l_run, t_run = carry
         w, bidx = inp
-        logits = jnp.einsum("td,vd->tv", hf, w.astype(jnp.float32))
+        # logits in f32 via accumulation dtype, operands stay bf16
+        logits = jnp.einsum("td,vd->tv", hidden, w,
+                            preferred_element_type=jnp.float32)
         vocab_ids = bidx * block_v + jnp.arange(block_v)
         live = vocab_ids[None, :] < V
         logits = jnp.where(live, logits, NEG_INF)
@@ -206,14 +208,15 @@ def streaming_ce_stats(hidden, w_shard, local_targets, *,
         w_shard = jnp.concatenate([w_shard, jnp.zeros((pad, D), w_shard.dtype)])
     nb = w_shard.shape[0] // block_v
     wb = w_shard.reshape(nb, block_v, D)
-    hf = hidden.astype(jnp.float32)
     tgt_ids = local_targets.astype(jnp.int32)
     v_hi = Vs if vocab_true is None else vocab_true
 
     def body(carry, inp):
         m_run, l_run, t_run = carry
         w, bidx = inp
-        logits = jnp.einsum("td,vd->tv", hf, w.astype(jnp.float32))
+        # logits in f32 via accumulation dtype, operands stay bf16
+        logits = jnp.einsum("td,vd->tv", hidden, w,
+                            preferred_element_type=jnp.float32)
         ids = bidx * block_v + jnp.arange(block_v)
         live = (ids[None, :] < Vs) & \
             ((global_offset + ids)[None, :] < v_hi)

@@ -441,8 +441,20 @@ def main():
     ap.add_argument("--cache-dir", default="",
                     help="persistent compile-cache directory shared across "
                          "sweep runs (warm-starts recompiled cells)")
+    ap.add_argument("--lint", default="off",
+                    choices=["off", "warn", "error"],
+                    help="program auditor on each cell's cold compile "
+                         "(HLO text tier). Default off: auditing re-"
+                         "renders the 256+-device HLO text per cell; "
+                         "the offline `python -m repro.lint` CLI audits "
+                         "the same programs with full jaxpr visibility")
     args = ap.parse_args()
 
+    if args.lint != "off":
+        from repro.launch.mesh import latency_hiding_active
+        from repro.lint import make_cache_lint
+        _CELL_CACHE.lint = make_cache_lint(
+            args.lint, log=print, latency_hiding=latency_hiding_active())
     if args.cache_dir:
         attach_cell_store(args.cache_dir)
     out_dir = Path(args.out)

@@ -65,6 +65,16 @@ def configure_latency_hiding(*, enable: Optional[bool] = None) -> bool:
     return True
 
 
+def latency_hiding_active() -> bool:
+    """True when the latency-hiding scheduler flag is in ``XLA_FLAGS``.
+
+    Used by the program auditor: blocking collectives are only a hazard
+    when the run claims to overlap them.
+    """
+    return ("--xla_gpu_enable_latency_hiding_scheduler"
+            in os.environ.get("XLA_FLAGS", ""))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -77,6 +77,11 @@ def main():
     ap.add_argument("--verify", type=int, default=0,
                     help="cross-check the first N requests' output ids "
                          "against the one-shot reference path")
+    ap.add_argument("--lint", default="warn",
+                    choices=["off", "warn", "error"],
+                    help="program auditor on the engine's cold compile: "
+                         "'warn' logs findings, 'error' aborts before a "
+                         "hazardous executable enters the cache")
     args = ap.parse_args()
 
     import os
@@ -124,7 +129,12 @@ def main():
         gc_report = store.gc(
             max_age_s=args.gc_max_age_s or None,
             max_bytes=args.gc_max_bytes or None)
-    cache = CompileCache(name="serve-engine", log=print, store=store)
+    from repro.launch.mesh import latency_hiding_active
+    from repro.lint import make_cache_lint
+    cache = CompileCache(name="serve-engine", log=print, store=store,
+                         lint=make_cache_lint(
+                             args.lint, log=print,
+                             latency_hiding=latency_hiding_active()))
 
     econf = EngineConfig(
         n_items=args.items, cap_t=args.cap_t, n_slots=args.slots,

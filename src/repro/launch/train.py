@@ -67,6 +67,10 @@ class TrainLoopConfig:
     # (split for zero-bubble-h1, fused otherwise), "on"/"off" force it.
     # Parity is guaranteed either way (tests/test_split_backward.py).
     split_bwd: str = "auto"
+    # program auditor (repro.lint): "warn" logs findings from the plan
+    # and program passes on every cold compile, "error" aborts before a
+    # hazardous executable enters the cache, "off" skips the audit.
+    lint: str = "warn"
 
 
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
@@ -77,6 +81,8 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     from repro.core import ClusterSpec, CostModel, PlannerConfig, plan_batch
     from repro.data import materialize_plan, sample_corpus_batch
     from repro.ft import StragglerMonitor, replan_costmodel
+    from repro.launch.mesh import latency_hiding_active
+    from repro.lint import make_cache_lint, run_plan_checks
     from repro.optim import init_opt_state
     from repro.runtime import (CacheStore, CompileCache, TrainStepBuilder,
                                batch_struct, make_geometry,
@@ -112,7 +118,15 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         # survive (load() refreshes their mtime)
         gc_report = store.gc(max_age_s=loop.cache_gc_age_s,
                              max_bytes=loop.cache_gc_bytes)
-    step_cache = CompileCache(name="train-step", log=log, store=store)
+    # program auditor: every cold compile is linted once; the build
+    # closure stashes the Lowered's StableHLO so the donation pass can see
+    # buffer-donor markers the compiled HLO no longer carries
+    lint_stash = {}
+    lint_hook = make_cache_lint(loop.lint, log=log,
+                                latency_hiding=latency_hiding_active(),
+                                stash=lint_stash)
+    step_cache = CompileCache(name="train-step", log=log, store=store,
+                              lint=lint_hook)
     params = opt = None
     start_step = 0
 
@@ -138,11 +152,11 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         return plan, corpus
 
     def get_step(plan):
-        key = plan.bucket_key(d_s)
-        # a forced B/W split changes the compiled HLO without changing the
-        # bucket geometry — give it its own cache identity. "auto" keeps
-        # the historical key so persisted stores stay warm.
-        ckey = key if loop.split_bwd == "auto" else (key, loop.split_bwd)
+        # split_bwd and dtype are key fields now (plan-bucket-key lint
+        # proves every axis that changes the lowering changes the key), so
+        # a forced B/W split no longer needs an out-of-band cache identity
+        key = plan.bucket_key(d_s, split_bwd=loop.split_bwd,
+                              dtype=loop.compute_dtype)
         # the builder is cheap host-side state (geometry + specs); only
         # the compiled executable is cached — and, via the store, persisted.
         # ckpt_policy() canonicalizes the remat vector (padded to the
@@ -160,14 +174,31 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         builder = TrainStepBuilder(cfg_arch, mesh, geom, param_dtype=dtype)
 
         def build():
+            # plan invariants are audited before the (expensive) compile:
+            # a schedule whose ticks don't cover every (item, v) slot or a
+            # ckpt table that disagrees with the geometry never lowers
+            if lint_hook is not None:
+                prep = run_plan_checks(
+                    plan, d_s, d_p,
+                    key_kwargs={"split_bwd": loop.split_bwd,
+                                "dtype": loop.compute_dtype})
+                for f in prep.findings:
+                    log(f"[lint] {f}")
+                step_cache.stats.lint_findings += len(prep.findings)
+                step_cache.stats.lint_errors += len(prep.errors)
+                if loop.lint == "error":
+                    prep.raise_if_findings()
             # AOT lower+compile against abstract shapes: the resulting
             # jax.stages.Compiled is what serialize_executable can persist
             params_shape = builder.abstract_params()
             opt_shape = jax.eval_shape(init_opt_state, params_shape)
             bstruct = batch_struct(geom, n_pods)
-            return builder.build(params_shape).lower(
-                params_shape, opt_shape, None, bstruct).compile()
-        return builder, step_cache.get(ckey, build)
+            lowered = builder.build(params_shape).lower(
+                params_shape, opt_shape, None, bstruct)
+            if lint_hook is not None:
+                lint_stash["stablehlo"] = lowered.as_text()
+            return lowered.compile()
+        return builder, step_cache.get(key, build)
 
     # --- bootstrap: plan step 0 to learn the first bucket ---
     plan, corpus = plan_for(0)
@@ -327,6 +358,12 @@ def main():
                     help="do not prepend the async-collective / "
                          "latency-hiding-scheduler XLA flags (also: set "
                          "REPRO_NO_LATENCY_HIDING=1)")
+    ap.add_argument("--lint", default="warn",
+                    choices=["off", "warn", "error"],
+                    help="program auditor on cold compiles: 'warn' logs "
+                         "findings (and counts them in --stats-json), "
+                         "'error' aborts before a hazardous executable "
+                         "enters the compile cache, 'off' skips the audit")
     args = ap.parse_args()
 
     import os
@@ -359,7 +396,8 @@ def main():
                            else "bfloat16",
                            schedule=args.schedule, v_stages=args.v_stages,
                            ckpt_policy=args.ckpt_policy,
-                           split_bwd=args.split_bwd)
+                           split_bwd=args.split_bwd,
+                           lint=args.lint)
     _, _, history = train(cfg, mesh, loop)
     if args.stats_json:
         import json

@@ -1,0 +1,36 @@
+"""Pipeline program auditor: static plan/schedule invariants + lowered-
+program hazard checks, wired into the compile path and available as an
+offline CLI (``python -m repro.lint``).
+
+Two audit surfaces (see ``runtime/README.md``, "Program auditor"):
+
+* **plan passes** (jax-free, run before compile): schedule tick
+  coverage, ckpt-table geometry, ppermute ring validity, bucket-key
+  completeness.
+* **program passes** (run on each cold compile's jaxpr/StableHLO/HLO):
+  f64 leakage, bf16->f32 upcast matmuls, dropped/missing donation,
+  host callbacks, plan data baked as constants, blocking collectives
+  under latency hiding.
+
+Entry points: :func:`run_plan_checks`, :func:`run_program_checks`,
+:func:`make_cache_lint` (the ``CompileCache(lint=...)`` hook factory).
+"""
+
+from .hlo_checks import stablehlo_donors
+from .plan_checks import (BUCKET_KEY_AXES, PlanContext,
+                          check_bucket_key_completeness,
+                          check_ppermute_perm, run_plan_checks)
+from .registry import LintPass, available_passes, get_pass, register_pass
+from .report import (LINT_MODES, SEV_ERROR, SEV_WARNING, Finding,
+                     LintError, LintReport)
+from .runner import ProgramArtifacts, make_cache_lint, run_program_checks
+
+__all__ = [
+    "Finding", "LintReport", "LintError", "LINT_MODES",
+    "SEV_ERROR", "SEV_WARNING",
+    "LintPass", "register_pass", "get_pass", "available_passes",
+    "PlanContext", "run_plan_checks", "check_ppermute_perm",
+    "check_bucket_key_completeness", "BUCKET_KEY_AXES",
+    "ProgramArtifacts", "run_program_checks", "make_cache_lint",
+    "stablehlo_donors",
+]

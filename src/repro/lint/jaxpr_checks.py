@@ -1,0 +1,269 @@
+"""Jaxpr-level lint passes: hazards visible in the traced program.
+
+These passes walk a ``ClosedJaxpr`` (the output of ``jax.make_jaxpr`` or
+``jax.jit(f).trace(...).jaxpr``) recursively through every sub-jaxpr
+(scan bodies, cond branches, remat/pjit calls, custom_vjp rules). They
+run in the offline CLI audit and in golden-fixture tests; the compile
+path gets the text-based equivalents in ``hlo_checks.py`` because a
+``jax.stages.Compiled`` no longer carries its jaxpr.
+
+Passes registered here:
+
+* ``program-f64``            — float64/complex128 values anywhere in a
+  program that is supposed to run the bf16 compute path (weak-type
+  promotion or a stray ``astype``); doubles memory traffic and silently
+  changes numerics across backends.
+* ``program-f32-upcast``     — a ``dot_general`` whose operands are ALL
+  produced by bf16 -> f32 ``convert_element_type``: the matmul runs in
+  f32 instead of bf16-with-f32-accumulation
+  (``preferred_element_type``), paying ~2x HBM and FLOP cost for
+  bit-identical output. Operands that are natively f32 (e.g. a softmax
+  over f32 statistics) do NOT trip this — only the convert-everything
+  pattern does.
+* ``program-host-callback``  — host callbacks baked into the step
+  (``pure_callback``/``io_callback``/debug prints): a host round-trip
+  per tick inside the lockstep scan, and a recompile hazard because the
+  callback identity is part of the executable.
+* ``program-baked-constant`` — large constants captured by the trace
+  (plan tables, token buffers): plan *data* must flow in as arguments or
+  every new plan recompiles; threshold ``ProgramArtifacts
+  .const_threshold`` elements.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Tuple
+
+from .registry import register_pass
+from .report import SEV_ERROR, SEV_WARNING, LintReport
+
+__all__ = ["iter_jaxprs", "iter_eqns"]
+
+MAX_FINDINGS_PER_PASS = 8
+
+# primitives a value passes through without changing its dtype — the
+# upcast pass looks through these when resolving an operand's origin
+_PASSTHROUGH = frozenset({
+    "transpose", "reshape", "broadcast_in_dim", "squeeze", "rev",
+    "slice", "dynamic_slice", "stop_gradient", "copy",
+})
+
+_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "outside_call",
+    "host_callback_call", "callback",
+})
+
+
+def _as_jaxpr(obj: Any):
+    """Unwrap ClosedJaxpr -> Jaxpr; return None for anything else."""
+    if hasattr(obj, "jaxpr") and hasattr(obj, "consts"):   # ClosedJaxpr
+        return obj.jaxpr
+    if hasattr(obj, "eqns") and hasattr(obj, "invars"):    # Jaxpr
+        return obj
+    return None
+
+
+def iter_jaxprs(jaxpr) -> Iterator[Any]:
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through eqn params
+    (scan/while bodies, cond branches, pjit/remat/custom_vjp calls)."""
+    root = _as_jaxpr(jaxpr)
+    if root is None:
+        return
+    stack = [root]
+    seen = set()
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:
+            continue
+        seen.add(id(j))
+        yield j
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                for cand in (v if isinstance(v, (list, tuple)) else (v,)):
+                    sub = _as_jaxpr(cand)
+                    if sub is not None:
+                        stack.append(sub)
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    for j in iter_jaxprs(jaxpr):
+        yield from j.eqns
+
+
+def _dtype_name(aval) -> str:
+    return str(getattr(aval, "dtype", ""))
+
+
+def _truncate(report: LintReport, pass_name: str, severity: str,
+              messages: List[Tuple[str, str]]) -> None:
+    for msg, where in messages[:MAX_FINDINGS_PER_PASS]:
+        report.add(pass_name, severity, msg, where=where)
+    extra = len(messages) - MAX_FINDINGS_PER_PASS
+    if extra > 0:
+        report.add(pass_name, severity,
+                   f"... and {extra} more occurrence(s) of the same "
+                   f"hazard", where="truncated")
+
+
+# ---------------------------------------------------------------------------
+
+
+@register_pass("program-f64", kind="program", needs=("jaxpr", "hlo"),
+               doc="float64/complex128 values in the bf16 compute path")
+def _f64(ctx, report: LintReport) -> None:
+    hits: List[Tuple[str, str]] = []
+    if getattr(ctx, "jaxpr", None) is not None:
+        for eqn in iter_eqns(ctx.jaxpr):
+            for var in eqn.outvars:
+                name = _dtype_name(getattr(var, "aval", None))
+                if name in ("float64", "complex128"):
+                    hits.append((
+                        f"{eqn.primitive.name} produces {name} "
+                        f"{getattr(var.aval, 'shape', ())} — double-"
+                        f"precision inside the bf16 compute path",
+                        eqn.primitive.name))
+                    break  # one finding per eqn
+    elif getattr(ctx, "hlo", None):
+        n = ctx.hlo.count("f64[") + ctx.hlo.count("c128[")
+        if n:
+            hits.append((f"{n} f64/c128-typed op(s) in compiled HLO — "
+                         f"double-precision inside the bf16 compute "
+                         f"path", "hlo-text"))
+    _truncate(report, "program-f64", SEV_ERROR, hits)
+
+
+# sub-jaxpr-carrying primitives whose eqn.invars align positionally with
+# the sub-jaxpr's invars, so operand origins can be propagated across the
+# scope boundary (scan: consts + carry + xs; the xs slice preserves
+# dtype, which is all the upcast analysis needs)
+_ALIGNED_CALLS = frozenset({
+    "scan", "pjit", "remat", "checkpoint", "closed_call", "core_call",
+    "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+    "shard_map",
+})
+
+
+def _is_bf16_upcast(eqn) -> bool:
+    return (eqn is not None
+            and eqn.primitive.name == "convert_element_type"
+            and _dtype_name(eqn.invars[0].aval) == "bfloat16"
+            and _dtype_name(eqn.outvars[0].aval) == "float32")
+
+
+@register_pass("program-f32-upcast", kind="program", needs=("jaxpr",),
+               doc="dot_general whose operands are all bf16->f32 converts "
+                   "(use preferred_element_type instead)")
+def _f32_upcast(ctx, report: LintReport) -> None:
+    if getattr(ctx, "jaxpr", None) is None:
+        return
+    hits: List[Tuple[str, str]] = []
+
+    def visit(j, invar_origins: Dict[Any, Any]) -> None:
+        produced = {v: eqn for eqn in j.eqns for v in eqn.outvars}
+        cache: Dict[Any, Any] = dict(invar_origins)
+
+        def origin_of(var):
+            # resolve to the defining eqn, looking through
+            # dtype-preserving ops and (via invar_origins) scope
+            # boundaries — the streaming-CE pattern converts OUTSIDE the
+            # vocab-block scan whose body runs the dot
+            chain = []
+            for _ in range(32):
+                if hasattr(var, "val"):   # Literal: unhashable, no producer
+                    return None
+                if var in cache:
+                    break
+                eqn = produced.get(var)
+                if eqn is not None and eqn.primitive.name in _PASSTHROUGH:
+                    chain.append(var)
+                    var = eqn.invars[0]
+                    continue
+                cache[var] = eqn
+                break
+            result = cache.get(var)
+            for v in chain:
+                cache[v] = result
+            return result
+
+        for eqn in j.eqns:
+            if eqn.primitive.name == "dot_general":
+                operands = eqn.invars[:2]
+                if (len(operands) == 2
+                        and all(_dtype_name(getattr(op, "aval", None))
+                                == "float32" for op in operands)
+                        and all(_is_bf16_upcast(origin_of(op))
+                                for op in operands)):
+                    shapes = " x ".join(
+                        str(tuple(getattr(op.aval, "shape", ())))
+                        for op in operands)
+                    hits.append((
+                        f"dot_general {shapes} runs in f32 but every "
+                        f"operand is a bf16->f32 convert — drop the "
+                        f"converts and pass preferred_element_type="
+                        f"float32 (bf16 products are exact in f32; ~2x "
+                        f"less matmul HBM traffic)", "dot_general"))
+            aligned = eqn.primitive.name in _ALIGNED_CALLS
+            for v in eqn.params.values():
+                for cand in (v if isinstance(v, (list, tuple)) else (v,)):
+                    sub = _as_jaxpr(cand)
+                    if sub is None:
+                        continue
+                    sub_origins: Dict[Any, Any] = {}
+                    if aligned:
+                        for outer, inner in zip(eqn.invars, sub.invars):
+                            if not hasattr(inner, "val"):
+                                sub_origins[inner] = origin_of(outer)
+                    visit(sub, sub_origins)
+
+    root = _as_jaxpr(ctx.jaxpr)
+    if root is not None:
+        visit(root, {})
+    _truncate(report, "program-f32-upcast", SEV_WARNING, hits)
+
+
+@register_pass("program-host-callback", kind="program",
+               needs=("jaxpr", "hlo"),
+               doc="host callbacks baked into the compiled step")
+def _host_callback(ctx, report: LintReport) -> None:
+    hits: List[Tuple[str, str]] = []
+    if getattr(ctx, "jaxpr", None) is not None:
+        for eqn in iter_eqns(ctx.jaxpr):
+            name = eqn.primitive.name
+            if name in _CALLBACK_PRIMS or name.endswith("_callback"):
+                hits.append((
+                    f"host callback {name!r} inside the compiled step: a "
+                    f"host round-trip per invocation (per TICK if inside "
+                    f"the scan) and a recompile hazard — move it out of "
+                    f"the traced program", name))
+    elif getattr(ctx, "hlo", None):
+        for marker in ("custom-call target=\"xla_python_cpu_callback",
+                       "custom-call target=\"xla_ffi_python_cpu_callback",
+                       "custom_call_target=\"xla_python"):
+            if marker in ctx.hlo:
+                hits.append(("host-callback custom-call in compiled HLO "
+                             "— a host round-trip inside the step",
+                             "hlo-text"))
+                break
+    _truncate(report, "program-host-callback", SEV_WARNING, hits)
+
+
+@register_pass("program-baked-constant", kind="program", needs=("jaxpr",),
+               doc="large constants captured by the trace (plan data "
+                   "belongs in arguments, not the executable)")
+def _baked_constant(ctx, report: LintReport) -> None:
+    jaxpr = getattr(ctx, "jaxpr", None)
+    if jaxpr is None or not hasattr(jaxpr, "consts"):
+        return
+    threshold = int(getattr(ctx, "const_threshold", 1 << 16))
+    hits: List[Tuple[str, str]] = []
+    for const in jaxpr.consts:
+        size = getattr(const, "size", 0)
+        if size >= threshold:
+            hits.append((
+                f"constant of {size} elements "
+                f"({getattr(const, 'dtype', '?')}"
+                f"{tuple(getattr(const, 'shape', ()))}) baked into the "
+                f"program — plan-sized data as a constant forces a "
+                f"recompile per plan; pass it as an argument",
+                "consts"))
+    _truncate(report, "program-baked-constant", SEV_WARNING, hits)

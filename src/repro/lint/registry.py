@@ -1,0 +1,76 @@
+"""Pass registry for the program auditor.
+
+Passes come in two kinds, mirroring the two audit surfaces:
+
+* ``plan`` passes run on solver output (:class:`repro.core.plan
+  .ExecutionPlan` + mesh geometry) *before* anything is traced — they are
+  jax-free and cheap enough to run on every plan.
+* ``program`` passes run on the artifacts of one cold compile — the
+  jaxpr, the StableHLO text, the post-compile HLO text, whichever the
+  call site could produce. A pass declares which artifacts it can use
+  via ``needs`` and is skipped (not failed) when none is available, so
+  the same registry serves the inline compile-path hook (HLO text only)
+  and the offline CLI (full trace -> jaxpr + both texts).
+
+Adding a pass::
+
+    @register_pass("program-my-check", kind="program", needs=("hlo",),
+                   doc="one-line description for the CLI listing")
+    def _my_check(ctx, report):
+        ...
+        report.add("program-my-check", SEV_ERROR, "what went wrong")
+
+The pass function mutates the report; it must not raise for findings
+(raising is reserved for broken inputs, which the runner converts into a
+``lint-internal`` error finding rather than crashing the host).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["LintPass", "register_pass", "get_pass", "available_passes"]
+
+PASS_KINDS = ("plan", "program")
+
+
+@dataclass(frozen=True)
+class LintPass:
+    name: str
+    kind: str                   # "plan" | "program"
+    needs: Tuple[str, ...]      # artifacts the pass can consume
+    doc: str
+    fn: Callable
+
+
+_PASSES: Dict[str, LintPass] = {}
+
+
+def register_pass(name: str, *, kind: str, needs: Tuple[str, ...] = (),
+                  doc: str = "") -> Callable:
+    if kind not in PASS_KINDS:
+        raise ValueError(f"kind must be one of {PASS_KINDS}, got {kind!r}")
+
+    def deco(fn: Callable) -> Callable:
+        if name in _PASSES:
+            raise ValueError(f"lint pass {name!r} already registered")
+        _PASSES[name] = LintPass(name=name, kind=kind,
+                                 needs=tuple(needs),
+                                 doc=doc or (fn.__doc__ or "").strip(),
+                                 fn=fn)
+        return fn
+    return deco
+
+
+def get_pass(name: str) -> LintPass:
+    try:
+        return _PASSES[name]
+    except KeyError:
+        raise ValueError(f"unknown lint pass {name!r}; known: "
+                         f"{sorted(_PASSES)}")
+
+
+def available_passes(kind: Optional[str] = None) -> Tuple[LintPass, ...]:
+    return tuple(p for p in _PASSES.values()
+                 if kind is None or p.kind == kind)

@@ -8,8 +8,8 @@ modality frontends).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 from repro.core.plan import ModelSpec
 

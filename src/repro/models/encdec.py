@@ -15,7 +15,7 @@ full EPP with a self-attention context carry like any decoder LM.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.kernels.ref import blocked_flash_attention, streaming_cross_entropy
 
 from .attention import (attention_block, init_attention,
-                        make_local_attention_policy, project_qkv)
+                        make_local_attention_policy)
 from .config import ArchConfig
 from .layers import dense_init, embed_init, rms_norm, swiglu_apply, swiglu_init
 from .model import LayerCtx, kv_buffer_shape

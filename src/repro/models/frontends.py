@@ -9,7 +9,7 @@ backbone needs (M-RoPE 3D ids for qwen2-vl, frame positions for seamless).
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

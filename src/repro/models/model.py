@@ -18,15 +18,12 @@ exact, and differentiable — the oracle for executor-equivalence tests.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import (blocked_flash_attention,
-                               flash_attention_reference,
-                               streaming_cross_entropy)
+from repro.kernels.ref import streaming_cross_entropy
 
 from .attention import (attention_block, init_attention,
                         make_local_attention_policy)

@@ -12,7 +12,7 @@ gradient (error feedback keeps the scheme convergent; Karimireddy et al.).
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

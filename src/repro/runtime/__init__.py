@@ -22,9 +22,19 @@ _LAZY = {
     "prepare_params": ".train_step",
 }
 
+# experimental submodules: sequence-parallel attention policies (sp) and
+# expert-parallel MoE dispatch (ep) are consumed internally by the
+# pipeline builders; their function signatures are NOT stable API and
+# they are deliberately absent from __all__. Import them explicitly as
+# repro.runtime.sp / repro.runtime.ep if you accept the churn.
+EXPERIMENTAL_SUBMODULES = ("sp", "ep")
+
 
 def __getattr__(name):
     if name in _LAZY:
         import importlib
         return getattr(importlib.import_module(_LAZY[name], __name__), name)
+    if name in EXPERIMENTAL_SUBMODULES:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

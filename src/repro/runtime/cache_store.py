@@ -360,6 +360,57 @@ class CacheStore:
     def size_bytes(self) -> int:
         return sum(p.stat().st_size for p in self.dir.glob("*.bin"))
 
+    def audit(self) -> List[Dict[str, Any]]:
+        """Offline integrity/metadata audit of every on-disk entry — the
+        substrate ``python -m repro.lint --cache-dir`` reports over.
+
+        Unlike :meth:`load` this is fingerprint-blind and jax-free: it
+        never deserializes an executable, only cross-checks each sidecar
+        against its payload. Per entry: the sidecar's recorded
+        ``payload_sha``/``payload_bytes`` against the actual ``.bin``
+        bytes, required metadata fields, and whether the entry matches
+        THIS store's fingerprint (a stale entry is not a finding — gc
+        handles age — but a corrupt or truncated one is)."""
+        required = ("fingerprint", "key", "payload_sha", "payload_bytes")
+        out: List[Dict[str, Any]] = []
+        for meta_path in sorted(self.dir.glob("*.meta.json")):
+            bin_path = meta_path.with_name(
+                meta_path.name[:-len(".meta.json")] + ".bin")
+            row: Dict[str, Any] = {"entry": meta_path.name, "problems": []}
+            try:
+                meta = json.loads(meta_path.read_text())
+            except (OSError, json.JSONDecodeError) as e:
+                row["problems"].append(f"unreadable sidecar: {e}")
+                out.append(row)
+                continue
+            row["key"] = meta.get("key", "?")
+            for f in required:
+                if f not in meta:
+                    row["problems"].append(f"sidecar missing field {f!r}")
+            if not bin_path.exists():
+                row["problems"].append("orphan sidecar (no payload .bin)")
+                out.append(row)
+                continue
+            try:
+                blob = bin_path.read_bytes()
+            except OSError as e:
+                row["problems"].append(f"unreadable payload: {e}")
+                out.append(row)
+                continue
+            if "payload_bytes" in meta and len(blob) != meta["payload_bytes"]:
+                row["problems"].append(
+                    f"payload is {len(blob)} bytes, sidecar recorded "
+                    f"{meta['payload_bytes']} (truncated write?)")
+            if "payload_sha" in meta:
+                sha = hashlib.sha256(blob).hexdigest()
+                if sha != meta["payload_sha"]:
+                    row["problems"].append(
+                        "payload sha256 mismatch (corrupt entry; load() "
+                        "would skip it)")
+            row["stale"] = meta.get("fingerprint") != self.fingerprint
+            out.append(row)
+        return out
+
     def report(self) -> Dict[str, Any]:
         """The block the train log / benchmarks JSON surface per store."""
         entries = self.entries()

@@ -66,6 +66,10 @@ class CacheStats:
     recompiles: int = 0         # misses on keys that were compiled before
     buckets_live: int = 0       # executables currently resident
     compile_seconds: float = 0.0
+    # program-auditor results over this cache's cold compiles (the
+    # CompileCache(lint=...) hook; see src/repro/lint/)
+    lint_findings: int = 0      # total findings across audited compiles
+    lint_errors: int = 0        # error-severity subset
     # per-key REBUILD cost of the RESIDENT buckets (pruned on eviction):
     # compile time for cold-compiled buckets, store reload time for
     # warm-loaded ones — the weight cost-aware eviction minimizes losing
@@ -95,6 +99,8 @@ class CacheStats:
             "cleared": self.cleared,
             "hit_rate": round(self.hit_rate, 4),
             "compile_seconds": round(self.compile_seconds, 3),
+            "lint_findings": self.lint_findings,
+            "lint_errors": self.lint_errors,
         }
 
     def summary(self) -> str:
@@ -103,7 +109,8 @@ class CacheStats:
                 f"hit_rate={self.hit_rate:.2%} "
                 f"evictions={self.evictions} "
                 f"recompiles={self.recompiles} "
-                f"compile_s={self.compile_seconds:.2f}")
+                f"compile_s={self.compile_seconds:.2f} "
+                f"lint_findings={self.lint_findings}")
 
 
 class CompileCache:
@@ -118,6 +125,15 @@ class CompileCache:
     ``store`` (optional) is a persistent backend with ``load(key) ->
     value | None`` and ``save(key, value, compile_seconds=...)`` — see
     ``runtime/cache_store.CacheStore``.
+
+    ``lint`` (optional) is the program-auditor hook (``repro.lint
+    .make_cache_lint``): called as ``lint(key, value)`` on every COLD
+    compile, before the artifact enters the cache or the store. It
+    returns a report whose finding counts land in ``CacheStats``
+    (``lint_findings``/``lint_errors``) — or raises ``LintError`` in
+    ``--lint error`` mode, in which case the hazardous executable is
+    neither cached nor persisted. Hits and store warm-starts are never
+    re-audited: a bucket is linted once, when it is born.
     """
 
     _COMPILED_KEYS_CAP = 65536
@@ -126,7 +142,8 @@ class CompileCache:
                  capacity: Optional[int] = None,
                  log: Optional[Callable[[str], None]] = None,
                  store: Optional[Any] = None,
-                 eviction: str = "lru"):
+                 eviction: str = "lru",
+                 lint: Optional[Callable[[Hashable, Any], Any]] = None):
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if eviction not in ("lru", "cost"):
@@ -137,6 +154,7 @@ class CompileCache:
         self.log = log
         self.store = store
         self.eviction = eviction
+        self.lint = lint
         self.stats = CacheStats()
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._compiled_keys: Set[Hashable] = set()
@@ -220,6 +238,18 @@ class CompileCache:
         t0 = time.perf_counter()
         value = build()
         dt = time.perf_counter() - t0
+        if self.lint is not None:
+            # audit the newborn program BEFORE it becomes reusable state:
+            # in error mode the hook raises and the executable is neither
+            # cached nor persisted
+            report = self.lint(key, value)
+            if report is not None:
+                n = len(report.findings)
+                self.stats.lint_findings += n
+                self.stats.lint_errors += len(report.errors)
+                if n and self.log:
+                    self.log(f"[compile:{self.name}] lint: "
+                             f"{report.summary()}")
         self.stats.compile_seconds += dt
         self.stats.compile_seconds_per_key[repr(key)] = round(dt, 3)
         self._entries[key] = value
@@ -296,6 +326,8 @@ def global_cache_stats() -> Dict[str, Any]:
         agg.recompiles += c.stats.recompiles
         agg.buckets_live += c.stats.buckets_live
         agg.compile_seconds += c.stats.compile_seconds
+        agg.lint_findings += c.stats.lint_findings
+        agg.lint_errors += c.stats.lint_errors
         d = c.stats.as_dict()
         if c.store is not None and hasattr(c.store, "report"):
             d["store"] = c.store.report()

@@ -125,10 +125,8 @@ def ppermute_streams(streams, data_axis: str, d_p: int, *,
     """
     if d_p <= 1:
         return streams
-    if ring:
-        perm = [(i, (i + 1) % d_p) for i in range(d_p)]
-    else:
-        perm = [(i, i + 1) for i in range(d_p - 1)]
+    from repro.core.schedule import stream_perm
+    perm = stream_perm(d_p, ring=ring)
     return jax.tree.map(
         lambda x: jax.lax.ppermute(x, data_axis, perm), streams)
 

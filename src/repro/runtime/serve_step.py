@@ -19,10 +19,9 @@ Decode maps the assignment's decode_32k / long_500k shapes:
 
 from __future__ import annotations
 
-import functools
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +32,6 @@ from repro.models import DecoderLM
 from repro.models.attention import mla_expand_ctx, project_qkv
 from repro.models.config import ArchConfig, LayerKind
 from repro.models.layers import rms_norm, swiglu_apply
-from repro.models.moe import moe_apply_dense
 from repro.models.ssm import dt_rank_of
 
 from . import executor, sp

@@ -18,11 +18,11 @@ Layout (mesh axes: optional "pod" (DP), "data" (pipeline stages), "model"
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["EP_PATH_RE", "stack_stages", "stack_grouped_stages",

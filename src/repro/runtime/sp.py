@@ -17,7 +17,6 @@ reconstruct whatever global view their algorithm needs:
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -27,8 +26,9 @@ from repro.kernels.ref import blocked_flash_attention, streaming_ce_stats
 from repro.models.config import ArchConfig
 
 __all__ = ["make_ulysses_policy", "make_allgather_kv_policy",
-           "sharded_embed", "sharded_ce", "make_sp_ssm_scan",
-           "make_sp_conv_tail_exchange", "choose_policy"]
+           "sharded_embed", "sharded_ce", "sharded_greedy",
+           "make_sp_ssm_scan", "make_sp_conv_tail_exchange",
+           "choose_policy"]
 
 
 def choose_policy(cfg: ArchConfig, d_s: int) -> str:
@@ -194,12 +194,13 @@ def sharded_greedy(hidden_local: jnp.ndarray, w_local: jnp.ndarray,
         w = jnp.concatenate([w, jnp.zeros((pad, D), w.dtype)])
     nb = w.shape[0] // block_v
     wb = w.reshape(nb, block_v, D)
-    hf = hidden_local.astype(jnp.float32)
 
     def body(carry, inp):
         best_v, best_i = carry
         wt, bidx = inp
-        logits = jnp.einsum("td,vd->tv", hf, wt.astype(jnp.float32))
+        # logits in f32 via accumulation dtype, operands stay bf16
+        logits = jnp.einsum("td,vd->tv", hidden_local, wt,
+                            preferred_element_type=jnp.float32)
         ids = bidx * block_v + jnp.arange(block_v)
         live = (ids[None, :] < vs) & ((off + ids)[None, :] < v_hi)
         logits = jnp.where(live, logits, -jnp.inf)
@@ -253,7 +254,6 @@ def make_sp_ssm_scan(axis: str, d_s: int, local_scan) -> Callable:
         # global final state = state leaving the last shard
         a_all = summ[:, 0]
         h_all = summ[:, 1]
-        gfinal = h0
         def fold2(carry, i):
             return a_all[i] * carry + h_all[i], None
         gfinal, _ = jax.lax.scan(fold2, h0, jnp.arange(d_s))

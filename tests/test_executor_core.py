@@ -579,7 +579,8 @@ def test_bucket_key_named_fields():
     key = plan.bucket_key(4)
     assert isinstance(key, BucketKey)
     assert BucketKey._fields == ("schedule", "v_stages", "n_chunks",
-                                 "cap", "ctx_cap", "l_ckpt", "ckpt")
+                                 "cap", "ctx_cap", "l_ckpt", "ckpt",
+                                 "split_bwd", "dtype")
     # named access agrees with the documented order (and stays a tuple:
     # hashable, comparable, usable as a cache key)
     assert key.schedule == key[0] == plan.schedule
@@ -587,6 +588,13 @@ def test_bucket_key_named_fields():
     assert key.n_chunks == key[2] and key.cap == key[3]
     assert key.ctx_cap == key[4] and key.l_ckpt == key[5]
     assert key.ckpt == key[6] == f"u{plan.uniform_ckpt()}"
+    # the lowering-relevant plan axes added by the auditor PR: split_bwd
+    # resolves "auto" through the schedule backend, dtype is a string
+    assert isinstance(key.split_bwd, bool)
+    assert key.dtype == "bfloat16"
+    forced = plan.bucket_key(4, split_bwd="on", dtype="float32")
+    assert forced.split_bwd is True and forced.dtype == "float32"
+    assert forced != key or (key.split_bwd and key.dtype == "float32")
     assert key.n_chunks % 8 == 0 and key.cap % 4 == 0
     assert hash(key) == hash(tuple(key))
 

@@ -388,8 +388,12 @@ def test_bucket_key_distinguishes_schedules():
             bucket_rounding=64, schedule=name, v_stages=v))
         keys[(name, v)] = plan.bucket_key(4)
     assert len(set(keys.values())) == 3
-    # geometry tail of the key is schedule-independent
-    assert len({k[2:] for k in keys.values()}) == 1
+    # geometry fields of the key are schedule-independent (split_bwd is
+    # NOT: zero-bubble-h1 resolves "auto" to a split backward)
+    assert len({(k.n_chunks, k.cap, k.ctx_cap, k.l_ckpt, k.ckpt, k.dtype)
+                for k in keys.values()}) == 1
+    assert keys[("zero-bubble-h1", 0)].split_bwd is True
+    assert keys[("gpipe-1f1b", 0)].split_bwd is False
     cache = CompileCache(name="sched-buckets")
     builds = []
     for key in keys.values():
