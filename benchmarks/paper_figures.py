@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs.llama_paper import (llama_7b, llama_13b, llama_30b,
                                        paper_cluster)
-from repro.core import (ClusterSpec, CostModel, PipelineSimulator,
+from repro.core import (ClusterSpec, CostModel, ModelSpec, PipelineSimulator,
                         PlannerConfig, backward_order, chunk_sequences,
                         fit_coefficients, plan_batch)
 from repro.data import sample_lengths
@@ -362,6 +362,83 @@ def ckpt_policy_compare(batch=64, ctx=65536, seed=0,
                      "peak_mem_gb": round(peak / 1e9, 3),
                      "fits_memory": bool(peak <= cap_bytes),
                      "bucket_digest": digests[policy]})
+    return rows
+
+
+def sp_axis(quick=False) -> List[Dict]:
+    """The planner's sequence-parallel axis: (policy, d_s_eff) chosen per
+    length mix (the PR-8 tentpole's measurable knob).
+
+    Two synthetic mixes on the paper cluster bracket the tradeoff:
+
+    * ``short_uniform`` — many tiny sequences. Full SP sharding starves
+      the MXU (tokens/device under the half-saturation point), so the
+      planner backs the degree off (replicating chunk compute across the
+      idle model-axis devices is cheaper than running them all
+      unsaturated);
+    * ``long_skewed`` — a few 32K-128K documents. Quadratic attention
+      dominates and the full axis wins.
+
+    Each row reports the chosen ``(policy, d_s_eff)``, the ranked sweep
+    the planner recorded (``meta["sp_sweep"]``), and the bucket-key SP
+    fields; the ``check`` row asserts the two mixes land on DIFFERENT SP
+    points with different compile-cache identities, and that a pinned
+    ``--sp-policy`` plan gets its own bucket (CI gates on it).
+
+    Runs on a mid-size proxy model with a d_p=4 x d_s=4 mesh rather than
+    the A800 paper cluster: at 13B-scale flops the paper cluster's
+    intra-node bandwidth makes full sharding win for every mix (chunks
+    pack sequences, so even all-256-token batches fill chunks past the
+    half-saturation point per shard) — the degree tradeoff only opens up
+    where per-shard chunk slices drop below saturation.
+    """
+    spec = ModelSpec(name="sp-proxy", n_layers=8, d_model=512, n_heads=8,
+                     n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000)
+    cm = CostModel(spec, ClusterSpec(d_p=4, d_s=4))
+    d_s = cm.cluster.d_s
+    mixes = {
+        "short_uniform": [256] * (64 if quick else 256),
+        "long_skewed": ([131072, 65536, 32768] + [8192] * 8)
+        * (1 if quick else 4),
+    }
+    rows = []
+    chosen = {}
+    keys = {}
+    for name, lens in mixes.items():
+        t0 = time.perf_counter()
+        plan = plan_batch(cm, lens, PlannerConfig())
+        key = plan.bucket_key(d_s)
+        chosen[name] = (plan.sp.policy, plan.sp.d_s_eff)
+        keys[name] = key
+        rows.append({
+            "figure": "sp_axis", "mix": name,
+            "tokens": sum(lens), "n_seqs": len(lens),
+            "sp_policy": plan.sp.policy, "d_s_eff": plan.sp.d_s_eff,
+            "est_time_s": round(plan.est_total_time, 3),
+            "solve_s": round(time.perf_counter() - t0, 2),
+            "bucket_sp": [key.sp_policy, key.d_s_eff],
+            "sweep": {k: (round(v, 3) if v < float("inf") else "inf")
+                      for k, v in plan.meta["sp_sweep"].items()},
+        })
+    pinned = plan_batch(cm, mixes["short_uniform"],
+                        PlannerConfig(sp_policy="allgather_kv",
+                                      sp_degree=d_s))
+    rows.append({
+        "figure": "sp_axis", "mix": "short_uniform+pin",
+        "sp_policy": pinned.sp.policy, "d_s_eff": pinned.sp.d_s_eff,
+        "est_time_s": round(pinned.est_total_time, 3),
+        "pin_distinct_bucket":
+            bool(pinned.bucket_key(d_s) != keys["short_uniform"]),
+    })
+    rows.append({
+        "figure": "sp_axis", "mix": "check",
+        "short": list(chosen["short_uniform"]),
+        "long": list(chosen["long_skewed"]),
+        "distinct_sp_points":
+            bool(chosen["short_uniform"] != chosen["long_skewed"]),
+        "distinct_buckets":
+            bool(keys["short_uniform"] != keys["long_skewed"]),
+    })
     return rows
 
 

@@ -40,6 +40,7 @@ def main() -> None:
         "ckpt_policy": lambda: pf.ckpt_policy_compare(
             batch=32 if args.quick else 64),
         "pipeline_bubble": pf.pipeline_bubble,
+        "sp_axis": lambda: pf.sp_axis(quick=args.quick),
         "serving_engine": lambda: __import__(
             "benchmarks.serving", fromlist=["serving_engine"]
         ).serving_engine(quick=args.quick),
@@ -140,6 +141,13 @@ def _derived(name: str, rows) -> str:
                 f"vs1f1b={fb['realized_bubble']:.2f};"
                 f"zb_over_model={zb['realized_over_model']:.3f};"
                 f"zb_speedup={zb['speedup_vs_1f1b']:.3f}x")
+    if name.startswith("sp_axis"):
+        by = {r["mix"]: r for r in rows}
+        chk = by["check"]
+        return (f"short={chk['short'][0]}@{chk['short'][1]};"
+                f"long={chk['long'][0]}@{chk['long'][1]};"
+                f"distinct={chk['distinct_sp_points']};"
+                f"pin_bucket={by['short_uniform+pin']['pin_distinct_bucket']}")
     if name.startswith("cache"):
         summaries = [r for r in rows
                      if str(r.get("step", "")).startswith("summary")]

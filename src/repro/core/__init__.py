@@ -7,6 +7,8 @@ overlaps with training (the paper's disaggregated solver/executor split).
 from .plan import (BucketKey, Chunk, ChunkKind, ClusterSpec, Coefficients,
                    ExecutionPlan, ModelSpec, PipelinePlan, SequenceInfo,
                    Slice, Tick, TickOp)
+from .sp import (SPConfig, SP_POLICIES, choose_sp_policy, legal_degrees,
+                 sp_candidates, sp_legal)
 from .costs import CostModel, analytic_coefficients, fit_coefficients
 from .chunking import ChunkingResult, chunk_sequences, seq_workload
 from .ilp import IlpResult, greedy_cover, simplex_lp, solve_cover_ilp
@@ -24,6 +26,8 @@ __all__ = [
     "BucketKey", "Chunk", "ChunkKind", "ClusterSpec", "Coefficients",
     "ExecutionPlan",
     "ModelSpec", "PipelinePlan", "SequenceInfo", "Slice", "Tick", "TickOp",
+    "SPConfig", "SP_POLICIES", "choose_sp_policy", "legal_degrees",
+    "sp_candidates", "sp_legal",
     "CostModel", "analytic_coefficients", "fit_coefficients",
     "ChunkingResult", "chunk_sequences", "seq_workload",
     "IlpResult", "greedy_cover", "simplex_lp", "solve_cover_ilp",

@@ -35,6 +35,7 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .plan import Chunk, ClusterSpec, Coefficients, ModelSpec
+from .sp import choose_sp_policy, sp_legal
 
 __all__ = ["CostModel", "fit_coefficients", "analytic_coefficients"]
 
@@ -182,7 +183,12 @@ class CostModel:
     model: ModelSpec
     cluster: ClusterSpec
     coeffs: Optional[Coefficients] = None
-    sp_policy: str = "auto"          # "ulysses" | "allgather_kv" | "auto"
+    sp_policy: str = "auto"          # "none" | "ulysses" | "allgather_kv" | "auto"
+    # effective SP degree d_s_eff (sub-groups of the model axis); 0 => the
+    # full d_s. Tokens shard 1/d_s_eff per device and compute replicates
+    # d_s/d_s_eff times — the planner trades that waste against the
+    # saturation gain (utilization) and the per-layer collective cost.
+    sp_degree: int = 0
     # straggler mitigation: per-stage slowdown multipliers (>= 1.0)
     stage_slowdowns: Optional[Sequence[float]] = None
     # Fig. 1(a) utilization model: tokens/SP-rank at which the MXU pipeline
@@ -195,11 +201,25 @@ class CostModel:
         if self.coeffs is None:
             self.coeffs = analytic_coefficients(self.model, self.cluster,
                                                 self.ce_mode)
+        if self.sp_degree == 0:
+            self.sp_degree = self.cluster.d_s
+        if (self.sp_degree < 1 or self.cluster.d_s % self.sp_degree
+                or self.sp_degree > self.cluster.d_s):
+            raise ValueError(
+                f"sp_degree={self.sp_degree} must divide the model axis "
+                f"d_s={self.cluster.d_s}")
+        # ONE policy heuristic for cost model and runtime alike:
+        # core/sp.choose_sp_policy (tests/test_sp_policy.py pins that the
+        # two consumers can never diverge again)
         if self.sp_policy == "auto":
-            ok = (not self.model.attn_free
-                  and self.model.n_heads % self.cluster.d_s == 0
-                  and self.model.n_kv_heads % self.cluster.d_s == 0)
-            self.sp_policy = "ulysses" if ok else "allgather_kv"
+            self.sp_policy = choose_sp_policy(self.model, self.sp_degree)
+        if not sp_legal(self.model, self.sp_policy, self.sp_degree):
+            raise ValueError(
+                f"SP policy {self.sp_policy!r} is illegal for "
+                f"{self.model.name} at d_s_eff={self.sp_degree} "
+                f"(heads {self.model.n_heads}/{self.model.n_kv_heads}, "
+                f"mla={self.model.kv_lora_rank > 0}, "
+                f"attn_free={self.model.attn_free})")
         if self.stage_slowdowns is not None:
             if len(self.stage_slowdowns) != self.cluster.d_p:
                 raise ValueError("stage_slowdowns must have d_p entries")
@@ -210,6 +230,13 @@ class CostModel:
             return 1.0
         return float(self.stage_slowdowns[p - 1])
 
+    @property
+    def sp_replication(self) -> int:
+        """Chunk-compute replication across the model axis: every SP
+        sub-group of ``d_s_eff`` devices holds the whole chunk, so
+        ``r = d_s / d_s_eff`` replicas do identical work."""
+        return self.cluster.d_s // self.sp_degree
+
     # ------------------------------------------------------------------
     # Eq. 1: computation time.
     # ------------------------------------------------------------------
@@ -217,8 +244,11 @@ class CostModel:
         """Fig. 1(a)'s computational-intensity degradation: with few tokens
         per SP rank, the MXU pipeline cannot be kept full. Saturation curve
         ``u = t / (t + t_half)`` with t = tokens per device along the SP axis,
-        t_half = half-saturation point (~a few MXU tiles)."""
-        tpd = chunk.tokens / self.cluster.d_s
+        t_half = half-saturation point (~a few MXU tiles). A reduced
+        ``d_s_eff`` leaves MORE tokens per device, so short chunks regain
+        saturation — the gain the planner weighs against the replicated
+        compute (:attr:`sp_replication`)."""
+        tpd = chunk.tokens / self.sp_degree
         return tpd / (tpd + self.sat_half)
 
     def t_comp(self, chunk: Chunk, *, per_stage: bool = False,
@@ -230,7 +260,10 @@ class CostModel:
         for s in chunk.short_slices:
             quad += float(s.length) ** 2
             lin += float(s.length)
-        t = (co.alpha1 * 0.5 * quad + co.alpha2 * lin) / cl.n_devices
+        # compute parallelism along the sequence axis is d_s_eff, not d_s:
+        # the r = d_s/d_s_eff replicas repeat the same work
+        t = (co.alpha1 * 0.5 * quad + co.alpha2 * lin) \
+            * self.sp_replication / cl.n_devices
         t /= self.utilization(chunk)
         t += co.beta1 / cl.d_p
         t *= self._slowdown(stage)
@@ -261,24 +294,29 @@ class CostModel:
         memory price is the replication factor in :meth:`m_dkv`).
         """
         m, co, cl = self.model, self.coeffs, self.cluster
-        if m.attn_free or cl.d_s == 1:
+        d = self.sp_degree
+        if m.attn_free or self.sp_policy == "none" or d <= 1:
             return 0.0
         toks = float(chunk.tokens)
         e = m.bytes_per_act
         layers = m.n_layers if not per_stage else max(1, m.n_layers // cl.d_p)
         if self.sp_policy == "ulysses":
-            vol = e * 2 * (m.d_head_total + m.d_kv) * toks / cl.d_s
+            vol = e * 2 * (m.d_head_total + m.d_kv) * toks / d
             t_layer = vol / co.a2a_bw + 4 * co.a2a_latency
         else:
-            vol = e * 2 * m.d_kv * toks * (cl.d_s - 1) / cl.d_s
+            vol = e * 2 * m.d_kv * toks * (d - 1) / d
             t_layer = vol / co.ag_bw + co.a2a_latency
         return layers * t_layer
 
     @property
     def kv_replication(self) -> int:
-        """Context-KV replication across the SP axis: 1 for ulysses
-        (head-sharded context), d_s for allgather_kv (replicated context)."""
-        return 1 if self.sp_policy == "ulysses" else self.cluster.d_s
+        """Context-KV replication across the FULL model axis (relative to
+        a 1/d_s shard): ulysses keeps context head-sharded over its
+        sub-group (``d_s/d_s_eff`` replicas); allgather_kv and "none"
+        hold the whole context per device (``d_s``)."""
+        if self.sp_policy == "ulysses":
+            return self.cluster.d_s // self.sp_degree
+        return self.cluster.d_s
 
     # ------------------------------------------------------------------
     # Eq. 4: total chunk time.
@@ -311,7 +349,7 @@ class CostModel:
         simulator charges it per stage crossing; the schedule picker
         charges interleaving's extra ring trips with it."""
         m, cl = self.model, self.cluster
-        vol = m.bytes_per_act * m.d_model * chunk.tokens / cl.d_s
+        vol = m.bytes_per_act * m.d_model * chunk.tokens / self.sp_degree
         return vol / cl.ici_bw + 1e-6
 
     # ------------------------------------------------------------------
@@ -354,18 +392,21 @@ class CostModel:
         return (repl * 2.0 * e * m.n_layers * m.d_kv / cl.n_devices) * chunk.tokens
 
     def m_ckpt(self, chunk: Chunk, l_ckpt: int) -> float:
-        """Checkpoint storage (Eq. 9): layer inputs + un-freeable KV."""
+        """Checkpoint storage (Eq. 9): layer inputs + un-freeable KV.
+        Layer inputs are token-sharded at ``d_s_eff`` (the replication
+        factor re-inflates the per-1/d_s normalization)."""
         m, cl = self.model, self.cluster
         e = m.bytes_per_act
         kv = 2 * m.d_kv * self.kv_replication if chunk.has_dependents else 0
-        return (e * (m.d_model + kv) * l_ckpt / cl.d_s) * chunk.tokens
+        d_model = m.d_model * self.sp_replication
+        return (e * (d_model + kv) * l_ckpt / cl.d_s) * chunk.tokens
 
     def m_act(self, stage: int, chunk: Chunk, l_ckpt: int = 0) -> float:
         """Eq. 10. ``stage`` is 1-based (p == d_p carries the logits)."""
         m, co, cl = self.model, self.coeffs, self.cluster
         toks = chunk.tokens
         live_frac = max(0.0, (m.n_layers - l_ckpt * cl.d_p) / m.n_layers)
-        a = live_frac * co.m_token / cl.n_devices
+        a = live_frac * co.m_token * self.sp_replication / cl.n_devices
         if stage == cl.d_p:
             a += co.m_logits / cl.d_s
         return self.m_dkv(chunk) + self.m_ckpt(chunk, l_ckpt) + a * toks
@@ -401,8 +442,9 @@ class CostModel:
             raise ValueError(
                 f"model states ({worst_ms/1e9:.1f} GB) exceed capacity "
                 f"({cl.capacity_bytes/1e9:.1f} GB) — increase d_p or d_s")
-        per_token = (co.m_token / cl.n_devices
-                     + 2.0 * m.bytes_per_act * m.n_layers * m.d_kv / cl.n_devices
+        per_token = (co.m_token * self.sp_replication / cl.n_devices
+                     + (2.0 * m.bytes_per_act * m.n_layers * m.d_kv
+                        * self.kv_replication / cl.n_devices)
                      + co.m_logits / cl.d_s / cl.d_p)
         return int(free / per_token)
 
@@ -457,7 +499,16 @@ class CostModel:
 
     def with_slowdowns(self, slowdowns: Sequence[float]) -> "CostModel":
         return CostModel(self.model, self.cluster, self.coeffs,
-                         sp_policy=self.sp_policy, stage_slowdowns=list(slowdowns),
+                         sp_policy=self.sp_policy, sp_degree=self.sp_degree,
+                         stage_slowdowns=list(slowdowns),
+                         sat_half=self.sat_half, ce_mode=self.ce_mode)
+
+    def with_sp(self, policy: str, degree: int) -> "CostModel":
+        """This model re-costed at another point of the SP axis (shares
+        the analytic coefficients) — the planner's sweep primitive."""
+        return CostModel(self.model, self.cluster, self.coeffs,
+                         sp_policy=policy, sp_degree=degree,
+                         stage_slowdowns=self.stage_slowdowns,
                          sat_half=self.sat_half, ce_mode=self.ce_mode)
 
 

@@ -19,6 +19,8 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
+from .sp import SPConfig
+
 __all__ = [
     "BucketKey",
     "ChunkKind",
@@ -30,6 +32,7 @@ __all__ = [
     "Coefficients",
     "PipelinePlan",
     "ExecutionPlan",
+    "SPConfig",
     "TickOp",
     "Tick",
 ]
@@ -423,6 +426,18 @@ class BucketKey(NamedTuple):
     dtype: str = "bfloat16"   # compute dtype baked into the step — a
                         # float32 (--reduced) and a bf16 run must never
                         # alias one executable
+    sp_policy: str = "auto"   # RESOLVED sequence-parallel policy (none /
+                        # ulysses / allgather_kv). "auto" only for legacy
+                        # plans that carry no SPConfig — those keep the
+                        # pre-SP-axis identity (runtime rederives the
+                        # policy at full degree)
+    d_s_eff: int = 0    # effective SP degree (sub-groups of the model
+                        # axis); 0 only for legacy sp-less plans, which
+                        # bucket_key() resolves to the full d_s. The
+                        # collective pattern AND the local token shapes
+                        # (cap // d_s_eff) are degree-shaped, so two
+                        # plans differing only here must never alias an
+                        # executable or a cache-store entry
 
 
 @dataclass
@@ -442,6 +457,12 @@ class ExecutionPlan:
     # per-pipeline preferences live on PipelinePlan.sched_backend)
     schedule: str = "gpipe-1f1b"
     v_stages: int = 1                  # virtual stages per device (interleaved)
+    # sequence-parallel axis: (policy, d_s_eff) chosen by the planner
+    # jointly with chunking/checkpointing (core/sp.py). None = legacy
+    # plan solved before the SP axis existed: bucket_key() emits the
+    # back-compatible ("auto", d_s) identity and the runtime rederives
+    # the policy at full degree.
+    sp: Optional[SPConfig] = None
     meta: Dict[str, Any] = field(default_factory=dict)
 
     @property
@@ -523,8 +544,8 @@ class ExecutionPlan:
                    dtype: str = "bfloat16") -> BucketKey:
         """The compiled-executable bucket this plan lands in:
         :class:`BucketKey` ``(schedule, v_stages, n_chunks, cap, ctx_cap,
-        l_ckpt, ckpt, split_bwd, dtype)`` — access fields by name, not
-        position.
+        l_ckpt, ckpt, split_bwd, dtype, sp_policy, d_s_eff)`` — access
+        fields by name, not position.
 
         The schedule backend leads the key: tick count, stream routing and
         layer stacking are all schedule-shaped, so two plans that agree on
@@ -579,10 +600,18 @@ class ExecutionPlan:
                     f"got {split_bwd!r}")
         else:
             split = bool(split_bwd)
+        # the SP axis is part of executable identity: the collective
+        # pattern (sub-group a2a vs KV all-gather vs none) and the local
+        # token shapes (cap // d_s_eff) are both policy/degree-shaped.
+        # Legacy sp-less plans keep the pre-axis ("auto", d_s) identity
+        # so existing cache-store entries stay warm.
+        sp_policy = self.sp.policy if self.sp is not None else "auto"
+        d_s_eff = self.sp.d_s_eff if self.sp is not None else d_s
         return BucketKey(schedule=self.schedule, v_stages=self.v_stages,
                          n_chunks=n, cap=cap, ctx_cap=ctx_cap,
                          l_ckpt=l_max, ckpt=digest, split_bwd=split,
-                         dtype=str(dtype))
+                         dtype=str(dtype), sp_policy=sp_policy,
+                         d_s_eff=d_s_eff)
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -596,6 +625,7 @@ class ExecutionPlan:
             "remat_mode": self.remat_mode,
             "schedule": self.schedule,
             "v_stages": self.v_stages,
+            "sp": self.sp.to_json() if self.sp is not None else None,
             "meta": self.meta,
         }
 
@@ -616,5 +646,6 @@ class ExecutionPlan:
             remat_mode=d.get("remat_mode", "uniform"),
             schedule=d.get("schedule", "gpipe-1f1b"),
             v_stages=d.get("v_stages", 1),
+            sp=SPConfig.from_json(d.get("sp")),
             meta=d.get("meta", {}),
         )

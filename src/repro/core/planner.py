@@ -27,6 +27,7 @@ from .costs import CostModel
 from .grouping import GroupingResult, group_sequences
 from .plan import ExecutionPlan
 from .schedule import build_schedule, choose_schedule
+from .sp import SPConfig, sp_candidates, sp_legal
 
 __all__ = ["plan_batch", "PlannerConfig"]
 
@@ -55,6 +56,13 @@ class PlannerConfig:
     # interleaved layer stacking bakes v into the parameter layout.
     schedule: Optional[str] = None
     v_stages: int = 0
+    # sequence-parallel axis: "auto" sweeps every legal (policy, d_s_eff)
+    # candidate (core/sp.sp_candidates) and solves the best-ranked one
+    # jointly with K / chunking / checkpointing; a policy name and/or a
+    # degree pins that coordinate. Like schedule pins, training runs keep
+    # these fixed across steps so one compiled step per bucket suffices.
+    sp_policy: str = "auto"           # "auto" | "none" | "ulysses" | ...
+    sp_degree: int = 0                # 0 = auto; else must divide d_s
 
 
 def _round_up(v: int, q: int) -> int:
@@ -86,10 +94,70 @@ def _quick_estimate(cm: CostModel, chunking: ChunkingResult) -> float:
     return per_stage + cm.delta_warmup(chunks)
 
 
-def plan_batch(cm: CostModel, lengths: Sequence[int],
-               cfg: Optional[PlannerConfig] = None) -> ExecutionPlan:
-    cfg = cfg or PlannerConfig()
-    t0 = time.perf_counter()
+def _sp_pins(cm: CostModel, cfg: PlannerConfig) -> List[SPConfig]:
+    """The SP points the solver may place this plan on, best-guess first.
+
+    With no pins this is every legal ``(policy, d_s_eff)`` pair for the
+    model at the mesh's ``d_s`` (``core/sp.sp_candidates``); a
+    ``cfg.sp_policy``/``cfg.sp_degree`` pin filters that set down (and a
+    fully-pinned illegal combination is an error, not a fallback)."""
+    d_s = cm.cluster.d_s
+    if cfg.sp_degree and d_s % cfg.sp_degree:
+        raise ValueError(f"sp_degree={cfg.sp_degree} does not divide the "
+                         f"model-axis size d_s={d_s}")
+    if cfg.sp_degree and cfg.sp_policy != "auto":
+        if not sp_legal(cm.model, cfg.sp_policy, cfg.sp_degree):
+            raise ValueError(
+                f"pinned sp_policy={cfg.sp_policy!r} is illegal at "
+                f"d_s_eff={cfg.sp_degree} for this model "
+                f"(heads={cm.model.n_heads}/{cm.model.n_kv_heads}, "
+                f"mla={cm.model.kv_lora_rank > 0}, "
+                f"attn_free={cm.model.attn_free})")
+        return [SPConfig(cfg.sp_policy, cfg.sp_degree)]
+    cands = sp_candidates(cm.model, d_s)
+    if cfg.sp_degree:
+        cands = [c for c in cands if c.d_s_eff == cfg.sp_degree]
+    if cfg.sp_policy != "auto":
+        cands = [c for c in cands if c.policy == cfg.sp_policy]
+    if not cands:
+        raise ValueError(
+            f"no legal SP candidate for pins (policy={cfg.sp_policy!r}, "
+            f"degree={cfg.sp_degree}) at d_s={d_s}")
+    return cands
+
+
+def _rank_sp(cm: CostModel, lengths: Sequence[int], cfg: PlannerConfig,
+             cands: List[SPConfig],
+             sweep: Dict[str, float]) -> List[Tuple[SPConfig, CostModel]]:
+    """Rank SP candidates by the cheap K-proxy at a single probe K.
+
+    The estimate sees everything that distinguishes the candidates: the
+    utilization gain of longer per-device shards, the ``sp_replication``
+    compute tax of sub-degrees, the 4×a2a vs KV-all-gather comm terms,
+    and — through ``token_capacity()`` — the memory pressure of KV
+    replication (tighter capacity → more, shorter chunks). Ties keep the
+    candidate order (higher degree first, default policy first)."""
+    k_probe = cfg.fixed_k if cfg.fixed_k is not None else cm.cluster.d_p
+    scored: List[Tuple[float, int, SPConfig, CostModel]] = []
+    for i, sp in enumerate(cands):
+        cm_c = cm.with_sp(sp.policy, sp.d_s_eff)
+        try:
+            est = _quick_estimate(
+                cm_c, chunk_sequences(cm_c, lengths, k_probe,
+                                      capacity=cfg.token_capacity))
+        except (ValueError, RuntimeError):
+            est = math.inf  # e.g. token_capacity() <= 0 under replication
+        sweep[f"{sp.policy}@{sp.d_s_eff}"] = est
+        scored.append((est, i, sp, cm_c))
+    scored.sort(key=lambda t: (t[0], t[1]))
+    return [(sp, cm_c) for _, _, sp, cm_c in scored]
+
+
+def _solve_k_sweep(cm: CostModel, lengths: Sequence[int], cfg: PlannerConfig
+                   ) -> Optional[Tuple[float, ChunkingResult, GroupingResult,
+                                       Dict[int, float]]]:
+    """The per-SP-point K sweep (Alg. 1 + grouping DP + ILP + simulation).
+    Returns ``None`` when no K is memory-feasible at this SP point."""
     d_p = cm.cluster.d_p
     k_max = cfg.k_max if cfg.k_max is not None else d_p + 4
     ks = ([cfg.fixed_k] if cfg.fixed_k is not None
@@ -137,14 +205,44 @@ def plan_batch(cm: CostModel, lengths: Sequence[int],
         if best is None or total < best[0]:
             best = (total, chunking, grouping)
     if best is None:
-        raise RuntimeError(
-            f"no feasible plan for any K in {ks}; lengths={list(lengths)[:8]}…")
+        return None
+    return (*best, tried)
 
-    total, chunking, grouping = best
+
+def plan_batch(cm: CostModel, lengths: Sequence[int],
+               cfg: Optional[PlannerConfig] = None) -> ExecutionPlan:
+    cfg = cfg or PlannerConfig()
+    t0 = time.perf_counter()
+    d_p = cm.cluster.d_p
+
+    # SP is a plan axis: rank the legal (policy, d_s_eff) candidates by
+    # the cheap proxy, then full-solve the best one — falling down the
+    # ranking only when a point is memory-infeasible at every K. The
+    # chosen CostModel (cm_c) is the one every downstream estimate,
+    # schedule pick, and ILP solve sees.
+    cands = _sp_pins(cm, cfg)
+    sp_sweep: Dict[str, float] = {}
+    if len(cands) == 1:
+        order = [(cands[0], cm.with_sp(cands[0].policy, cands[0].d_s_eff))]
+    else:
+        order = _rank_sp(cm, lengths, cfg, cands, sp_sweep)
+    solved = None
+    sp = cm_c = None
+    for sp, cm_c in order:
+        solved = _solve_k_sweep(cm_c, lengths, cfg)
+        if solved is not None:
+            break
+    if solved is None:
+        raise RuntimeError(
+            f"no feasible plan at any SP point in "
+            f"{[(c.policy, c.d_s_eff) for c in cands]}; "
+            f"lengths={list(lengths)[:8]}…")
+
+    total, chunking, grouping, tried = solved
     cap = _round_up(max(chunking.max_chunk_tokens, 1), cfg.bucket_rounding)
     for p in grouping.pipelines:
         p.schedule = build_schedule(len(p.chunks), d_p, p.n_split, p.f2b)
-    sched_name, v_stages = _pick_schedules(cm, grouping.pipelines, cfg)
+    sched_name, v_stages = _pick_schedules(cm_c, grouping.pipelines, cfg)
     plan = ExecutionPlan(
         pipelines=grouping.pipelines,
         sequences=chunking.sequences,
@@ -156,8 +254,10 @@ def plan_batch(cm: CostModel, lengths: Sequence[int],
         remat_mode=cfg.remat_mode,
         schedule=sched_name,
         v_stages=v_stages,
+        sp=sp,
         meta={"k_sweep": {str(k): v for k, v in tried.items()},
-              "sp_policy": cm.sp_policy},
+              "sp_policy": cm_c.sp_policy,
+              "sp_sweep": sp_sweep},
     )
     return plan
 

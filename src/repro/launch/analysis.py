@@ -68,7 +68,12 @@ def analytic_collectives(cfg, geom, kind: str) -> dict:
     out = {"ici_bytes": 0.0, "p2p_bytes": 0.0, "dcn_bytes": 0.0}
     if kind in ("train", "prefill"):
         n, cap = geom.n_chunks, geom.cap
-        cap_loc = cap // d_s
+        # plans may run SP below the mesh degree: attention collectives span
+        # d_eff-member sub-groups and compute replicates rep x (the batch
+        # still rests sharded over the full axis, so ZeRO volumes keep d_s)
+        d_eff = getattr(geom, "d_s_eff", 0) or d_s
+        rep = d_s // d_eff
+        cap_loc = cap // d_eff
         ticks = n + d_p - 1
         L_s = geom.layers_per_stage
         D = s.d_model
@@ -82,16 +87,20 @@ def analytic_collectives(cfg, geom, kind: str) -> dict:
             per_layer += zero_layer_vol
         if not s.attn_free:
             if geom.policy == "ulysses":
-                per_layer += e * 2 * (s.d_head_total + s.d_kv) * cap / d_s
-            else:
-                per_layer += e * 2 * s.d_kv * cap * (d_s - 1) / d_s
+                per_layer += e * 2 * (s.d_head_total + s.d_kv) * cap / d_eff
+            elif geom.policy == "allgather_kv":
+                per_layer += e * 2 * s.d_kv * cap * (d_eff - 1) / d_eff
+            # "none": attention is token-local, no SP collective
         if s.ssm_state:
-            per_layer += 4 * 2 * d_s * s.inner * s.ssm_state  # scan summaries
+            # scan summaries all-gather within the d_eff-member sub-group
+            per_layer += 4 * 2 * d_eff * s.inner * s.ssm_state
         if s.n_experts:
-            per_layer += e * 2 * cap * D * (d_s - 1) / d_s  # EP gather+scatter
+            # EP rides the full model axis on rep x replicated rows
+            per_layer += e * 2 * cap * rep * D * (d_s - 1) / d_s
         per_tick = L_s * per_layer
-        per_tick += e * cap * D * (d_s - 1) / d_s      # embed psum_scatter
-        per_tick += e * cap * D * (d_s - 1) / d_s      # CE hidden all-gather
+        # vocab-parallel embed/CE gather over the FULL axis on rep x rows
+        per_tick += e * cap * rep * D * (d_s - 1) / d_s  # embed psum_scatter
+        per_tick += e * cap * rep * D * (d_s - 1) / d_s  # CE hidden all-gather
         out["ici_bytes"] = ticks * per_tick
         out["p2p_bytes"] = ticks * e * cap_loc * D    # stage ppermute
         if kind == "train":

@@ -74,7 +74,8 @@ def attach_cell_store(cache_dir: str) -> None:
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
              remat_override=None, note: str = "",
              zero3_mode: str = "per_tick",
-             ckpt_policy: str = "stage-aware") -> dict:
+             ckpt_policy: str = "stage-aware",
+             sp_policy: str = "auto", sp_degree: int = 0) -> dict:
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
@@ -121,7 +122,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
         lengths = [shape.seq_len] * per_pod_batch
         remat_mode = ("stage_aware" if ckpt_policy == "stage-aware"
                       else "uniform")
-        plan = plan_batch(cm, lengths, PlannerConfig(remat_mode=remat_mode))
+        # prefill cells pin the full model axis: the token-sharded greedy
+        # fold assumes every device owns a distinct token shard, which
+        # sub-degree replication (d_s_eff < d_s) breaks — the planner's
+        # SP sweep only applies to train cells.
+        cell_sp_degree = d_s if shape.kind == "prefill" else sp_degree
+        plan = plan_batch(cm, lengths, PlannerConfig(remat_mode=remat_mode,
+                                                     sp_policy=sp_policy,
+                                                     sp_degree=cell_sp_degree))
         chunks = [c for p in plan.pipelines for c in p.chunks]
         cap = ((plan.chunk_capacity + d_s - 1) // d_s) * d_s
         max_ctx = max((c.context for c in chunks), default=0)
@@ -139,12 +147,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
                              zero3_mode=zero3_mode,
                              schedule=plan.schedule,
                              v_stages=plan.v_stages,
-                             ckpt_table=table)
+                             ckpt_table=table,
+                             sp_policy=(plan.sp.policy
+                                        if plan.sp is not None else None),
+                             sp_degree=(plan.sp.d_s_eff
+                                        if plan.sp is not None else 0))
         rec["plan"] = {"K": plan.k_split, "n_chunks": len(chunks),
                        "cap": cap, "ctx_cap": ctx_cap, "l_ckpt": l_ckpt,
                        "ckpt_policy": ckpt_policy, "ckpt_digest": digest,
                        "l_ckpt_stage": plan.ckpt_per_stage_max(),
                        "schedule": plan.schedule, "v_stages": plan.v_stages,
+                       "sp_policy": (plan.sp.policy
+                                     if plan.sp is not None else "auto"),
+                       "d_s_eff": (plan.sp.d_s_eff
+                                   if plan.sp is not None else d_s),
                        "pipelines": len(plan.pipelines),
                        "est_time_s": plan.est_total_time,
                        "solve_time_s": plan.solve_time}
@@ -243,7 +259,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     rec["geometry"] = {
         k: getattr(gg, k) for k in
         (("n_chunks", "cap", "ctx_cap", "l_ckpt", "layers_per_stage",
-          "policy", "zero3_mode") if kind in ("train", "prefill") else
+          "policy", "d_s_eff", "zero3_mode")
+         if kind in ("train", "prefill") else
          ("n_micro", "cache_len", "layers_per_stage"))}
     return rec
 
@@ -280,9 +297,12 @@ def _run_encdec_cell(rec, cfg, shape, mesh, per_pod_batch, t0,
     # placement, so restrict the schedule pick to single-virtual-stage
     # backends — and actually RUN the pick (the compiled cell must be the
     # schedule the recorded plan stats describe)
+    # enc-dec geometry does not carry the SP axis — pin the plan to the
+    # full model axis so its recorded stats match the compiled cell.
     plan = plan_batch(cm, lengths, PlannerConfig(fixed_k=1,
                                                  remat_mode=remat_mode,
-                                                 v_stages=1))
+                                                 v_stages=1,
+                                                 sp_degree=d_s))
     chunks = [c for p in plan.pipelines for c in p.chunks]
     cap = ((plan.chunk_capacity + d_s - 1) // d_s) * d_s
     l_max, table, digest = plan.ckpt_policy(len(chunks))
@@ -388,7 +408,12 @@ def _ctx_specs(cfg, geom, pod, data, model):
     """out_specs for the prefill context buffers: [L_s, ...] per stage =>
     stage dim over "data"; ulysses KV is head-sharded over "model"; the
     allgather_kv buffers and SSM state are replicated over "model"; the conv
-    tail is rank-local (per-shard trailing rows)."""
+    tail is rank-local (per-shard trailing rows).
+
+    Prefill cells always run at d_s_eff == d_s (run_cell pins the planner),
+    so the ulysses head dim is evenly sharded over the full model axis —
+    sub-degree would leave it replicated within contiguous replica groups,
+    which these specs do not express."""
     from jax.sharding import PartitionSpec as P
     from repro.models import LayerCtx
     s = cfg.spec
@@ -437,6 +462,13 @@ def main():
                     help="per-stage remat axis of the sweep: bake the "
                          "ILP's per-(stage, chunk) vector into each cell "
                          "(stage-aware) or its collapsed max (uniform)")
+    ap.add_argument("--sp-policy", default="auto",
+                    choices=["auto", "none", "ulysses", "allgather_kv"],
+                    help="pin the plan's SP policy (train cells only; "
+                         "prefill always runs the full model axis)")
+    ap.add_argument("--sp-degree", type=int, default=0,
+                    help="pin the effective SP degree (0 = planner-chosen; "
+                         "must divide the model-axis size)")
     ap.add_argument("--note", default="")
     ap.add_argument("--cache-dir", default="",
                     help="persistent compile-cache directory shared across "
@@ -477,7 +509,9 @@ def main():
                 rec = run_cell(arch, shape, mp, out_dir,
                                remat_override=args.remat, note=args.note,
                                zero3_mode=args.zero3,
-                               ckpt_policy=args.ckpt_policy)
+                               ckpt_policy=args.ckpt_policy,
+                               sp_policy=args.sp_policy,
+                               sp_degree=args.sp_degree)
             except Exception as e:  # noqa: BLE001
                 rec = {"arch": arch, "shape": shape,
                        "mesh": "2x16x16" if mp else "16x16",

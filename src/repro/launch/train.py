@@ -71,6 +71,13 @@ class TrainLoopConfig:
     # and program passes on every cold compile, "error" aborts before a
     # hazardous executable enters the cache, "off" skips the audit.
     lint: str = "warn"
+    # sequence-parallel axis pins forwarded to the planner: "auto" lets
+    # the solver choose (policy, d_s_eff) jointly with chunking per plan;
+    # a policy name and/or a degree (0 = auto) pins that coordinate. Pins
+    # are part of the plan, so they get their own bucket-key / cache-store
+    # identity — no cross-SP executable aliasing.
+    sp_policy: str = "auto"
+    sp_degree: int = 0
 
 
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
@@ -147,7 +154,9 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
                           PlannerConfig(bucket_rounding=loop.bucket_rounding,
                                         schedule=pinned["schedule"],
                                         v_stages=pinned["v_stages"],
-                                        remat_mode=remat_mode))
+                                        remat_mode=remat_mode,
+                                        sp_policy=loop.sp_policy,
+                                        sp_degree=loop.sp_degree))
         pinned["schedule"], pinned["v_stages"] = plan.schedule, plan.v_stages
         return plan, corpus
 
@@ -166,11 +175,17 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         l_max, table, _digest = plan.ckpt_policy(key.n_chunks)
         split = (None if loop.split_bwd == "auto"
                  else loop.split_bwd == "on")
+        # the SP axis rides the bucket key (legacy sp-less plans resolve
+        # to policy "auto" / full degree there, which make_geometry maps
+        # back to the old rederive-at-full-d_s behavior)
         geom = make_geometry(cfg_arch, mesh, n_chunks=key.n_chunks,
                              cap=key.cap, ctx_cap=key.ctx_cap,
                              l_ckpt=l_max, compute_dtype=dtype,
                              schedule=key.schedule, v_stages=key.v_stages,
-                             ckpt_table=table, split_bwd=split)
+                             ckpt_table=table, split_bwd=split,
+                             sp_policy=(None if key.sp_policy == "auto"
+                                        else key.sp_policy),
+                             sp_degree=key.d_s_eff)
         builder = TrainStepBuilder(cfg_arch, mesh, geom, param_dtype=dtype)
 
         def build():
@@ -179,7 +194,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
             # ckpt table that disagrees with the geometry never lowers
             if lint_hook is not None:
                 prep = run_plan_checks(
-                    plan, d_s, d_p,
+                    plan, d_s, d_p, model=cfg_arch.spec,
                     key_kwargs={"split_bwd": loop.split_bwd,
                                 "dtype": loop.compute_dtype})
                 for f in prep.findings:
@@ -204,6 +219,10 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     plan, corpus = plan_for(0)
     log(f"[schedule] {plan.schedule} v={plan.v_stages} "
         f"(pinned for this run)")
+    if plan.sp is not None:
+        log(f"[sp] policy={plan.sp.policy} d_s_eff={plan.sp.d_s_eff}/{d_s}"
+            + (" (planner-chosen)" if loop.sp_policy == "auto"
+               and not loop.sp_degree else " (pinned)"))
     _key0 = plan.bucket_key(d_s)
     log(f"[ckpt] policy={loop.ckpt_policy} digest={_key0.ckpt} "
         f"l_max={_key0.l_ckpt}"
@@ -364,6 +383,16 @@ def main():
                          "findings (and counts them in --stats-json), "
                          "'error' aborts before a hazardous executable "
                          "enters the compile cache, 'off' skips the audit")
+    ap.add_argument("--sp-policy", default="auto",
+                    choices=["auto", "none", "ulysses", "allgather_kv"],
+                    help="sequence-parallel policy pin: 'auto' lets the "
+                         "planner choose (policy, degree) jointly with "
+                         "chunking; a name pins the policy (the pin gets "
+                         "its own plan bucket / compile-cache identity)")
+    ap.add_argument("--sp-degree", type=int, default=0,
+                    help="effective SP degree pin (sub-groups of the "
+                         "model axis; must divide the mesh's SP size); "
+                         "0 = planner-chosen")
     args = ap.parse_args()
 
     import os
@@ -397,7 +426,9 @@ def main():
                            schedule=args.schedule, v_stages=args.v_stages,
                            ckpt_policy=args.ckpt_policy,
                            split_bwd=args.split_bwd,
-                           lint=args.lint)
+                           lint=args.lint,
+                           sp_policy=args.sp_policy,
+                           sp_degree=args.sp_degree)
     _, _, history = train(cfg, mesh, loop)
     if args.stats_json:
         import json

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.schedule import get_schedule, simulate_occupancy, stream_perm
+from repro.core.sp import SP_POLICIES, SPConfig, sp_legal
 
 from .registry import register_pass
 from .report import SEV_ERROR, LintReport
@@ -34,7 +35,8 @@ _DIGEST_RE = re.compile(r"^(u\d+|v[0-9a-f]{12})$")
 
 # the plan axes bucket_key() must separate; see
 # check_bucket_key_completeness for how each one is perturbed
-BUCKET_KEY_AXES = ("schedule", "v_stages", "ckpt", "split_bwd", "dtype")
+BUCKET_KEY_AXES = ("schedule", "v_stages", "ckpt", "split_bwd", "dtype",
+                   "sp")
 
 
 @dataclass
@@ -51,6 +53,10 @@ class PlanContext:
     # of the bucket-key completeness check. Signature:
     #   lower_fn(plan_variant, key_kwargs) -> str
     lower_fn: Optional[Callable] = None
+    # optional: the ModelSpec the plan was solved for — enables the
+    # model-dependent tier of plan-sp-legality (head divisibility, MLA,
+    # attn-free). Without it only mesh-shape legality is checked.
+    model: Any = None
 
     def resolved_n_items(self) -> int:
         if self.n_items:
@@ -60,11 +66,13 @@ class PlanContext:
 
 def run_plan_checks(plan, d_s: int, d_p: int, *, n_items: int = 0,
                     key_kwargs: Optional[Dict[str, Any]] = None,
-                    lower_fn: Optional[Callable] = None) -> LintReport:
+                    lower_fn: Optional[Callable] = None,
+                    model: Any = None) -> LintReport:
     """Run every registered plan pass against one ExecutionPlan."""
     from .registry import available_passes
     ctx = PlanContext(plan=plan, d_s=d_s, d_p=d_p, n_items=n_items,
-                      key_kwargs=dict(key_kwargs or {}), lower_fn=lower_fn)
+                      key_kwargs=dict(key_kwargs or {}), lower_fn=lower_fn,
+                      model=model)
     report = LintReport(subject=repr(plan.bucket_key(d_s, **ctx.key_kwargs)))
     for p in available_passes("plan"):
         report.ran(p.name)
@@ -283,6 +291,14 @@ def check_bucket_key_completeness(plan, d_s: int, *,
         if axis == "dtype":
             return (plan, dict(kw, split_bwd=False, dtype="bfloat16")), \
                    (plan, dict(kw, split_bwd=False, dtype="float32"))
+        if axis == "sp":
+            # two SP points that always differ in BOTH fields; legality
+            # is irrelevant here — only key separation is probed
+            a = dataclasses.replace(plan, sp=SPConfig("none", 1))
+            b = dataclasses.replace(
+                plan, sp=SPConfig("allgather_kv", max(d_s, 2)))
+            kk = dict(kw, split_bwd=False, dtype="bfloat16")
+            return (a, kk), (b, kk)
         raise ValueError(f"unknown bucket-key axis {axis!r}")
 
     problems: List[Tuple[str, str]] = []
@@ -322,9 +338,49 @@ def check_bucket_key_completeness(plan, d_s: int, *,
 
 @register_pass("plan-bucket-key", kind="plan",
                doc="every plan axis (schedule, v_stages, ckpt digest, "
-                   "split_bwd, dtype) is visible to bucket_key()")
+                   "split_bwd, dtype, sp) is visible to bucket_key()")
 def _bucket_key(ctx: PlanContext, report: LintReport) -> None:
     for axis, msg in check_bucket_key_completeness(
             ctx.plan, ctx.d_s, key_kwargs=ctx.key_kwargs,
             lower_fn=ctx.lower_fn):
         report.add("plan-bucket-key", SEV_ERROR, msg, where=axis)
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel legality
+# ---------------------------------------------------------------------------
+
+
+@register_pass("plan-sp-legality", kind="plan",
+               doc="plan's SP policy is known, the effective degree "
+                   "divides the model axis, and (when the ModelSpec is "
+                   "supplied) the policy is legal for the model")
+def _sp_legality(ctx: PlanContext, report: LintReport) -> None:
+    spc = getattr(ctx.plan, "sp", None)
+    if spc is None:
+        # legacy sp-less plan: bucket_key() resolves it to ("auto", d_s)
+        # and the runtime rederives the policy at full degree — nothing
+        # to validate
+        return
+    where = f"sp=({spc.policy}, {spc.d_s_eff}) d_s={ctx.d_s}"
+    if spc.policy not in SP_POLICIES:
+        report.add("plan-sp-legality", SEV_ERROR,
+                   f"unknown SP policy {spc.policy!r} (expected one of "
+                   f"{SP_POLICIES})", where=where)
+        return
+    if spc.d_s_eff < 1 or ctx.d_s % spc.d_s_eff:
+        report.add("plan-sp-legality", SEV_ERROR,
+                   f"effective SP degree {spc.d_s_eff} must divide the "
+                   f"mesh's model-axis size {ctx.d_s} (sub-groups cannot "
+                   f"tile the axis otherwise)", where=where)
+        return
+    if ctx.model is not None and not sp_legal(ctx.model, spc.policy,
+                                              spc.d_s_eff):
+        m = ctx.model
+        report.add("plan-sp-legality", SEV_ERROR,
+                   f"policy {spc.policy!r} is illegal at d_s_eff="
+                   f"{spc.d_s_eff} for this model (heads={m.n_heads}/"
+                   f"{m.n_kv_heads}, mla={m.kv_lora_rank > 0}, "
+                   f"attn_free={m.attn_free}): ulysses needs divisible "
+                   f"non-MLA heads, 'none' with attention needs degree 1, "
+                   f"attn-free models shard only via 'none'", where=where)

@@ -152,11 +152,15 @@ def make_local_attention_policy(flash_impl=None) -> AttnFn:
 
     def policy(q, k_cur, v_cur, *, seg, pos, ctx_k, ctx_v, ctx_len,
                causal, window, scale, expand_fn=None):
+        # MLA ships zero-width v (values live in the latent cache rows);
+        # one condition gates both the attend-path concat and the
+        # update-path write — mirrored in runtime/sp.py's policies
+        has_v = ctx_v is not None and ctx_v.shape[-1] != 0
         if ctx_k is not None:
             C_cap = ctx_k.shape[0]
             kk = jnp.concatenate([ctx_k, k_cur.astype(ctx_k.dtype)], axis=0)
             vv = jnp.concatenate([ctx_v, v_cur.astype(ctx_v.dtype)], axis=0) \
-                if ctx_v is not None else None
+                if has_v else ctx_v
             kv_seg = jnp.concatenate([
                 jnp.where(jnp.arange(C_cap) < ctx_len, 0, -1), seg])
             kv_pos = jnp.concatenate([jnp.arange(C_cap, dtype=pos.dtype), pos])
@@ -164,7 +168,7 @@ def make_local_attention_policy(flash_impl=None) -> AttnFn:
                 ctx_k, k_cur.astype(ctx_k.dtype), ctx_len, axis=0)
             new_v = jax.lax.dynamic_update_slice_in_dim(
                 ctx_v, v_cur.astype(ctx_v.dtype), ctx_len, axis=0) \
-                if ctx_v is not None and ctx_v.shape[-1] else ctx_v
+                if has_v else ctx_v
         else:
             kk, vv, kv_seg, kv_pos = k_cur, v_cur, seg, pos
             new_k = new_v = None

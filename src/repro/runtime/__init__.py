@@ -11,7 +11,7 @@ __all__ = ["PipelineGeometry", "pipeline_loss_fn", "TrainStepBuilder",
            "batch_struct", "make_geometry", "prepare_params",
            "StageProgram", "TickContext", "CompileCache", "CacheStore",
            "model_fingerprint", "store_fingerprint",
-           "global_cache_stats"]
+           "global_cache_stats", "sp"]
 
 _LAZY = {
     "PipelineGeometry": ".pipeline",
@@ -22,19 +22,25 @@ _LAZY = {
     "prepare_params": ".train_step",
 }
 
-# experimental submodules: sequence-parallel attention policies (sp) and
-# expert-parallel MoE dispatch (ep) are consumed internally by the
-# pipeline builders; their function signatures are NOT stable API and
-# they are deliberately absent from __all__. Import them explicitly as
-# repro.runtime.sp / repro.runtime.ep if you accept the churn.
-EXPERIMENTAL_SUBMODULES = ("sp", "ep")
+# stable lazy submodules: sequence parallelism (sp) graduated when the
+# planner started choosing the SP policy/degree per plan — its policy
+# factories, subgroup_info, and the vocab-parallel embed/CE are consumed
+# by the pipeline builders AND by external callers building custom
+# geometries (the per-plan SP axis rides PipelineGeometry.policy/d_s_eff).
+STABLE_SUBMODULES = ("sp",)
+
+# experimental submodules: expert-parallel MoE dispatch (ep) is consumed
+# internally by the pipeline builders; its function signatures are NOT
+# stable API and it is deliberately absent from __all__. Import it
+# explicitly as repro.runtime.ep if you accept the churn.
+EXPERIMENTAL_SUBMODULES = ("ep",)
 
 
 def __getattr__(name):
     if name in _LAZY:
         import importlib
         return getattr(importlib.import_module(_LAZY[name], __name__), name)
-    if name in EXPERIMENTAL_SUBMODULES:
+    if name in STABLE_SUBMODULES + EXPERIMENTAL_SUBMODULES:
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

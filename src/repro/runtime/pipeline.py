@@ -48,6 +48,13 @@ class PipelineGeometry:
     layers_per_stage: int
     policy: str              # "ulysses" | "allgather_kv" | "none"
     compute_dtype: Any = jnp.bfloat16
+    # effective sequence-parallel degree (the plan's SP axis): tokens of a
+    # chunk are sharded over d_s_eff SUB-GROUPS of the model axis and the
+    # chunk's compute replicates d_s // d_s_eff times (sp.subgroup_info's
+    # layout). 0 normalizes to the full d_s — the pre-SP-axis behavior.
+    # Parameters, the vocab axis, and the batch's resting sharding stay
+    # over the FULL model axis regardless.
+    d_s_eff: int = 0
     # ZeRO-3 gather cadence: "per_tick" re-gathers every layer's weights for
     # every chunk (paper-faithful DeepSpeed ZeRO-3 semantics); "per_step"
     # gathers the stage's weights ONCE per training step and keeps them
@@ -87,14 +94,28 @@ class PipelineGeometry:
             raise ValueError(
                 f"v_stages={self.v_stages} must divide "
                 f"layers_per_stage={self.layers_per_stage}")
+        if self.d_s_eff == 0:
+            object.__setattr__(self, "d_s_eff", self.d_s)
+        if self.d_s_eff < 1 or self.d_s % self.d_s_eff:
+            raise ValueError(
+                f"d_s_eff={self.d_s_eff} must divide d_s={self.d_s}")
+        if self.policy == "ulysses" and self.d_s_eff == 1:
+            raise ValueError("ulysses at d_s_eff=1 is meaningless; the "
+                             "planner emits policy 'none' there")
         executor.canonical_ckpt_table(self.ckpt_table, d_p=self.d_p,
                                       n_chunks=self.n_chunks)
+
+    @property
+    def sp_rep(self) -> int:
+        """Chunk-compute replication factor of the SP sub-grouping."""
+        return self.d_s // self.d_s_eff
 
 
 def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
     """Per-stage context carry. KV layout depends on the SP policy:
-    ulysses => head-sharded [ctx_cap, Hkv/d_s, Dh]; allgather_kv =>
-    replicated [ctx_cap, Hkv, Dh] (or MLA cache rows [ctx_cap, 1, r+rr])."""
+    ulysses => head-sharded [ctx_cap, Hkv/d_s_eff, Dh]; allgather_kv and
+    "none" => replicated [ctx_cap, Hkv, Dh] (or MLA cache rows
+    [ctx_cap, 1, r+rr])."""
     s = cfg.spec
     L_s = geom.layers_per_stage
     k = v = hh = tail = None
@@ -103,7 +124,8 @@ def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
             kshape = (geom.ctx_cap, 1, s.kv_lora_rank + s.qk_rope_dim)
             vshape = (geom.ctx_cap, 1, 0)
         elif geom.policy == "ulysses":
-            kshape = (geom.ctx_cap, s.n_kv_heads // geom.d_s, s.head_dim)
+            kshape = (geom.ctx_cap, s.n_kv_heads // geom.d_s_eff,
+                      s.head_dim)
             vshape = kshape
         else:
             kshape = (geom.ctx_cap, s.n_kv_heads, s.head_dim)
@@ -119,12 +141,17 @@ def init_stage_ctx(cfg: ArchConfig, geom: PipelineGeometry) -> LayerCtx:
 
 def _make_model(cfg: ArchConfig, geom: PipelineGeometry,
                 model_axis: str) -> DecoderLM:
+    rep, sp_groups, _ = sp.subgroup_info(geom.d_s, geom.d_s_eff)
     if geom.policy == "ulysses":
-        attn = sp.make_ulysses_policy(model_axis, geom.d_s)
+        attn = sp.make_ulysses_policy(model_axis, geom.d_s_eff,
+                                      groups=sp_groups)
     elif geom.policy == "allgather_kv":
-        attn = sp.make_allgather_kv_policy(model_axis)
+        attn = sp.make_allgather_kv_policy(model_axis, groups=sp_groups)
     else:
-        attn = None  # attn-free arch never calls it
+        # "none": with attention present this is d_s_eff == 1 — every
+        # device holds the whole chunk, so DecoderLM's default LOCAL
+        # policy is exactly right; attn-free archs never call it at all
+        attn = None
     moe_fn = None
     if cfg.spec.n_experts > 0:
         from .ep import make_moe_ep
@@ -132,8 +159,11 @@ def _make_model(cfg: ArchConfig, geom: PipelineGeometry,
     ssm_scan = ssm_tail = None
     if cfg.spec.ssm_state > 0:
         from repro.models.ssm import _blocked_ssm
-        ssm_scan = sp.make_sp_ssm_scan(model_axis, geom.d_s, _blocked_ssm)
-        ssm_tail = sp.make_sp_conv_tail_exchange(model_axis, geom.d_s)
+        ssm_scan = sp.make_sp_ssm_scan(model_axis, geom.d_s_eff,
+                                       _blocked_ssm, groups=sp_groups,
+                                       rep=rep)
+        ssm_tail = sp.make_sp_conv_tail_exchange(model_axis, geom.d_s_eff,
+                                                 rep=rep)
     return DecoderLM(cfg, attn_fn=attn, moe_fn=moe_fn,
                      ssm_scan_fn=ssm_scan, ssm_tail_exchange=ssm_tail)
 
@@ -188,7 +218,13 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
 
     Returns (sum_loss, n_valid) replicated over data/model (psum'd).
     """
+    if mode != "train" and geom.d_s_eff != geom.d_s:
+        raise ValueError(
+            f"mode={mode!r} requires d_s_eff == d_s "
+            f"({geom.d_s_eff} != {geom.d_s}): the greedy fold's "
+            "token-sharded gather assumes unreplicated shards")
     model = _make_model(cfg, geom, model_axis)
+    rep, _, replica_groups = sp.subgroup_info(geom.d_s, geom.d_s_eff)
     s = cfg.spec
     v_st, L_s = geom.v_stages, geom.layers_per_stage
     L_v = L_s // v_st
@@ -227,6 +263,21 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
         seg_a = batch["seg"].reshape(n, cap_loc)
         pos_a = batch["pos"].reshape(n, cap_loc)
         ctxlen_a = batch["ctx_len"].reshape(n)
+        if rep > 1:
+            # the batch rests sharded over the FULL model axis (cap/d_s
+            # rows/device); at d_s_eff < d_s each device needs its
+            # SUB-GROUP shard (cap/d_s_eff rows). The replica groups are
+            # contiguous, so a tiled in-group gather concatenates the r
+            # full-axis blocks back into the sub-group shard — replicated
+            # across the r devices that share it. All-int arrays: no grad
+            # flows through this gather.
+            def _regather(t):
+                return jax.lax.all_gather(t, model_axis, axis=1, tiled=True,
+                                          axis_index_groups=replica_groups)
+            tokens_a, targets_a, seg_a, pos_a = (
+                _regather(tokens_a), _regather(targets_a),
+                _regather(seg_a), _regather(pos_a))
+            cap_loc *= rep
 
         # final-norm gamma may be feature-sharded; gather once
         fn_gamma = params["final_norm"]
@@ -246,6 +297,15 @@ def pipeline_loss_fn(cfg: ArchConfig, geom: PipelineGeometry,
             overlaps the in-flight collective (double-buffered hand-off).
             """
             seg = jnp.where(tc.valid, seg_a[tc.idxc], -1)
+            if rep > 1:
+                # the rep replicas of each sub-group computed identical
+                # chunks; only the PRIMARY replica (replica index 0) folds
+                # CE, so the full-axis psum inside sharded_ce counts every
+                # token exactly once — non-primary copies contribute
+                # exactly-zero loss AND exactly-zero cotangents (the mask
+                # rides `seg`, which only the CE valid-test consumes here)
+                primary = jax.lax.axis_index(model_axis) % rep == 0
+                seg = jnp.where(primary, seg, -1)
             tgt = targets_a[tc.idxc]
             h_last = rms_norm(x_out, fn_gamma, cfg.rms_eps)
             if mode == "train":

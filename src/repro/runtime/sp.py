@@ -22,49 +22,88 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.sp import choose_sp_policy
 from repro.kernels.ref import blocked_flash_attention, streaming_ce_stats
 from repro.models.config import ArchConfig
 
 __all__ = ["make_ulysses_policy", "make_allgather_kv_policy",
            "sharded_embed", "sharded_ce", "sharded_greedy",
            "make_sp_ssm_scan", "make_sp_conv_tail_exchange",
-           "choose_policy"]
+           "choose_policy", "subgroup_info"]
 
 
 def choose_policy(cfg: ArchConfig, d_s: int) -> str:
-    s = cfg.spec
-    if s.attn_free:
-        return "none"
-    if s.kv_lora_rank > 0:
-        return "allgather_kv"   # MLA: latent rows are tiny — gather is free
-    if s.n_heads % d_s == 0 and s.n_kv_heads % d_s == 0:
-        return "ulysses"
-    return "allgather_kv"
+    """Default SP policy at effective degree ``d_s``.
+
+    Delegates to the ONE heuristic in ``repro.core.sp`` — the planner and
+    the cost model resolve "auto" through the same function, so the
+    runtime can never disagree with what the solver costed
+    (tests/test_sp_policy.py pins this)."""
+    return choose_sp_policy(cfg.spec, d_s)
 
 
-def _perm_shift(axis_size: int):
-    return [(i, i + 1) for i in range(axis_size - 1)]
+def subgroup_info(d_s: int, d_s_eff: int):
+    """Sub-group layout for an effective SP degree ``d_s_eff <= d_s``.
+
+    Model-axis device ``m`` holds token shard ``m // r`` where
+    ``r = d_s // d_s_eff`` is the replication factor. Returns
+    ``(r, sp_groups, replica_groups)``:
+
+    * ``sp_groups[j] = [k*r + j for k in range(d_s_eff)]`` — one device
+      per token shard (all with replica index ``j``); every SP collective
+      (a2a / KV gather / scan summary) runs with these as its
+      ``axis_index_groups``, so the ``r`` replicas never interact;
+    * ``replica_groups[s] = [s*r + j for j in range(r)]`` — the ``r``
+      devices sharing shard ``s``. They are CONTIGUOUS on the axis, so a
+      tiled in-group all_gather of the full-axis batch shards
+      reconstructs the sub-group shard's rows in order.
+
+    Both group lists are ``None`` at full degree (``r == 1``); collectives
+    then span the whole axis with no group indirection.
+    """
+    d_s_eff = d_s_eff or d_s
+    if d_s % d_s_eff:
+        raise ValueError(f"d_s_eff={d_s_eff} must divide d_s={d_s}")
+    r = d_s // d_s_eff
+    if r == 1:
+        return 1, None, None
+    sp_groups = [[k * r + j for k in range(d_s_eff)] for j in range(r)]
+    replica_groups = [[s * r + j for j in range(r)] for s in range(d_s_eff)]
+    return r, sp_groups, replica_groups
 
 
 # ---------------------------------------------------------------------------
 # Attention policies.
 # ---------------------------------------------------------------------------
 
-def make_allgather_kv_policy(axis: str, flash=None) -> Callable:
+def make_allgather_kv_policy(axis: str, flash=None, *,
+                             groups=None) -> Callable:
+    """``groups`` (optional ``axis_index_groups``): the SP sub-groups from
+    :func:`subgroup_info` when the plan runs at ``d_s_eff < d_s`` — every
+    collective here stays inside one sub-group; None spans the axis."""
     flash = flash or blocked_flash_attention
 
     def policy(q, k_cur, v_cur, *, seg, pos, ctx_k, ctx_v, ctx_len,
                causal, window, scale, expand_fn=None):
         # gather the current chunk's KV rows (or MLA cache rows) + metadata
-        k_g = jax.lax.all_gather(k_cur, axis, axis=0, tiled=True)
-        v_g = jax.lax.all_gather(v_cur, axis, axis=0, tiled=True)
-        seg_g = jax.lax.all_gather(seg, axis, axis=0, tiled=True)
-        pos_g = jax.lax.all_gather(pos, axis, axis=0, tiled=True)
+        k_g = jax.lax.all_gather(k_cur, axis, axis=0, tiled=True,
+                                 axis_index_groups=groups)
+        v_g = jax.lax.all_gather(v_cur, axis, axis=0, tiled=True,
+                                 axis_index_groups=groups)
+        seg_g = jax.lax.all_gather(seg, axis, axis=0, tiled=True,
+                                   axis_index_groups=groups)
+        pos_g = jax.lax.all_gather(pos, axis, axis=0, tiled=True,
+                                   axis_index_groups=groups)
+        # MLA ships zero-width v (values live in the latent cache rows);
+        # ONE condition gates both the attend-path concat and the
+        # update-path write so the two can never disagree on what counts
+        # as "has values"
+        has_v = ctx_v is not None and ctx_v.shape[-1] != 0
         if ctx_k is not None:
             C_cap = ctx_k.shape[0]
             kk = jnp.concatenate([ctx_k, k_g.astype(ctx_k.dtype)], axis=0)
             vv = jnp.concatenate([ctx_v, v_g.astype(ctx_v.dtype)], axis=0) \
-                if ctx_v is not None else None
+                if has_v else ctx_v
             kv_seg = jnp.concatenate([
                 jnp.where(jnp.arange(C_cap) < ctx_len, 0, -1), seg_g])
             kv_pos = jnp.concatenate(
@@ -73,7 +112,7 @@ def make_allgather_kv_policy(axis: str, flash=None) -> Callable:
                 ctx_k, k_g.astype(ctx_k.dtype), ctx_len, axis=0)
             new_v = jax.lax.dynamic_update_slice_in_dim(
                 ctx_v, v_g.astype(ctx_v.dtype), ctx_len, axis=0) \
-                if ctx_v is not None and ctx_v.shape[-1] else ctx_v
+                if has_v else ctx_v
         else:
             kk, vv, kv_seg, kv_pos = k_g, v_g, seg_g, pos_g
             new_k = new_v = None
@@ -86,7 +125,10 @@ def make_allgather_kv_policy(axis: str, flash=None) -> Callable:
     return policy
 
 
-def make_ulysses_policy(axis: str, d_s: int, flash=None) -> Callable:
+def make_ulysses_policy(axis: str, d_s: int, flash=None, *,
+                        groups=None) -> Callable:
+    """``d_s`` is the EFFECTIVE degree (the sub-group size when
+    ``groups`` — :func:`subgroup_info`'s SP groups — is set)."""
     flash = flash or blocked_flash_attention
 
     def policy(q, k_cur, v_cur, *, seg, pos, ctx_k, ctx_v, ctx_len,
@@ -94,13 +136,15 @@ def make_ulysses_policy(axis: str, d_s: int, flash=None) -> Callable:
         assert expand_fn is None, "MLA uses the allgather_kv policy"
         # tokens -> full sequence, heads -> sharded (4 a2a's: q, k, v, out)
         q_g = jax.lax.all_to_all(q, axis, split_axis=1, concat_axis=0,
-                                 tiled=True)
+                                 tiled=True, axis_index_groups=groups)
         k_g = jax.lax.all_to_all(k_cur, axis, split_axis=1, concat_axis=0,
-                                 tiled=True)
+                                 tiled=True, axis_index_groups=groups)
         v_g = jax.lax.all_to_all(v_cur, axis, split_axis=1, concat_axis=0,
-                                 tiled=True)
-        seg_g = jax.lax.all_gather(seg, axis, axis=0, tiled=True)
-        pos_g = jax.lax.all_gather(pos, axis, axis=0, tiled=True)
+                                 tiled=True, axis_index_groups=groups)
+        seg_g = jax.lax.all_gather(seg, axis, axis=0, tiled=True,
+                                   axis_index_groups=groups)
+        pos_g = jax.lax.all_gather(pos, axis, axis=0, tiled=True,
+                                   axis_index_groups=groups)
         if ctx_k is not None:
             # context is head-sharded: concat along the sequence dim
             C_cap = ctx_k.shape[0]
@@ -120,7 +164,7 @@ def make_ulysses_policy(axis: str, d_s: int, flash=None) -> Callable:
         out_g = flash(q_g, kk, vv, seg_g, kv_seg, pos_g, kv_pos,
                       causal=causal, window=window, scale=scale)
         out = jax.lax.all_to_all(out_g, axis, split_axis=0, concat_axis=1,
-                                 tiled=True)
+                                 tiled=True, axis_index_groups=groups)
         return out, new_k, new_v
 
     return policy
@@ -223,7 +267,8 @@ def sharded_greedy(hidden_local: jnp.ndarray, w_local: jnp.ndarray,
 # Distributed SSM: sequence-parallel prefix scan + conv halo exchange.
 # ---------------------------------------------------------------------------
 
-def make_sp_ssm_scan(axis: str, d_s: int, local_scan) -> Callable:
+def make_sp_ssm_scan(axis: str, d_s: int, local_scan, *,
+                     groups=None, rep: int = 1) -> Callable:
     """Wrap a local scan (a, bx, h0) -> (hs, h_last) into a cross-shard
     prefix scan over token shards laid out contiguously along ``axis``.
 
@@ -232,6 +277,10 @@ def make_sp_ssm_scan(axis: str, d_s: int, local_scan) -> Callable:
     The exclusive prefix over shards (tiny [d_s, di, ds] elementwise chain)
     produces each shard's true h0; the local scan is re-run with it
     (recompute beats materializing per-token cumulative products).
+
+    ``d_s`` is the EFFECTIVE shard count; with sub-groups
+    (``groups``/``rep`` from :func:`subgroup_info`) the summary gather
+    stays inside one SP group and device ``m`` holds shard ``m // rep``.
     """
 
     def scan(a, bx, h0):
@@ -239,8 +288,9 @@ def make_sp_ssm_scan(axis: str, d_s: int, local_scan) -> Callable:
         _, h_last0 = local_scan(a, bx, zeros)
         a_prod = jnp.prod(a, axis=0)  # elementwise — resets (a=0) propagate
         summ = jax.lax.all_gather(
-            jnp.stack([a_prod, h_last0]), axis)          # [d_s, 2, di, ds]
-        my = jax.lax.axis_index(axis)
+            jnp.stack([a_prod, h_last0]), axis,
+            axis_index_groups=groups)                    # [d_s, 2, di, ds]
+        my = jax.lax.axis_index(axis) // rep
 
         def fold(carry, i):
             # carry = state entering shard i (starting from global h0)
@@ -262,7 +312,8 @@ def make_sp_ssm_scan(axis: str, d_s: int, local_scan) -> Callable:
     return scan
 
 
-def make_sp_conv_tail_exchange(axis: str, d_s: int) -> Callable:
+def make_sp_conv_tail_exchange(axis: str, d_s: int, *,
+                               rep: int = 1) -> Callable:
     """Conv halo: shard i's causal-conv tail is shard i-1's trailing rows.
 
     Shard 0 continues from the PREVIOUS CHUNK, whose globally-last tokens
@@ -270,16 +321,25 @@ def make_sp_conv_tail_exchange(axis: str, d_s: int) -> Callable:
     Each rank stores its own trailing rows after the chunk (ssm.mamba_apply),
     which makes this exchange self-consistent across consecutive split
     chunks.
+
+    ``d_s`` is the EFFECTIVE shard count; ``rep > 1`` replays the same
+    ring inside each of the ``rep`` SP sub-groups (device ``k*rep + j``
+    is shard ``k`` of group ``j`` — :func:`subgroup_info`'s layout).
     """
+    # ppermute takes explicit (src, dst) device pairs, so the sub-group
+    # structure is baked into the permutation rather than group lists
+    shift = [(k * rep + j, (k + 1) * rep + j)
+             for j in range(rep) for k in range(d_s - 1)]
+    wrap = [((d_s - 1) * rep + j, j) for j in range(rep)]
 
     def exchange(xs: jnp.ndarray, carried_tail: jnp.ndarray) -> jnp.ndarray:
         K1 = carried_tail.shape[0]
         my_tail = jax.lax.dynamic_slice_in_dim(
             xs, xs.shape[0] - K1, K1, axis=0)
-        from_left = jax.lax.ppermute(my_tail, axis, _perm_shift(d_s))
+        from_left = jax.lax.ppermute(my_tail, axis, shift)
         prev_chunk = jax.lax.ppermute(carried_tail.astype(xs.dtype), axis,
-                                      [(d_s - 1, 0)])
-        my = jax.lax.axis_index(axis)
+                                      wrap)
+        my = jax.lax.axis_index(axis) // rep
         return jnp.where(my == 0, prev_chunk, from_left)
 
     return exchange

@@ -53,7 +53,9 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
                   v_stages: int = 1,
                   ckpt_table=None,
                   split_bwd: Optional[bool] = None,
-                  overlap_handoff: bool = True) -> PipelineGeometry:
+                  overlap_handoff: bool = True,
+                  sp_policy: Optional[str] = None,
+                  sp_degree: int = 0) -> PipelineGeometry:
     """``ckpt_table`` (optional): the solver's per-(stage, chunk) remat
     matrix — any (d_p, n_chunks) nested sequence; canonicalized to the
     hashable tuple-of-tuples the frozen geometry stores. None keeps the
@@ -61,12 +63,18 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
 
     ``split_bwd`` (optional): force the zero-bubble B/W backward split on
     or off; None defaults to the schedule backend's capability
-    (``ScheduleSpec.split_bwd`` — i.e. on for ``zero-bubble-h1``)."""
+    (``ScheduleSpec.split_bwd`` — i.e. on for ``zero-bubble-h1``).
+
+    ``sp_policy``/``sp_degree`` (optional): the plan's SP axis
+    (``ExecutionPlan.sp`` / ``bucket_key().sp_policy/d_s_eff``). Defaults
+    — policy None, degree 0 — resolve to the core heuristic at the full
+    model-axis size, which is the legacy sp-less-plan behavior."""
     from .executor import canonical_ckpt_table
     from repro.core.schedule import get_schedule
     pod, data, model = mesh_axis_names(mesh)
     d_p = mesh.shape[data]
     d_s = mesh.shape[model]
+    d_s_eff = sp_degree or d_s
     ckpt_table = canonical_ckpt_table(ckpt_table, d_p=d_p,
                                       n_chunks=n_chunks)
     if split_bwd is None:
@@ -75,7 +83,8 @@ def make_geometry(cfg: ArchConfig, mesh: Mesh, *, n_chunks: int, cap: int,
         n_chunks=n_chunks, cap=cap, ctx_cap=ctx_cap, d_p=d_p, d_s=d_s,
         l_ckpt=l_ckpt,
         layers_per_stage=-(-cfg.spec.n_layers // d_p),
-        policy=sp.choose_policy(cfg, d_s),
+        policy=sp_policy or sp.choose_policy(cfg, d_s_eff),
+        d_s_eff=d_s_eff,
         compute_dtype=compute_dtype,
         zero3_mode=zero3_mode,
         schedule=schedule,

@@ -580,7 +580,8 @@ def test_bucket_key_named_fields():
     assert isinstance(key, BucketKey)
     assert BucketKey._fields == ("schedule", "v_stages", "n_chunks",
                                  "cap", "ctx_cap", "l_ckpt", "ckpt",
-                                 "split_bwd", "dtype")
+                                 "split_bwd", "dtype", "sp_policy",
+                                 "d_s_eff")
     # named access agrees with the documented order (and stays a tuple:
     # hashable, comparable, usable as a cache key)
     assert key.schedule == key[0] == plan.schedule
@@ -592,6 +593,10 @@ def test_bucket_key_named_fields():
     # resolves "auto" through the schedule backend, dtype is a string
     assert isinstance(key.split_bwd, bool)
     assert key.dtype == "bfloat16"
+    # the SP axis (PR 8): the planner's (policy, d_s_eff) is part of the
+    # compile identity so SP-differing plans never alias executables
+    assert key.sp_policy == plan.sp.policy
+    assert key.d_s_eff == plan.sp.d_s_eff
     forced = plan.bucket_key(4, split_bwd="on", dtype="float32")
     assert forced.split_bwd is True and forced.dtype == "float32"
     assert forced != key or (key.split_bwd and key.dtype == "float32")

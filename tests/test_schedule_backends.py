@@ -291,27 +291,34 @@ def test_auto_pick_capability_aware_zero_bubble(monkeypatch):
     kept as a regression."""
     import repro.core.schedule as sched_mod
     cm = _cm()
+    # full-degree SP pin: the schedule ranking below is calibrated for
+    # full-axis sharding; the free planner backs the tiny model off to
+    # none@1, which changes the hand-off/compute balance the scenario
+    # depends on (the SP axis itself is covered in test_sp_policy.py)
+    sp = dict(sp_policy="ulysses", sp_degree=4)
     # 2048-token chunks: hand-off cost makes interleaving's extra ring
     # trips pricier than ZB-H1's realized (d_p-1)(t_f + t_b - t_w) ramp
-    plan = plan_batch(cm, [2048] * 8, PlannerConfig(bucket_rounding=64))
+    plan = plan_batch(cm, [2048] * 8,
+                      PlannerConfig(bucket_rounding=64, **sp))
     assert (plan.schedule, plan.v_stages) == ("zero-bubble-h1", 1)
     # v_stages=1 pin keeps only v=1 backends; ZB-H1 beats gpipe on the
     # realized bubble now that the W-drain exists in the HLO
     plan1 = plan_batch(cm, [2048] * 8,
-                       PlannerConfig(bucket_rounding=64, v_stages=1))
+                       PlannerConfig(bucket_rounding=64, v_stages=1, **sp))
     assert plan1.schedule == "zero-bubble-h1" and plan1.v_stages == 1
     # explicit v_stages>1 without a schedule implies interleaving at that
     # exact v — never a silent fallback to a v=1 backend
     plan2 = plan_batch(cm, [2048] * 8,
-                       PlannerConfig(bucket_rounding=64, v_stages=2))
+                       PlannerConfig(bucket_rounding=64, v_stages=2, **sp))
     assert (plan2.schedule, plan2.v_stages) == ("interleaved-1f1b", 2)
 
     # capability off: realized ZB == 1F1B, never auto-picked
     monkeypatch.setattr(sched_mod, "SPLIT_BWD_REALIZED", False)
-    plan = plan_batch(cm, [2048] * 8, PlannerConfig(bucket_rounding=64))
+    plan = plan_batch(cm, [2048] * 8,
+                      PlannerConfig(bucket_rounding=64, **sp))
     assert (plan.schedule, plan.v_stages) == ("interleaved-1f1b", 2)
     plan1 = plan_batch(cm, [2048] * 8,
-                       PlannerConfig(bucket_rounding=64, v_stages=1))
+                       PlannerConfig(bucket_rounding=64, v_stages=1, **sp))
     assert plan1.schedule == "gpipe-1f1b" and plan1.v_stages == 1
 
 

@@ -1,0 +1,193 @@
+"""SP axis: one policy heuristic, planner-chosen (policy, d_s_eff).
+
+Pins the three consumers of the SP heuristic — ``core.sp.choose_sp_policy``,
+the cost model's ``"auto"`` resolution, and ``runtime.sp.choose_policy`` —
+to a single definition (they diverged once: the old inline copy in
+``core/costs.py`` picked ulysses for MLA with divisible heads while the
+runtime picked allgather_kv). Also covers legality, the planner sweep
+choosing different SP points for different length mixes, and the bucket-key
+identity of pinned plans.
+"""
+
+import pytest
+
+from repro.core import (ClusterSpec, CostModel, ModelSpec, PlannerConfig,
+                        SPConfig, plan_batch)
+from repro.core.plan import ExecutionPlan
+from repro.core.sp import (choose_sp_policy, legal_degrees, sp_candidates,
+                           sp_legal)
+
+
+def _spec(**kw):
+    base = dict(name="z", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4,
+                head_dim=32, d_ff=1024, vocab=512)
+    base.update(kw)
+    return ModelSpec(**base)
+
+
+# the zoo: every legality branch of the heuristic
+ZOO = [
+    _spec(),                                           # GQA, divisible heads
+    _spec(name="mla", n_kv_heads=8, kv_lora_rank=64,
+          qk_rope_dim=16),                             # MLA (the divergence)
+    _spec(name="odd", n_heads=6, n_kv_heads=3),        # odd head counts
+    _spec(name="mqa", n_kv_heads=1),                   # MQA: kv not divisible
+    _spec(name="ssm", attn_free=True, n_layers=8,
+          ssm_state=16, ssm_conv=4, d_inner=512),      # pure SSM
+]
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: the dedup regression — three consumers, one heuristic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ZOO, ids=lambda s: s.name)
+@pytest.mark.parametrize("d", [1, 2, 4, 8])
+def test_heuristic_consumers_never_diverge(spec, d):
+    want = choose_sp_policy(spec, d)
+    assert sp_legal(spec, want, d), \
+        "the heuristic must always pick a legal policy"
+
+    # cost model's "auto" resolution
+    cm = CostModel(spec, ClusterSpec(d_p=2, d_s=8), sp_degree=d)
+    assert cm.sp_policy == want
+
+    # runtime heuristic (wraps the spec in an ArchConfig)
+    from repro.models.config import ArchConfig
+    from repro.runtime.sp import choose_policy
+    assert choose_policy(ArchConfig(spec=spec), d) == want
+
+
+def test_mla_divergence_case_pinned():
+    """The historical bug: MLA with head counts divisible by d. The old
+    costs.py inline heuristic checked divisibility before the MLA guard
+    and picked ulysses; ulysses is illegal for MLA (one logical latent
+    head)."""
+    spec = _spec(name="mla8", n_heads=8, n_kv_heads=8, kv_lora_rank=64,
+                 qk_rope_dim=16)
+    for d in (2, 4, 8):
+        assert choose_sp_policy(spec, d) == "allgather_kv"
+        assert not sp_legal(spec, "ulysses", d)
+        cm = CostModel(spec, ClusterSpec(d_p=2, d_s=8), sp_degree=d)
+        assert cm.sp_policy == "allgather_kv"
+
+
+# ---------------------------------------------------------------------------
+# legality / candidate enumeration
+# ---------------------------------------------------------------------------
+
+def test_sp_legal_matrix():
+    gqa, ssm = ZOO[0], ZOO[4]
+    assert sp_legal(gqa, "none", 1)
+    assert not sp_legal(gqa, "none", 2)        # attention: none only at d=1
+    assert not sp_legal(gqa, "ulysses", 1)     # degree-1 must use none
+    assert sp_legal(gqa, "ulysses", 4)
+    assert not sp_legal(gqa, "ulysses", 8)     # n_kv_heads=4 not divisible
+    assert sp_legal(gqa, "allgather_kv", 8)
+    assert sp_legal(ssm, "none", 8)            # SSM scan shards any degree
+    assert not sp_legal(ssm, "allgather_kv", 2)
+    assert not sp_legal(gqa, "ring", 2)        # unknown policy
+    assert not sp_legal(gqa, "allgather_kv", 0)
+
+
+def test_legal_degrees_and_candidates():
+    gqa = ZOO[0]
+    assert legal_degrees(gqa, 8) == [8, 4, 2, 1]
+    cands = sp_candidates(gqa, 4)
+    assert cands[0] == SPConfig("ulysses", 4)  # default-first per degree
+    assert SPConfig("allgather_kv", 4) in cands
+    assert cands[-1] == SPConfig("none", 1)
+    for c in cands:
+        assert sp_legal(gqa, c.policy, c.d_s_eff)
+    # ssm: only "none", every degree
+    assert sp_candidates(ZOO[4], 4) == [SPConfig("none", d)
+                                        for d in (4, 2, 1)]
+
+
+def test_spconfig_validation_and_json():
+    with pytest.raises(ValueError):
+        SPConfig("ring", 2)
+    with pytest.raises(ValueError):
+        SPConfig("ulysses", 0)
+    sp = SPConfig("allgather_kv", 4)
+    assert SPConfig.from_json(sp.to_json()) == sp
+    assert SPConfig.from_json(None) is None
+
+
+def test_cost_model_rejects_illegal_sp():
+    with pytest.raises(ValueError):
+        CostModel(ZOO[0], ClusterSpec(d_p=2, d_s=8), sp_degree=3)
+    with pytest.raises(ValueError):
+        CostModel(ZOO[1], ClusterSpec(d_p=2, d_s=8),
+                  sp_policy="ulysses", sp_degree=4)  # MLA
+
+
+# ---------------------------------------------------------------------------
+# the planner uses the axis (acceptance: two mixes, two SP points)
+# ---------------------------------------------------------------------------
+
+PLANNER_SPEC = ModelSpec(name="t", n_layers=8, d_model=512, n_heads=8,
+                         n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000)
+SHORT_MIX = [256] * 64
+LONG_MIX = [131072, 65536, 32768] + [8192] * 8
+
+
+def _cm():
+    return CostModel(PLANNER_SPEC, ClusterSpec(d_p=4, d_s=4))
+
+
+def test_planner_chooses_sp_per_mix():
+    plan_s = plan_batch(_cm(), SHORT_MIX, PlannerConfig())
+    plan_l = plan_batch(_cm(), LONG_MIX, PlannerConfig())
+    assert plan_s.sp is not None and plan_l.sp is not None
+    # short chunks are latency-bound: full sharding starves the MXU
+    assert plan_s.sp == SPConfig("none", 1)
+    # long-context chunks want the full axis
+    assert plan_l.sp.d_s_eff == 4
+    assert (plan_s.sp.policy, plan_s.sp.d_s_eff) != \
+        (plan_l.sp.policy, plan_l.sp.d_s_eff)
+    # the sweep is recorded for offline analysis
+    assert any("@" in k for k in plan_s.meta["sp_sweep"])
+
+
+def test_sp_differing_plans_never_alias_buckets():
+    k_s = plan_batch(_cm(), SHORT_MIX, PlannerConfig()).bucket_key(4)
+    k_l = plan_batch(_cm(), LONG_MIX, PlannerConfig()).bucket_key(4)
+    assert (k_s.sp_policy, k_s.d_s_eff) != (k_l.sp_policy, k_l.d_s_eff)
+    assert k_s != k_l
+
+
+def test_pinned_sp_gets_own_compile_identity():
+    auto = plan_batch(_cm(), SHORT_MIX, PlannerConfig())
+    pinned = plan_batch(_cm(), SHORT_MIX,
+                        PlannerConfig(sp_policy="allgather_kv", sp_degree=4))
+    assert pinned.sp == SPConfig("allgather_kv", 4)
+    assert pinned.bucket_key(4) != auto.bucket_key(4)
+    assert pinned.bucket_key(4).sp_policy == "allgather_kv"
+
+
+def test_planner_pin_validation():
+    with pytest.raises(ValueError):
+        plan_batch(_cm(), SHORT_MIX, PlannerConfig(sp_degree=3))
+    with pytest.raises(ValueError):
+        # ulysses at degree 1 is never legal
+        plan_batch(_cm(), SHORT_MIX,
+                   PlannerConfig(sp_policy="ulysses", sp_degree=1))
+
+
+def test_plan_json_roundtrip_carries_sp():
+    plan = plan_batch(_cm(), LONG_MIX, PlannerConfig())
+    back = ExecutionPlan.loads(plan.dumps())
+    assert back.sp == plan.sp
+    assert back.bucket_key(4) == plan.bucket_key(4)
+
+
+def test_legacy_spless_plan_bucket_key():
+    """Plans without an SP axis (deserialized from old artifacts) key as
+    ("auto", d_s) — the legacy identity — so old caches stay valid."""
+    plan = plan_batch(_cm(), SHORT_MIX, PlannerConfig())
+    import dataclasses
+    legacy = dataclasses.replace(plan, sp=None)
+    key = legacy.bucket_key(4)
+    assert key.sp_policy == "auto"
+    assert key.d_s_eff == 4

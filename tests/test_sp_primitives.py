@@ -1,0 +1,292 @@
+"""Property tests for the SP runtime primitives.
+
+The collectives run under ``jax.vmap(axis_name=...)`` — vmap's collective
+rules are semantically the axis-grouped SPMD program, so every property
+checks the REAL ``runtime/sp.py`` code against a single-device dense
+reference without spawning shard_map subprocesses (those live in
+tests/test_sp_parity.py, which also covers the ``axis_index_groups``
+sub-group paths vmap cannot emulate).
+
+Hypothesis drives the shapes/seeds where installed (CI does); each
+property also has a fixed-seed deterministic twin so a bare interpreter
+still exercises the invariant.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.runtime.sp import (make_allgather_kv_policy, make_sp_ssm_scan,
+                              sharded_ce, sharded_embed, subgroup_info)
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+# ---------------------------------------------------------------------------
+# subgroup layout (pure python)
+# ---------------------------------------------------------------------------
+
+def test_subgroup_info_full_degree_is_groupless():
+    assert subgroup_info(4, 4) == (1, None, None)
+    assert subgroup_info(4, 0) == (1, None, None)  # 0 => full degree
+
+
+def test_subgroup_info_layout():
+    r, sp_groups, replica_groups = subgroup_info(8, 4)
+    assert r == 2
+    # one device per token shard in each SP group; replicas contiguous
+    assert sp_groups == [[0, 2, 4, 6], [1, 3, 5, 7]]
+    assert replica_groups == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    # every device appears exactly once per partition
+    assert sorted(sum(sp_groups, [])) == list(range(8))
+    assert sorted(sum(replica_groups, [])) == list(range(8))
+
+
+def test_subgroup_info_rejects_non_divisor():
+    with pytest.raises(ValueError):
+        subgroup_info(8, 3)
+
+
+# ---------------------------------------------------------------------------
+# distributed SSM prefix scan
+# ---------------------------------------------------------------------------
+
+def _local_scan(a, bx, h0):
+    def f(c, inp):
+        aa, bb = inp
+        c = aa * c + bb
+        return c, c
+    h_last, hs = jax.lax.scan(f, h0, (a, bx))
+    return hs, h_last
+
+
+def _check_sp_scan(seed: int, d_s: int, t_loc: int, resets):
+    """SP scan over d_s shards == one dense scan over the concatenation,
+    including a=0 resets landing anywhere (shard boundaries included)."""
+    di, ds = 3, 2
+    T = d_s * t_loc
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.5, 1.0, (T, di, ds))
+    for t in resets:
+        a[t % T] = 0.0  # reset: history must not cross this token
+    bx = rng.normal(size=(T, di, ds))
+    a, bx = jnp.asarray(a), jnp.asarray(bx)
+    h0 = jnp.asarray(rng.normal(size=(di, ds)))
+
+    hs_ref, last_ref = _local_scan(a, bx, h0)
+
+    sc = make_sp_ssm_scan("x", d_s, _local_scan)
+    hs, gfinal = jax.vmap(lambda aa, bb: sc(aa, bb, h0), axis_name="x")(
+        a.reshape(d_s, t_loc, di, ds), bx.reshape(d_s, t_loc, di, ds))
+    np.testing.assert_allclose(hs.reshape(T, di, ds), hs_ref,
+                               rtol=1e-5, atol=1e-6)
+    # the global final state is replicated to every shard
+    for s in range(d_s):
+        np.testing.assert_allclose(gfinal[s], last_ref, rtol=1e-5, atol=1e-6)
+    return np.asarray(hs.reshape(T, di, ds))
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**31 - 1), d_s=st.sampled_from([1, 2, 4, 8]),
+       t_loc=st.integers(1, 6),
+       resets=st.lists(st.integers(0, 47), max_size=4))
+def test_sp_scan_matches_dense_property(seed, d_s, t_loc, resets):
+    _check_sp_scan(seed, d_s, t_loc, resets)
+
+
+def test_sp_scan_reset_at_shard_boundary():
+    # reset exactly at the first token of shard 1: shard 0's history must
+    # not leak through the summary chain
+    _check_sp_scan(0, 4, 4, resets=[4])
+    _check_sp_scan(0, 4, 4, resets=[0, 4, 8, 12])
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**31 - 1),
+       resets=st.lists(st.integers(0, 23), max_size=3))
+def test_sp_scan_shard_count_invariance_property(seed, resets):
+    # the same 24-token stream split 1/2/4 ways produces identical states
+    outs = [_check_sp_scan(seed, d_s, 24 // d_s, resets)
+            for d_s in (1, 2, 4)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-6)
+
+
+def test_sp_scan_shard_count_invariance_fixed():
+    outs = [_check_sp_scan(7, d_s, 24 // d_s, [5, 13]) for d_s in (1, 2, 4)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embed / CE vs the dense single-device reference
+# ---------------------------------------------------------------------------
+
+def _check_embed_ce(seed: int, d_s: int, v_loc: int, cap_loc: int):
+    V, cap, D = d_s * v_loc, d_s * cap_loc, 8
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    toks = jnp.asarray(rng.integers(0, V, (cap,)).astype(np.int32))
+    tgts = jnp.asarray(rng.integers(0, V, (cap,)).astype(np.int32))
+    valid = jnp.asarray(rng.uniform(size=cap) > 0.3)
+    hid = jnp.asarray(rng.normal(size=(cap, D)).astype(np.float32))
+
+    out = jax.vmap(lambda e, t: sharded_embed(e, t, "x", jnp.float32),
+                   axis_name="x")(emb.reshape(d_s, v_loc, D),
+                                  toks.reshape(d_s, cap_loc))
+    np.testing.assert_allclose(out.reshape(cap, D), emb[toks],
+                               rtol=1e-5, atol=1e-6)
+
+    def ce(h, w, t, v):
+        return sharded_ce(h, w, t, v, "x", vocab_true=V)
+
+    loss, n = jax.vmap(ce, axis_name="x")(
+        hid.reshape(d_s, cap_loc, D), emb.reshape(d_s, v_loc, D),
+        tgts.reshape(d_s, cap_loc), valid.reshape(d_s, cap_loc))
+    logits = hid @ emb.T
+    lse = jax.scipy.special.logsumexp(logits, axis=1)
+    ref = jnp.where(valid, lse - logits[jnp.arange(cap), tgts], 0.0).sum()
+    # (loss, n) come back replicated across the axis
+    for s in range(d_s):
+        np.testing.assert_allclose(loss[s], ref, rtol=1e-4, atol=1e-5)
+        assert int(n[s]) == int(valid.sum())
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**31 - 1), d_s=st.sampled_from([1, 2, 4]),
+       v_loc=st.integers(2, 9), cap_loc=st.integers(1, 6))
+def test_embed_ce_match_dense_property(seed, d_s, v_loc, cap_loc):
+    _check_embed_ce(seed, d_s, v_loc, cap_loc)
+
+
+def test_embed_ce_match_dense_fixed():
+    _check_embed_ce(0, 4, 4, 2)
+    _check_embed_ce(1, 2, 8, 5)
+
+
+def test_sharded_ce_grads_match_dense():
+    """The distributed-LSE merge (pmax double-stop_gradient) must leave
+    the hidden-state gradient exact."""
+    d_s, v_loc, cap_loc, D = 4, 4, 2, 8
+    V, cap = d_s * v_loc, d_s * cap_loc
+    rng = np.random.default_rng(3)
+    emb = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    tgts = jnp.asarray(rng.integers(0, V, (cap,)).astype(np.int32))
+    valid = jnp.asarray(rng.uniform(size=cap) > 0.3)
+    hid = jnp.asarray(rng.normal(size=(cap, D)).astype(np.float32))
+
+    def dist_loss(h):
+        loss, _ = jax.vmap(
+            lambda hh, w, t, v: sharded_ce(hh, w, t, v, "x", vocab_true=V),
+            axis_name="x")(h.reshape(d_s, cap_loc, D),
+                           emb.reshape(d_s, v_loc, D),
+                           tgts.reshape(d_s, cap_loc),
+                           valid.reshape(d_s, cap_loc))
+        return loss[0]
+
+    def ref_loss(h):
+        logits = h @ emb.T
+        lse = jax.scipy.special.logsumexp(logits, axis=1)
+        return jnp.where(valid, lse - logits[jnp.arange(cap), tgts],
+                         0.0).sum()
+
+    g_d = jax.grad(dist_loss)(hid)
+    g_r = jax.grad(ref_loss)(hid)
+    np.testing.assert_allclose(g_d, g_r, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: MLA-shaped allgather_kv — symmetric zero-width ctx_v guards
+# ---------------------------------------------------------------------------
+
+def test_allgather_kv_zero_width_ctx_v():
+    """MLA ships a zero-width v (values live in the latent cache rows).
+    Both the attend-path concat and the update-path write must skip it —
+    the guards were asymmetric once, and the policy must match the local
+    oracle on the same (gathered) inputs."""
+    from repro.models.attention import make_local_attention_policy
+
+    d_s, t_loc, C_cap, ctx_len = 2, 4, 16, 5  # C_cap >= ctx_len + T
+    Hq, W = 2, 5  # cache width W; q width must match expanded K
+    T = d_s * t_loc
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(T, Hq, W)).astype(np.float32))
+    cache = jnp.asarray(rng.normal(size=(T, 1, W)).astype(np.float32))
+    v_zero = jnp.zeros((T, 1, 0), jnp.float32)
+    ctx_k = jnp.asarray(rng.normal(size=(C_cap, 1, W)).astype(np.float32))
+    ctx_v = jnp.zeros((C_cap, 1, 0), jnp.float32)
+    seg = jnp.zeros((T,), jnp.int32)
+    pos = jnp.arange(ctx_len, ctx_len + T, dtype=jnp.int32)
+
+    def expand(rows):  # stand-in for mla_expand_ctx: rows -> (K, V)
+        k = jnp.broadcast_to(rows, (rows.shape[0], Hq, W))
+        return k, k[..., :3]
+
+    kw = dict(ctx_len=ctx_len, causal=True, window=0, scale=1.0,
+              expand_fn=expand)
+    pol = make_allgather_kv_policy("x")
+    out, new_k, new_v = jax.vmap(
+        lambda qq, kk, vv, ss, pp: pol(qq, kk, vv, seg=ss, pos=pp,
+                                       ctx_k=ctx_k, ctx_v=ctx_v, **kw),
+        axis_name="x")(
+        q.reshape(d_s, t_loc, Hq, W), cache.reshape(d_s, t_loc, 1, W),
+        v_zero.reshape(d_s, t_loc, 1, 0), seg.reshape(d_s, t_loc),
+        pos.reshape(d_s, t_loc))
+    # the replicated-per-lane context buffers agree across lanes
+    np.testing.assert_allclose(new_k[0], new_k[-1], rtol=0, atol=0)
+    new_k, new_v = new_k[0], new_v[0]
+
+    # update path: the zero-width buffer passes through untouched
+    assert new_v.shape == ctx_v.shape and new_v.shape[-1] == 0
+    # the gathered cache rows landed in the context at ctx_len
+    np.testing.assert_allclose(new_k[ctx_len:ctx_len + T], cache,
+                               rtol=1e-6, atol=1e-7)
+
+    ref_out, ref_k, ref_v = make_local_attention_policy()(
+        q, cache, v_zero, seg=seg, pos=pos, ctx_k=ctx_k, ctx_v=ctx_v, **kw)
+    assert ref_v.shape[-1] == 0  # oracle guard is symmetric too
+    np.testing.assert_allclose(out.reshape(T, Hq, 3), ref_out,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(new_k, ref_k, rtol=1e-6, atol=1e-7)
+
+
+def test_allgather_kv_matches_local_oracle_gqa():
+    """Dense-v variant: allgather_kv over 4 shards == the local policy."""
+    from repro.models.attention import make_local_attention_policy
+
+    d_s, t_loc, C_cap, ctx_len = 4, 3, 20, 7  # C_cap >= ctx_len + T
+    Hkv, Dh = 2, 4
+    T = d_s * t_loc
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(T, Hkv, Dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(T, Hkv, Dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(T, Hkv, Dh)).astype(np.float32))
+    ctx_k = jnp.asarray(rng.normal(size=(C_cap, Hkv, Dh)).astype(np.float32))
+    ctx_v = jnp.asarray(rng.normal(size=(C_cap, Hkv, Dh)).astype(np.float32))
+    seg = jnp.zeros((T,), jnp.int32)
+    pos = jnp.arange(ctx_len, ctx_len + T, dtype=jnp.int32)
+    kw = dict(ctx_len=ctx_len, causal=True, window=0, scale=Dh ** -0.5)
+
+    pol = make_allgather_kv_policy("x")
+    out, new_k, new_v = jax.vmap(
+        lambda qq, kk, vv, ss, pp: pol(qq, kk, vv, seg=ss, pos=pp,
+                                       ctx_k=ctx_k, ctx_v=ctx_v, **kw),
+        axis_name="x")(
+        q.reshape(d_s, t_loc, Hkv, Dh), k.reshape(d_s, t_loc, Hkv, Dh),
+        v.reshape(d_s, t_loc, Hkv, Dh), seg.reshape(d_s, t_loc),
+        pos.reshape(d_s, t_loc))
+    new_k, new_v = new_k[0], new_v[0]
+
+    ref_out, ref_k, ref_v = make_local_attention_policy()(
+        q, k, v, seg=seg, pos=pos, ctx_k=ctx_k, ctx_v=ctx_v, **kw)
+    np.testing.assert_allclose(out.reshape(T, Hkv, Dh), ref_out,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(new_k, ref_k, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(new_v, ref_v, rtol=1e-6, atol=1e-7)
