@@ -44,6 +44,9 @@ def main() -> None:
         "serving_engine": lambda: __import__(
             "benchmarks.serving", fromlist=["serving_engine"]
         ).serving_engine(quick=args.quick),
+        "paged_kv": lambda: __import__(
+            "benchmarks.serving", fromlist=["paged_kv"]
+        ).paged_kv(quick=args.quick),
     }
     only = {x.strip() for x in args.only.split(",") if x.strip()}
 
@@ -125,6 +128,13 @@ def _derived(name: str, rows) -> str:
         return (f"stage_aware_recompute_vs_uniform={ratio:.2f}x;"
                 f"layers={sa['ckpt_layers']}vs{un['ckpt_layers']};"
                 f"fits={sa['fits_memory']}")
+    if name.startswith("paged_kv"):
+        by = {r["row"]: r for r in rows}
+        pc, cc = by["prefix_cache"], by["concurrency"]
+        return (f"prefill_saving={pc['prefill_saving_frac']:.2f};"
+                f"bitwise={pc['outputs_bitwise_equal']};"
+                f"concurrency={cc['peak_concurrent_seqs']}"
+                f"vs{cc['equiv_slots']}slots")
     if name.startswith("serving"):
         by = {r["prefill_mode"]: r for r in rows}
         il, se = by["interleaved"], by["serial"]

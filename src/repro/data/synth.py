@@ -55,7 +55,8 @@ def sample_lengths(preset: str, n: int, context_limit: int,
 def sample_request_trace(preset: str, n: int, context_limit: int,
                          vocab: int, *, seed: int = 0,
                          arrival_rate: float = 1.0,
-                         max_new_tokens: int = 16
+                         max_new_tokens: int = 16,
+                         system_prompt_len: int = 0
                          ) -> List[Dict[str, object]]:
     """Synthetic serving trace: Poisson arrivals (exponential inter-arrival
     gaps at ``arrival_rate`` requests per simulated second) over the same
@@ -64,6 +65,12 @@ def sample_request_trace(preset: str, n: int, context_limit: int,
     exactly the regime chunked prefill exists for. Deterministic per seed,
     so two passes over one trace are identical (the engine's zero-recompile
     check relies on this).
+
+    ``system_prompt_len`` > 0 prepends the SAME ``system_prompt_len``-token
+    prefix (drawn once) to every prompt — the shared-system-prompt regime
+    the engine's content-addressed prefix cache exists for. Per-request
+    lengths (prefix + unique tail) still follow the preset, floored at
+    ``system_prompt_len + 1`` so every request keeps a unique tail.
 
     Returns ``[{"arrival", "prompt", "max_new_tokens"}, ...]`` sorted by
     arrival; the driver wraps them into ``repro.serve.Request`` objects.
@@ -75,11 +82,26 @@ def sample_request_trace(preset: str, n: int, context_limit: int,
     ranks = np.arange(1, vocab + 1, dtype=np.float64)
     probs = 1.0 / ranks ** 1.1
     probs /= probs.sum()
+    sys_prompt = None
+    if system_prompt_len > 0:
+        if system_prompt_len >= context_limit:
+            raise ValueError(
+                f"system_prompt_len={system_prompt_len} must leave room "
+                f"for a unique tail under context_limit={context_limit}")
+        sys_prompt = rng.choice(vocab, size=system_prompt_len,
+                                p=probs).astype(np.int32)
     out = []
     for i, ln in enumerate(lengths):
+        if sys_prompt is None:
+            prompt = rng.choice(vocab, size=ln, p=probs).astype(np.int32)
+        else:
+            tail = max(1, ln - system_prompt_len)
+            prompt = np.concatenate([
+                sys_prompt,
+                rng.choice(vocab, size=tail, p=probs).astype(np.int32)])
         out.append({
             "arrival": float(arrivals[i]),
-            "prompt": rng.choice(vocab, size=ln, p=probs).astype(np.int32),
+            "prompt": prompt,
             "max_new_tokens": int(max_new_tokens),
         })
     return out

@@ -3,9 +3,13 @@
 trace (``data/synth.sample_request_trace`` presets).
 
 Each engine step packs chunked-prefill segments and (speculative) decode
-streams into ONE fixed-shape compiled program, so the compile cache holds
-exactly one engine bucket — ``--passes 2`` replays the identical trace and
-asserts the second pass compiles nothing. ``--cache-dir`` persists the
+streams into ONE fixed-shape compiled program over a paged, sequence-sharded
+KV pool; a second tiny program services copy-on-write page copies. The
+compile cache therefore holds exactly two buckets — ``--passes 2`` replays
+the identical trace and asserts the second pass compiles nothing.
+``--system-prompt N`` prepends a shared N-token prefix to every request,
+the regime the content-addressed prefix cache exists for (contrast with
+``--no-prefix-cache`` to see the prefill-token saving). ``--cache-dir`` persists the
 executable so even a fresh process warm-starts; ``--gc-max-age-s`` /
 ``--gc-max-bytes`` garbage-collect the store at startup.
 
@@ -41,14 +45,23 @@ def main():
     ap.add_argument("--passes", type=int, default=1,
                     help="replay the identical trace N times; pass 2+ must "
                          "report zero fresh compiles (closed bucket set)")
-    # engine geometry (the single compile-cache bucket)
+    # engine geometry (the closed two-bucket compile-cache set)
     ap.add_argument("--items", type=int, default=4,
                     help="packed chunk items per engine step")
     ap.add_argument("--cap-t", type=int, default=32,
                     help="tokens per item (= max prefill chunk)")
-    ap.add_argument("--slots", type=int, default=6, help="KV slots")
-    ap.add_argument("--s-cap", type=int, default=0,
-                    help="cache rows per slot; 0 = context-limit + max-new")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="KV pages pool-wide; 0 = auto (6 concurrent "
+                         "max-context requests, rounded to the model axis)")
+    ap.add_argument("--page-sz", type=int, default=16,
+                    help="cache rows per KV page")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-addressed page sharing (the "
+                         "prefix-cache OFF baseline the benchmark contrasts)")
+    ap.add_argument("--system-prompt", type=int, default=0,
+                    help="prepend a shared system prompt of this many "
+                         "tokens to every trace request (prefix-cache "
+                         "regime; 0 = off)")
     ap.add_argument("--k", type=int, default=1,
                     help="decode tokens per stream per step (speculative "
                          "draft width; k=1 is plain greedy)")
@@ -103,20 +116,29 @@ def main():
     dp, ds = (int(x) for x in args.mesh.split("x"))
     mesh = jax.make_mesh((dp, ds), ("data", "model"))
 
-    s_cap = args.s_cap or (args.context_limit + args.max_new)
+    page_sz = args.page_sz
+    pages_per_seq = -(-(args.context_limit + args.max_new) // page_sz)
+    if args.pages:
+        n_pages = args.pages
+    else:
+        # auto: room for ~6 concurrent max-context requests, rounded up to
+        # a multiple of the model axis (the pool is sequence-sharded)
+        n_pages = -(-(6 * pages_per_seq) // ds) * ds
     trace = sample_request_trace(args.trace, args.requests,
                                  args.context_limit, cfg.spec.vocab,
                                  seed=args.seed,
                                  arrival_rate=args.arrival_rate,
-                                 max_new_tokens=args.max_new)
+                                 max_new_tokens=args.max_new,
+                                 system_prompt_len=args.system_prompt)
     # admission validation UP FRONT: the old driver silently truncated an
     # over-long prompt's context; the engine (and this check) reject it
     longest = max(len(t["prompt"]) for t in trace)
-    if longest + args.max_new > s_cap:
+    if longest + args.max_new > pages_per_seq * page_sz:
         print(f"error: longest sampled prompt ({longest}) + --max-new "
-              f"({args.max_new}) exceeds the KV slot capacity "
-              f"--s-cap ({s_cap}); raise --s-cap or lower "
-              f"--context-limit — context is never silently truncated",
+              f"({args.max_new}) exceeds the per-request page budget "
+              f"({pages_per_seq} pages x {page_sz} rows); raise "
+              f"--page-sz or lower --context-limit — context is never "
+              f"silently truncated",
               file=sys.stderr)
         return 2
 
@@ -137,8 +159,9 @@ def main():
                              latency_hiding=latency_hiding_active()))
 
     econf = EngineConfig(
-        n_items=args.items, cap_t=args.cap_t, n_slots=args.slots,
-        s_cap=s_cap, k=args.k,
+        n_items=args.items, cap_t=args.cap_t, n_pages=n_pages,
+        page_sz=page_sz, pages_per_seq=pages_per_seq, k=args.k,
+        prefix_cache=not args.no_prefix_cache,
         decode_token_budget=args.decode_budget or None,
         prefill_token_budget=args.prefill_budget or None,
         prefill_mode=args.prefill_mode)
@@ -170,11 +193,17 @@ def main():
         st = engine.stats()
         st["pass"] = p
         st["fresh_compiles"] = cache.stats.misses - misses_before
+        # per-request output ids so CI can assert cache-on == cache-off
+        # bitwise (the prefix cache must never change what comes out)
+        st["outputs"] = {int(r): results[r].output_ids
+                        for r in sorted(results)}
         passes.append(st)
         print(f"[pass {p}] completed={st['completed']}/{len(trace)} "
               f"steps={st['steps']} tok/s={st['tokens_per_s']} "
               f"ttft_p95={st['ttft_s_p95']}s "
               f"occupancy={st['kv_pool']['mean_occupancy']} "
+              f"prefix_hits={st['kv_pool']['prefix_hit_rows']} "
+              f"prefill_fed={st['prefill_tokens_fed']} "
               f"accept={st['speculative']['acceptance_rate']} "
               f"fresh_compiles={st['fresh_compiles']}")
         if p > 0 and st["fresh_compiles"]:

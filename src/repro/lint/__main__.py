@@ -155,19 +155,27 @@ def _audit_serve(cfg, mesh, args) -> dict:
     import jax
 
     from repro.lint.runner import ProgramArtifacts, run_program_checks
-    from repro.runtime.compile_cache import engine_bucket_key
+    from repro.runtime.compile_cache import (engine_bucket_key,
+                                             engine_copy_bucket_key)
     from repro.runtime.serve_step import (EngineStepBuilder,
                                           make_engine_geometry)
 
-    geom = make_engine_geometry(cfg, mesh, n_items=4, cap_t=32, n_slots=6,
-                                s_cap=64, k=1)
+    geom = make_engine_geometry(cfg, mesh, n_items=4, cap_t=32, n_pages=8,
+                                page_sz=8, k=1)
     builder = EngineStepBuilder(cfg, mesh, geom)
     compiled = builder.build()
     key = engine_bucket_key(geom)
     art = ProgramArtifacts(key=key, hlo=compiled.as_text(),
                            platform=jax.default_backend())
     report = run_program_checks(art)
-    return {"key": repr(key), "report": report}
+    # the serve bucket set has a second member: the COW page-copy program
+    copy_key = engine_copy_bucket_key(geom)
+    copy_art = ProgramArtifacts(key=copy_key,
+                                hlo=builder.build_copy().as_text(),
+                                platform=jax.default_backend())
+    return {"key": repr(key), "report": report,
+            "copy_key": repr(copy_key),
+            "copy_report": run_program_checks(copy_art)}
 
 
 def _report_dict(report) -> dict:
@@ -264,7 +272,11 @@ def main(argv=None) -> int:
                         subject["programs"]["serve"] = {
                             "key": res["key"],
                             **_report_dict(res["report"])}
+                        subject["programs"]["serve-copy"] = {
+                            "key": res["copy_key"],
+                            **_report_dict(res["copy_report"])}
                         reports.append(res["report"])
+                        reports.append(res["copy_report"])
 
             for rep in reports:
                 n_findings += len(rep.findings)

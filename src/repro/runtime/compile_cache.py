@@ -48,8 +48,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Hashable, Optional, Set, Tuple
 
 __all__ = ["CacheStats", "CompileCache", "decode_bucket_key",
-           "engine_bucket_key", "global_cache_stats",
-           "reset_global_caches"]
+           "engine_bucket_key", "engine_copy_bucket_key",
+           "global_cache_stats", "reset_global_caches"]
 
 # every live cache registers here (weakly) so process-wide stats can be
 # aggregated without keeping dead caches — and their executables — alive
@@ -304,10 +304,18 @@ def decode_bucket_key(geom) -> Tuple:
 def engine_bucket_key(geom) -> Tuple:
     """Bucket key for a serving-engine step executable. The engine's whole
     point is that this set is CLOSED: per-request lengths are data, so one
-    (items, cap_t, slots, s_cap, k) geometry serves every request mix and
-    the second pass over any trace compiles nothing."""
-    return ("engine", geom.n_items, geom.cap_t, geom.n_slots, geom.s_cap,
-            geom.k, geom.d_p, geom.d_s, geom.dtype_name)
+    (items, cap_t, pages, page_sz, pages_per_seq, k) geometry serves every
+    request mix and the second pass over any trace compiles nothing."""
+    return ("engine", geom.n_items, geom.cap_t, geom.n_pages, geom.page_sz,
+            geom.pages_per_seq, geom.k, geom.d_p, geom.d_s, geom.dtype_name)
+
+
+def engine_copy_bucket_key(geom) -> Tuple:
+    """Bucket key for the engine's copy-on-write page-copy executable —
+    the second (and last) member of the closed serve bucket set. Identity
+    is the pool layout plus ``copy_cap`` (pairs per call)."""
+    return ("engine-copy", geom.n_pages, geom.page_sz, geom.copy_cap,
+            geom.d_p, geom.d_s, geom.dtype_name)
 
 
 def global_cache_stats() -> Dict[str, Any]:

@@ -44,7 +44,7 @@ __all__ = ["DecodeGeometry", "decode_step_fn", "decode_state_struct",
            "DecodeStepBuilder",
            "EngineGeometry", "EngineStepBuilder", "make_engine_geometry",
            "engine_step_fn", "engine_pool_struct", "engine_pool_specs",
-           "engine_batch_struct"]
+           "engine_batch_struct", "engine_copy_fn", "engine_copy_struct"]
 
 
 def _dtype_name(dtype) -> str:
@@ -425,34 +425,47 @@ def decode_step_fn(cfg: ArchConfig, geom: DecodeGeometry, shard_dims, *,
 
 # ===========================================================================
 # Continuous-batching serving engine: one stage program for chunked prefill
-# AND k-token (speculative) decode over a SLOTTED KV-cache pool.
+# AND k-token (speculative) decode over a PAGED, sequence-sharded KV pool.
 #
 # The unit of work is a *packed token chunk* — the trainer's chunk
 # abstraction reborn for serving. Every engine-step item is a fixed-shape
 # buffer of ``cap_t`` tokens carrying per-token metadata:
 #
 #   tokens[t]    the token id fed at this position
-#   slot[t]      the KV slot its segment owns (``n_slots`` = trash slot:
-#                padding and bubble-tick writes land there)
-#   pos[t]       absolute position in the owning sequence == the cache row
-#                this token's KV is written to
+#   pos[t]       absolute position in the owning sequence; the cache home of
+#                this token's KV row is page ``pages[t, pos // page_sz]``,
+#                row ``pos % page_sz``
 #   seg[t]       item-local segment id (-1 = padding); intra-chunk attention
 #                is same-segment causal
-#   ctx_base[t]  committed cache rows of the segment's slot at step start;
-#                cache attention sees rows [0, ctx_base) only
+#   ctx_base[t]  committed cache rows of the segment at step start; cache
+#                attention sees logical rows [0, ctx_base) only
+#   pages[t, e]  the owning request's page table (``n_pages`` = sentinel:
+#                unmapped entries; padding and bubble-tick writes land in
+#                the trash page). Replicated over the model axis — every
+#                rank serves the pages IT owns for all cap_t tokens.
+#
+# The pool is PAGE-granular and sequence-sharded: global page id
+# ``p ∈ [0, n_pages)`` lives on model-rank ``p // n_pages_loc`` at local
+# index ``p % n_pages_loc``; each rank also keeps one local trash page.
+# Capacity therefore scales with the model axis (d_s ranks hold d_s× the
+# pages of one device), at the cost of each rank scoring all cap_t queries
+# against its local pages — the partial (m, l, acc) merge with the
+# flash-decode psum-LSE, plus the intra-chunk rows computed replicated.
 #
 # A prefill chunk is a segment of prompt tokens (pos = offset..offset+c-1,
 # ctx_base = offset); a decode tick is a segment of k tokens (the last
 # accepted token + k-1 draft tokens, ctx_base = committed length). Both run
-# the SAME compiled program: per token, attention = softmax over
-# [slot-gathered cache rows ‖ intra-chunk same-segment causal rows], then
-# the token's KV row is scattered into (slot, pos). Rows at pos >= ctx_base
-# written by rejected drafts are invisible (masked) until overwritten.
+# the SAME compiled program: per token, attention = LSE-merge over
+# [page-gathered cache rows ‖ intra-chunk same-segment causal rows], then
+# the token's KV row is scattered into (page, pos % page_sz) by the rank
+# owning the page. Rows at pos >= ctx_base written by rejected drafts are
+# invisible (masked) until overwritten.
 #
 # Per-stream lengths are DATA, not shape: one executable serves every
 # request mix, so the engine's bucket-key set is closed
-# (compile_cache.engine_bucket_key). Decode runs remat-free (static
-# l_ckpt=0 — the ROADMAP's per-chunk remat-free decode item).
+# (compile_cache.engine_bucket_key + engine_copy_bucket_key — the second
+# program is the copy-on-write page copy below). Decode runs remat-free
+# (static l_ckpt=0 — the ROADMAP's per-chunk remat-free decode item).
 # ===========================================================================
 
 
@@ -461,18 +474,30 @@ class EngineGeometry:
     """Static geometry of one compiled engine step (a serve bucket)."""
     n_items: int             # packed chunk items per engine step
     cap_t: int               # tokens per item (global; sharded over model)
-    n_slots: int             # user KV slots (buffer holds n_slots + 1)
-    s_cap: int               # cache rows per slot (max prompt + generated)
+    n_pages: int             # user KV pages pool-wide (n_pages % d_s == 0)
+    page_sz: int             # cache rows per page
+    pages_per_seq: int       # page-table entries per request (max context)
     k: int                   # decode tokens per stream per step (1 = greedy)
     d_p: int
     d_s: int
     layers_per_stage: int
+    copy_cap: int = 4        # COW page copies per copy-program call
     compute_dtype: Any = jnp.bfloat16
 
     @property
-    def trash_slot(self) -> int:
-        """Write target for padding/bubble/out-of-range rows."""
-        return self.n_slots
+    def trash_page(self) -> int:
+        """Sentinel page id: unmapped table entries, padding/bubble writes."""
+        return self.n_pages
+
+    @property
+    def n_pages_loc(self) -> int:
+        """User pages resident per model rank (+1 local trash page)."""
+        return self.n_pages // self.d_s
+
+    @property
+    def max_ctx(self) -> int:
+        """Rows a full page table can address (max prompt + generated)."""
+        return self.pages_per_seq * self.page_sz
 
     @property
     def dtype_name(self) -> str:
@@ -480,7 +505,9 @@ class EngineGeometry:
 
 
 def make_engine_geometry(cfg: ArchConfig, mesh: Mesh, *, n_items: int,
-                         cap_t: int, n_slots: int, s_cap: int, k: int = 1,
+                         cap_t: int, n_pages: int, page_sz: int,
+                         pages_per_seq: Optional[int] = None, k: int = 1,
+                         copy_cap: int = 4,
                          compute_dtype=jnp.bfloat16) -> EngineGeometry:
     s = cfg.spec
     if s.attn_free or s.ssm_state > 0:
@@ -491,7 +518,7 @@ def make_engine_geometry(cfg: ArchConfig, mesh: Mesh, *, n_items: int,
         raise NotImplementedError("serving engine is decoder-only")
     if s.kv_lora_rank > 0:
         raise NotImplementedError(
-            "MLA latent cache rows are not wired into the slot pool yet "
+            "MLA latent cache rows are not wired into the page pool yet "
             "(see ROADMAP follow-ons)")
     pod, data, model = mesh_axis_names(mesh)
     if pod is not None:
@@ -502,74 +529,99 @@ def make_engine_geometry(cfg: ArchConfig, mesh: Mesh, *, n_items: int,
     if cap_t % d_s:
         raise ValueError(f"cap_t={cap_t} must be divisible by the model "
                          f"axis d_s={d_s}")
-    if min(n_items, cap_t, n_slots, s_cap, k) < 1:
-        raise ValueError("n_items/cap_t/n_slots/s_cap/k must all be >= 1")
+    if min(n_items, cap_t, n_pages, page_sz, k, copy_cap) < 1:
+        raise ValueError(
+            "n_items/cap_t/n_pages/page_sz/k/copy_cap must all be >= 1")
+    if n_pages % d_s:
+        raise ValueError(f"n_pages={n_pages} must be divisible by the model "
+                         f"axis d_s={d_s} (the pool is sequence-sharded "
+                         f"page-blockwise)")
+    pp = n_pages if pages_per_seq is None else pages_per_seq
+    if not (1 <= pp <= n_pages):
+        raise ValueError(f"pages_per_seq={pp} must be in [1, n_pages="
+                         f"{n_pages}]")
     if k > cap_t:
         raise ValueError(f"k={k} cannot exceed cap_t={cap_t}")
     return EngineGeometry(
-        n_items=n_items, cap_t=cap_t, n_slots=n_slots, s_cap=s_cap, k=k,
-        d_p=d_p, d_s=d_s,
-        layers_per_stage=-(-cfg.spec.n_layers // d_p),
+        n_items=n_items, cap_t=cap_t, n_pages=n_pages, page_sz=page_sz,
+        pages_per_seq=pp, k=k, d_p=d_p, d_s=d_s,
+        layers_per_stage=-(-cfg.spec.n_layers // d_p), copy_cap=copy_cap,
         compute_dtype=compute_dtype)
 
 
 def engine_pool_struct(cfg: ArchConfig, geom: EngineGeometry) -> Dict:
-    """Global ShapeDtypeStructs of the slotted KV pool: per stage (d_p over
-    "data"), per layer, ``n_slots + 1`` slots (last = trash) of ``s_cap``
-    rows, replicated over the model axis (every rank owns full rows and
-    performs every write — sequence-sharding the pool is the paged-attention
-    follow-on)."""
+    """Global ShapeDtypeStructs of the paged KV pool: per stage (d_p over
+    "data"), per layer, ``n_pages + d_s`` pages of ``page_sz`` rows with the
+    page axis sharded over the model axis — each rank holds its
+    ``n_pages_loc`` user pages plus one local trash page (the last local
+    index), so at d_s=1 the shape is exactly ``[d_p, L_s, n_pages + 1,
+    page_sz, Hkv, Dh]``. Capacity scales with the mesh: pages are NOT
+    replicated."""
     s = cfg.spec
-    shape = (geom.d_p, geom.layers_per_stage, geom.n_slots + 1, geom.s_cap,
-             s.n_kv_heads, s.head_dim)
+    shape = (geom.d_p, geom.layers_per_stage, geom.n_pages + geom.d_s,
+             geom.page_sz, s.n_kv_heads, s.head_dim)
     st = jax.ShapeDtypeStruct(shape, geom.compute_dtype)
     return {"cache_k": st, "cache_v": st}
 
 
-def engine_pool_specs(data: str = "data") -> Dict:
-    p = P(data, None, None, None, None, None)
+def engine_pool_specs(data: str = "data", model: str = "model") -> Dict:
+    p = P(data, None, model, None, None, None)
     return {"cache_k": p, "cache_v": p}
 
 
 def engine_batch_struct(geom: EngineGeometry) -> Dict:
     """Per-step packed chunk buffers (global shapes; token dim sharded over
-    the model axis like the trainer's chunk buffers)."""
+    the model axis like the trainer's chunk buffers, the page table
+    replicated — see ``sharding.batch_specs(replicated=("pages",))``)."""
     n, c = geom.n_items, geom.cap_t
     st = jax.ShapeDtypeStruct((n, c), jnp.int32)
-    return {"tokens": st, "slot": st, "pos": st, "seg": st, "ctx_base": st}
+    return {"tokens": st, "pos": st, "seg": st, "ctx_base": st,
+            "pages": jax.ShapeDtypeStruct((n, c, geom.pages_per_seq),
+                                          jnp.int32)}
 
 
-def _engine_attention(q, k_cache, v_cache, k_intra, v_intra, ok_cache,
-                      ok_intra, *, scale):
-    """Per-token attention over [slot cache rows ‖ intra-chunk rows].
+def engine_copy_struct(geom: EngineGeometry) -> Dict:
+    """Copy-program operands: ``copy_cap`` (src, dst) global page-id pairs;
+    ``n_pages`` sentinels are no-ops, so one fixed-shape program serves any
+    number of copy-on-write copies per step."""
+    st = jax.ShapeDtypeStruct((geom.copy_cap,), jnp.int32)
+    return {"src": st, "dst": st}
 
-    q: [T, Hq, Dh]; k/v_cache: [T, S, Hkv, Dh] (rows gathered per token by
-    slot); k/v_intra: [C, Hkv, Dh] (the whole chunk, all ranks);
-    ok_cache: [T, S] bool; ok_intra: [T, C] bool. One softmax over the
-    concatenated row axis — no cross-source LSE merge needed because both
-    sources are fully resident. Returns [T, Hq, Dh]."""
+
+def _paged_attention(q, k_page, v_page, k_intra, v_intra, ok_page,
+                     ok_intra, *, scale, model_axis):
+    """Per-token attention over [page-gathered cache rows ‖ intra rows].
+
+    q: [T, Hq, Dh] (all cap_t queries, every rank); k/v_page:
+    [T, R, Hkv, Dh] — THIS rank's resident rows for each token's page table
+    (R = pages_per_seq * page_sz); k/v_intra: [T, Hkv, Dh] (the whole
+    chunk, replicated); ok_page: [T, R] bool (false off-rank); ok_intra:
+    [T, T] bool. Cache partials (m, l, acc) merge across the model axis
+    with the flash-decode psum-LSE; intra contributions are replicated and
+    added once. Returns [T, Hq, Dh] on every rank."""
     Hq, Hkv = q.shape[1], k_intra.shape[1]
     if Hkv != Hq:
         rep = Hq // Hkv
-        k_cache = jnp.repeat(k_cache, rep, axis=2)
-        v_cache = jnp.repeat(v_cache, rep, axis=2)
+        k_page = jnp.repeat(k_page, rep, axis=2)
+        v_page = jnp.repeat(v_page, rep, axis=2)
         k_intra = jnp.repeat(k_intra, rep, axis=1)
         v_intra = jnp.repeat(v_intra, rep, axis=1)
     qf = q.astype(jnp.float32)
     s_c = jnp.einsum("thd,tshd->ths", qf,
-                     k_cache.astype(jnp.float32)) * scale
+                     k_page.astype(jnp.float32)) * scale
     s_i = jnp.einsum("thd,shd->ths", qf,
                      k_intra.astype(jnp.float32)) * scale
-    s_c = jnp.where(ok_cache[:, None, :], s_c, -1e30)
+    s_c = jnp.where(ok_page[:, None, :], s_c, -1e30)
     s_i = jnp.where(ok_intra[:, None, :], s_i, -1e30)
-    s_all = jnp.concatenate([s_c, s_i], axis=-1)
-    m = s_all.max(axis=-1)
-    p = jnp.exp(s_all - m[..., None])
-    l = p.sum(axis=-1)
-    n_s = s_c.shape[-1]
-    acc = jnp.einsum("ths,tshd->thd", p[..., :n_s],
-                     v_cache.astype(jnp.float32))
-    acc = acc + jnp.einsum("ths,shd->thd", p[..., n_s:],
+    m_c = jax.lax.pmax(s_c.max(axis=-1), model_axis)
+    m = jnp.maximum(m_c, s_i.max(axis=-1))        # same on every rank
+    p_c = jnp.exp(s_c - m[..., None])
+    p_i = jnp.exp(s_i - m[..., None])
+    l = jax.lax.psum(p_c.sum(axis=-1), model_axis) + p_i.sum(axis=-1)
+    acc = jax.lax.psum(
+        jnp.einsum("ths,tshd->thd", p_c, v_page.astype(jnp.float32)),
+        model_axis)
+    acc = acc + jnp.einsum("ths,shd->thd", p_i,
                            v_intra.astype(jnp.float32))
     out = acc / jnp.maximum(l[..., None], 1e-30)
     return out.astype(q.dtype)
@@ -585,6 +637,8 @@ def engine_step_fn(cfg: ArchConfig, geom: EngineGeometry, shard_dims, *,
     s = cfg.spec
     L_s, d_p, d_s = geom.layers_per_stage, geom.d_p, geom.d_s
     n = geom.n_items
+    ps, pp = geom.page_sz, geom.pages_per_seq
+    n_loc = geom.n_pages_loc
     dt = geom.compute_dtype
     windows_all, active_all = _layer_tables(cfg, d_p, L_s)
     scale = 1.0 / math.sqrt(s.head_dim)
@@ -595,6 +649,7 @@ def engine_step_fn(cfg: ArchConfig, geom: EngineGeometry, shard_dims, *,
 
     def step_local(params, pool, batch):
         p_idx = jax.lax.axis_index(data_axis)
+        m_idx = jax.lax.axis_index(model_axis)
         stage_params = jax.tree.map(lambda x: x[0], params["stages"])
         windows = windows_all[p_idx]
         active = active_all[p_idx]
@@ -606,15 +661,17 @@ def engine_step_fn(cfg: ArchConfig, geom: EngineGeometry, shard_dims, *,
         cap_loc = batch["tokens"].shape[-1]
 
         tokens_a = batch["tokens"].reshape(n, cap_loc)
-        slot_a = batch["slot"].reshape(n, cap_loc)
         pos_a = batch["pos"].reshape(n, cap_loc)
         seg_a = batch["seg"].reshape(n, cap_loc)
         base_a = batch["ctx_base"].reshape(n, cap_loc)
+        pages_a = batch["pages"].reshape(n, geom.cap_t, pp)   # replicated
 
-        # local pool view: drop the stage dim sharded over "data"
+        # local pool view: drop the stage dim sharded over "data"; the page
+        # axis is already the LOCAL n_loc + 1 block of this model rank
         ck0 = pool["cache_k"].reshape(pool["cache_k"].shape[1:])
         cv0 = pool["cache_v"].reshape(pool["cache_v"].shape[1:])
-        rows = jnp.arange(geom.s_cap)
+        # logical row of gathered-page entry (e, r): e * page_sz + r
+        rows_log = jnp.arange(pp * ps)
         big = jnp.int32(2 ** 30)
 
         def tick(tc, x_recv, state, ids_acc):
@@ -623,52 +680,74 @@ def engine_step_fn(cfg: ArchConfig, geom: EngineGeometry, shard_dims, *,
             tok = tokens_a[idxc]
             seg_l = jnp.where(tc.valid, seg_a[idxc], -1)
             pos_l = pos_a[idxc]
-            slot_l = slot_a[idxc]
-            base_l = base_a[idxc]
-            # full-chunk metadata: intra attention + the replicated writes
-            # need every rank to see all cap_t rows
+            # full-chunk metadata: intra attention, the paged gathers and
+            # the page-owner writes need every rank to see all cap_t rows
             seg_g = jax.lax.all_gather(seg_l, model_axis, axis=0, tiled=True)
             pos_g = jax.lax.all_gather(pos_l, model_axis, axis=0, tiled=True)
-            slot_g = jax.lax.all_gather(slot_l, model_axis, axis=0,
+            base_g = jax.lax.all_gather(base_a[idxc], model_axis, axis=0,
                                         tiled=True)
+            pages_t = pages_a[idxc]                        # [cap_t, pp]
+            # which table entries live on THIS rank (sentinel n_pages maps
+            # to owner d_s — never a real rank — so it is off-rank
+            # everywhere and reads mask out / writes trash below)
+            owner = pages_t // n_loc
+            mine = owner == m_idx
+            loc = jnp.where(mine, pages_t % n_loc, n_loc)  # n_loc = trash
+            mine_rows = jnp.repeat(mine, ps, axis=1)       # [cap_t, pp*ps]
 
             x_emb = sp.sharded_embed(params["embed"], tok, model_axis, dt)
             if cfg.embed_scale:
                 x_emb = x_emb * jnp.asarray(s.d_model ** 0.5, dt)
             x = jnp.where(tc.is_first_stage, x_emb, x_recv)
 
+            # write targets: the page holding row ``pos`` per token; tokens
+            # past the table (pos >= max_ctx), padding, bubble ticks and
+            # unmapped entries all land in the LOCAL trash page
+            entry_w = jnp.clip(pos_g // ps, 0, pp - 1)
+            pid_w = jnp.take_along_axis(pages_t, entry_w[:, None],
+                                        axis=1)[:, 0]
+            row_w = jnp.clip(pos_g % ps, 0, ps - 1)
+
             def layer_body(x, per_layer):
                 lp, w, act, ck_l, cv_l = per_layer
                 lp = gather_layer_params(lp, shard_dims, model_axis)
                 h_in = rms_norm(x, lp["ln1"], cfg.rms_eps)
                 q, k_new, v_new = project_qkv(cfg, lp["attn"], h_in, pos_l)
+                q_g = jax.lax.all_gather(q, model_axis, axis=0, tiled=True)
                 k_g = jax.lax.all_gather(k_new, model_axis, axis=0,
                                          tiled=True)
                 v_g = jax.lax.all_gather(v_new, model_axis, axis=0,
                                          tiled=True)
                 w_eff = jnp.where(w > 0, w, big)
-                # cache rows: committed prefix of my slot, window-masked
-                ok_c = (rows[None, :] < base_l[:, None]) \
-                    & (seg_l >= 0)[:, None] \
-                    & ((pos_l[:, None] - rows[None, :]) < w_eff)
+                # this rank's resident rows of each token's page table:
+                # [cap_t, pp, page_sz, Hkv, Dh] -> flatten the page dims
+                kc = ck_l[loc].reshape(geom.cap_t, pp * ps, *ck_l.shape[2:])
+                vc = cv_l[loc].reshape(geom.cap_t, pp * ps, *cv_l.shape[2:])
+                # cache rows: committed prefix, resident here, window-masked
+                ok_c = mine_rows \
+                    & (rows_log[None, :] < base_g[:, None]) \
+                    & (seg_g >= 0)[:, None] \
+                    & ((pos_g[:, None] - rows_log[None, :]) < w_eff)
                 # intra-chunk: same segment, causal, window-masked
-                ok_i = (seg_g[None, :] == seg_l[:, None]) \
-                    & (seg_l >= 0)[:, None] \
-                    & (pos_g[None, :] <= pos_l[:, None]) \
-                    & ((pos_l[:, None] - pos_g[None, :]) < w_eff)
-                out = _engine_attention(q, ck_l[slot_l], cv_l[slot_l],
-                                        k_g, v_g, ok_c, ok_i, scale=scale)
-                y = jnp.einsum("th,hd->td", out.reshape(out.shape[0], -1),
+                ok_i = (seg_g[None, :] == seg_g[:, None]) \
+                    & (seg_g >= 0)[:, None] \
+                    & (pos_g[None, :] <= pos_g[:, None]) \
+                    & ((pos_g[:, None] - pos_g[None, :]) < w_eff)
+                out = _paged_attention(q_g, kc, vc, k_g, v_g, ok_c, ok_i,
+                                       scale=scale, model_axis=model_axis)
+                # every rank computed all cap_t outputs; keep my token block
+                out_l = jax.lax.dynamic_slice_in_dim(
+                    out, m_idx * cap_loc, cap_loc, axis=0)
+                y = jnp.einsum("th,hd->td",
+                               out_l.reshape(out_l.shape[0], -1),
                                lp["attn"]["wo"].astype(x.dtype))
-                # scatter the chunk's KV rows into (slot, pos); padding,
-                # bubble ticks, inactive layer slots and out-of-range rows
-                # all land in the trash slot
+                # scatter the chunk's KV rows into (page, pos % page_sz):
+                # only the page's owner writes; everything else trashes
                 w_ok = (seg_g >= 0) & tc.valid & act \
-                    & (pos_g < geom.s_cap)
-                slot_w = jnp.where(w_ok, slot_g, geom.trash_slot)
-                row_w = jnp.clip(pos_g, 0, geom.s_cap - 1)
-                ck_l = ck_l.at[slot_w, row_w].set(k_g.astype(ck_l.dtype))
-                cv_l = cv_l.at[slot_w, row_w].set(v_g.astype(cv_l.dtype))
+                    & (pos_g < pp * ps) & ((pid_w // n_loc) == m_idx)
+                page_w = jnp.where(w_ok, pid_w % n_loc, n_loc)
+                ck_l = ck_l.at[page_w, row_w].set(k_g.astype(ck_l.dtype))
+                cv_l = cv_l.at[page_w, row_w].set(v_g.astype(cv_l.dtype))
                 x_new = x + y
                 h2 = rms_norm(x_new, lp["ln2"], cfg.rms_eps)
                 if s.n_experts > 0:
@@ -703,13 +782,56 @@ def engine_step_fn(cfg: ArchConfig, geom: EngineGeometry, shard_dims, *,
     return step_local
 
 
+def engine_copy_fn(geom: EngineGeometry, *,
+                   model_axis: str = "model") -> Callable:
+    """Device-side page copy for copy-on-write: returns
+    copy_local(pool, copies) -> pool' for use inside shard_map.
+
+    ``copies`` is {"src", "dst"}: ``copy_cap`` global page-id pairs
+    (sentinel ``n_pages`` pairs are no-ops). For each pair the source
+    owner broadcasts the page over the model axis (psum of a single
+    non-zero contribution) and the destination owner writes it — src and
+    dst may live on different ranks. Each pipeline stage copies its own
+    layer slab; no data-axis collectives."""
+    n_loc = geom.n_pages_loc
+
+    def copy_local(pool, copies):
+        m_idx = jax.lax.axis_index(model_axis)
+        ck = pool["cache_k"].reshape(pool["cache_k"].shape[1:])
+        cv = pool["cache_v"].reshape(pool["cache_v"].shape[1:])
+
+        def body(carry, sd):
+            ck, cv = carry
+            src, dst = sd
+            s_mine = (src // n_loc) == m_idx      # sentinel: no owner
+            s_loc = jnp.where(s_mine, src % n_loc, n_loc)
+            pk = jax.lax.psum(
+                jnp.where(s_mine, ck[:, s_loc], 0), model_axis)
+            pv = jax.lax.psum(
+                jnp.where(s_mine, cv[:, s_loc], 0), model_axis)
+            d_mine = (dst // n_loc) == m_idx
+            d_loc = jnp.where(d_mine, dst % n_loc, n_loc)
+            ck = ck.at[:, d_loc].set(
+                jnp.where(d_mine, pk.astype(ck.dtype), ck[:, d_loc]))
+            cv = cv.at[:, d_loc].set(
+                jnp.where(d_mine, pv.astype(cv.dtype), cv[:, d_loc]))
+            return (ck, cv), None
+
+        (ck, cv), _ = jax.lax.scan(body, (ck, cv),
+                                   (copies["src"], copies["dst"]))
+        return {"cache_k": ck.reshape(pool["cache_k"].shape),
+                "cache_v": cv.reshape(pool["cache_v"].shape)}
+
+    return copy_local
+
+
 @dataclass
 class EngineStepBuilder:
     """Builds the AOT-compiled engine step for a mesh + engine geometry.
 
     AOT (``lower().compile()``) so the executable is serializable into the
     persistent :class:`~repro.runtime.cache_store.CacheStore` — a serving
-    restart warm-starts its (single) engine bucket."""
+    restart warm-starts its two engine buckets (step + COW page copy)."""
     cfg: ArchConfig
     mesh: Mesh
     geom: EngineGeometry
@@ -742,8 +864,8 @@ class EngineStepBuilder:
                                     self.mesh.shape[self.model_axis])
         from .sharding import batch_specs
         bspecs = batch_specs(engine_batch_struct(self.geom), pod=None,
-                             model=self.model_axis)
-        poolspecs = engine_pool_specs(self.data_axis)
+                             model=self.model_axis, replicated=("pages",))
+        poolspecs = engine_pool_specs(self.data_axis, self.model_axis)
         fn = engine_step_fn(self.cfg, self.geom, shard_dims,
                             data_axis=self.data_axis,
                             model_axis=self.model_axis)
@@ -756,3 +878,16 @@ class EngineStepBuilder:
         batch_struct_ = engine_batch_struct(self.geom)
         return jax.jit(mapped).lower(
             params_shape, pool_struct, batch_struct_).compile()
+
+    def build_copy(self):
+        """AOT-compile the COW page-copy program (its own cache bucket —
+        see ``compile_cache.engine_copy_bucket_key``)."""
+        poolspecs = engine_pool_specs(self.data_axis, self.model_axis)
+        cspecs = {"src": P(None), "dst": P(None)}
+        fn = engine_copy_fn(self.geom, model_axis=self.model_axis)
+        mapped = shard_map_compat(
+            fn, mesh=self.mesh, in_specs=(poolspecs, cspecs),
+            out_specs=poolspecs, check_vma=False)
+        pool_struct = engine_pool_struct(self.cfg, self.geom)
+        return jax.jit(mapped).lower(
+            pool_struct, engine_copy_struct(self.geom)).compile()

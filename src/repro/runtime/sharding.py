@@ -285,16 +285,22 @@ def head_param_specs(head_tree, d_s: int, *, model: str = "model"):
     return tree_paths_map(_spec, head_tree)
 
 
-def batch_specs(batch_tree, *, pod: Optional[str], model: str = "model"):
+def batch_specs(batch_tree, *, pod: Optional[str], model: str = "model",
+                replicated: Tuple[str, ...] = ()):
     """Chunked batch arrays [(pods,) n_chunks, cap, ...]: chunk dim over pod
-    (if present), token dim over model."""
-    def _spec(leaf) -> P:
+    (if present), token dim over model. Leaves whose key path matches a name
+    in ``replicated`` stay fully replicated over the model axis — the
+    serving engine's per-token page table is one: every rank gathers cache
+    pages it owns for ALL tokens of the step, so it needs the whole table."""
+    def _spec(path: str, leaf) -> P:
         dims: List[Optional[str]] = [None] * leaf.ndim
         i = 0
         if pod is not None:
             dims[0] = pod
             i = 1
+        if path in replicated:
+            return P(*dims)
         if leaf.ndim > i + 1:
             dims[i + 1] = model   # token/capacity dim
         return P(*dims)
-    return jax.tree.map(_spec, batch_tree)
+    return tree_paths_map(_spec, batch_tree)

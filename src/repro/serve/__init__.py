@@ -1,21 +1,22 @@
 """Continuous-batching serving engine on the EPP runtime.
 
 The package is split host/device: everything here is host-side
-orchestration (admission, scheduling, slot accounting, speculative
-verify); the compiled stage program lives in
+orchestration (admission, scheduling, paged-KV + prefix-cache
+accounting, speculative verify); the compiled stage program lives in
 ``repro.runtime.serve_step`` (``engine_step_fn`` + ``EngineStepBuilder``)
-and its bucket key in ``repro.runtime.compile_cache.engine_bucket_key``.
+and its bucket keys in ``repro.runtime.compile_cache``
+(``engine_bucket_key`` + ``engine_copy_bucket_key``).
 
 Heavy imports (jax, the model stack) resolve lazily through
-:mod:`.engine`; the scheduler, slot pool and speculative helpers are
+:mod:`.engine`; the scheduler, page pool and speculative helpers are
 import-light and usable from host-only tooling.
 """
 
-from .kv_manager import KVSlotPool, PoolStats
+from .kv_manager import PagedKVPool, PoolStats
 from .scheduler import SchedulerConfig, Segment, StepPlan, TickScheduler
 from .speculative import SpecStats, propose_draft, verify_greedy
 
-__all__ = ["EngineConfig", "KVSlotPool", "PoolStats", "Request",
+__all__ = ["EngineConfig", "PagedKVPool", "PoolStats", "Request",
            "RequestResult", "SchedulerConfig", "Segment", "ServeEngine",
            "SpecStats", "StepPlan", "TickScheduler", "one_shot_generate",
            "propose_draft", "verify_greedy"]

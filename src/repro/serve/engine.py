@@ -2,21 +2,33 @@
 
 Request lifecycle::
 
-    submit() ──> waiting ──admit (KV slot alloc)──> prefill ──> decode ──> done
-                   │                                  │            │
-                   └── queue (pool full / budget) ────┴── step() packs both
+    submit() ──> waiting ──admit (page table + prefix match)──> prefill ──> decode ──> done
+                   │                                              │            │
+                   └── queue (pages short / budget) ──────────────┴── step() packs both
                        into ONE fixed-shape engine program per step
 
 Every :meth:`ServeEngine.step` builds one packed batch for the compiled
 engine program (``runtime.serve_step.engine_step_fn``): decode segments
 (k tokens per running stream — speculative drafts verified on the host)
 co-scheduled with chunked-prefill segments (prompts sliced by the
-trainer's ``core.chunking.prompt_slices`` capacity logic). Because
-per-request lengths are data rather than shape, the compile cache sees
-exactly ONE bucket key per engine configuration
-(``compile_cache.engine_bucket_key``) — the second pass over any trace
-compiles nothing, and a persistent :class:`CacheStore` warm-starts even
-the first.
+trainer's ``core.chunking.prompt_slices`` capacity logic). KV rows live
+in a PAGED pool (``kv_manager.PagedKVPool`` host-side, the
+sequence-sharded device buffer in ``runtime.serve_step``): admission
+reserves nothing, pages are allocated on write, and chunked prefill
+skips whole pages whose chain hash is already resident (prefix cache) —
+shared pages are refcounted and copy-on-write protected, with the page
+copies batched through a second tiny compiled program. Because
+per-request lengths and page tables are data rather than shape, the
+compile cache sees exactly TWO bucket keys per engine configuration
+(``compile_cache.engine_bucket_key`` + ``engine_copy_bucket_key``, both
+built deterministically) — the second pass over any trace compiles
+nothing, and a persistent :class:`CacheStore` warm-starts even the first.
+
+Prefix sharing is exact: a cached page's rows are a deterministic
+function of the full token prefix (the chain hash pins it) computed by
+the SAME compiled program, and masked attention scores underflow to
+exact zeros, so adopted pages are bitwise identical to recomputed ones
+and greedy outputs cannot change (runtime/README.md §Paged KV pool).
 
 :func:`one_shot_generate` is the parity oracle: the pre-engine one-shot
 serve path (whole-prompt prefill through ``pipeline_loss_fn``'s prefill
@@ -34,7 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .kv_manager import KVSlotPool
+from .kv_manager import PagedKVPool
 from .scheduler import SchedulerConfig, Segment, StepPlan, TickScheduler
 from .speculative import SpecStats, propose_draft, verify_greedy
 
@@ -44,14 +56,19 @@ __all__ = ["EngineConfig", "Request", "RequestResult", "ServeEngine",
 
 @dataclass
 class EngineConfig:
-    """Host-visible engine knobs. (n_items, cap_t, n_slots, s_cap, k) are
-    the compiled geometry — one bucket per distinct tuple; the budgets and
-    the prefill mode are pure packing policy (no recompile)."""
+    """Host-visible engine knobs. (n_items, cap_t, n_pages, page_sz,
+    pages_per_seq, k, copy_cap) are the compiled geometry — one step + one
+    copy bucket per distinct tuple; the budgets, the prefill mode and the
+    prefix cache are pure host policy (no recompile)."""
     n_items: int = 4             # packed chunk items per engine step
     cap_t: int = 64              # tokens per item
-    n_slots: int = 8             # KV slots (max concurrently-resident reqs)
-    s_cap: int = 256             # cache rows per slot (prompt + generated)
+    n_pages: int = 16            # KV pages pool-wide (scales with d_s)
+    page_sz: int = 16            # cache rows per page
+    pages_per_seq: Optional[int] = None   # table entries (None = n_pages);
+    # pages_per_seq * page_sz is the max context of one request
     k: int = 1                   # decode tokens per stream per step
+    copy_cap: int = 4            # COW page copies per copy-program call
+    prefix_cache: bool = True    # content-addressed page sharing
     prefill_chunk: Optional[int] = None   # max prefill chunk (default cap_t)
     decode_token_budget: Optional[int] = None
     prefill_token_budget: Optional[int] = None
@@ -59,9 +76,10 @@ class EngineConfig:
     draft_ngram: int = 3
     sim_dt: float = 1.0          # simulated seconds per engine step
     # preempt a decode stream when the admission queue's head has waited
-    # this many steps with the pool full (None = never): the victim's slot
-    # is freed and it requeues for a resume-prefill of its history —
-    # outputs are unchanged (greedy is deterministic), only latency moves
+    # this many steps without the pages to admit it (None = never): the
+    # victim's pages are freed (but stay prefix-cached) and it requeues for
+    # a resume-prefill of its history — outputs are unchanged (greedy is
+    # deterministic), only latency moves
     preempt_waiting_steps: Optional[int] = None
 
 
@@ -83,8 +101,12 @@ class RequestResult:
     first_token_step: int        # TTFT in engine steps
     finished_step: int
     ttft_s: float                # wall-clock submit -> first token
-    tpot_s: float                # wall-clock mean per output token after 1st
-    preempted: int = 0           # times this request lost its slot
+    # wall-clock mean per output token after the 1st; None when fewer than
+    # 2 tokens were emitted (a single-token request HAS no inter-token
+    # latency — reporting 0.0 and filtering ">0" silently biased the
+    # percentiles optimistic on short-output traces)
+    tpot_s: Optional[float]
+    preempted: int = 0           # times this request lost its pages
 
     @property
     def ttft_steps(self) -> int:
@@ -94,7 +116,6 @@ class RequestResult:
 @dataclass
 class _ReqState:
     req: Request
-    slot: int = -1
     phase: str = "waiting"       # waiting | prefill | decode | done
     committed: int = 0           # valid cache rows (tokens fed & accepted)
     chunks: List[Tuple[int, int]] = field(default_factory=list)
@@ -138,8 +159,9 @@ class ServeEngine:
         compute_dtype = compute_dtype or param_dtype
         self.geom = make_engine_geometry(
             cfg_arch, mesh, n_items=config.n_items, cap_t=config.cap_t,
-            n_slots=config.n_slots, s_cap=config.s_cap, k=config.k,
-            compute_dtype=compute_dtype)
+            n_pages=config.n_pages, page_sz=config.page_sz,
+            pages_per_seq=config.pages_per_seq, k=config.k,
+            copy_cap=config.copy_cap, compute_dtype=compute_dtype)
         self.builder = EngineStepBuilder(cfg_arch, mesh, self.geom,
                                          param_dtype=param_dtype)
         self.params = params if params is not None else \
@@ -148,7 +170,8 @@ class ServeEngine:
         self.cache = cache if cache is not None else \
             CompileCache(name="serve-engine", log=log, store=store)
         self.pool_state = self.builder.init_pool()
-        self.pool = KVSlotPool(config.n_slots, config.s_cap)
+        self.pool = PagedKVPool(config.n_pages, config.page_sz,
+                                prefix_cache=config.prefix_cache)
         self.scheduler = TickScheduler(SchedulerConfig(
             n_items=config.n_items, cap_t=config.cap_t, k=config.k,
             decode_token_budget=config.decode_token_budget,
@@ -169,7 +192,13 @@ class ServeEngine:
         self.step_count = 0
         self.sim_time = 0.0
         self._emitted_total = 0
-        self._run_wall = 0.0
+        self._prefill_fed = 0    # prompt tokens actually fed (prefix-cache
+        self._run_wall = 0.0     # hits reduce this — the benchmark's gate)
+        # build the COW copy program EAGERLY: the serve bucket set must be
+        # deterministically closed (2 buckets) whether or not the trace
+        # ever triggers a copy — pass 2 compiles nothing either way
+        self._copy_fn = self.cache.get(self.copy_bucket_key,
+                                       self.builder.build_copy)
 
     # ------------------------------------------------------------------
     @property
@@ -177,12 +206,17 @@ class ServeEngine:
         from repro.runtime.compile_cache import engine_bucket_key
         return engine_bucket_key(self.geom)
 
+    @property
+    def copy_bucket_key(self):
+        from repro.runtime.compile_cache import engine_copy_bucket_key
+        return engine_copy_bucket_key(self.geom)
+
     def _build_step(self):
         return self.builder.build(self._params_shape)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        """Queue a request. Admission is validated against the slot
+        """Queue a request. Admission is validated against the page-table
         geometry up front — an over-long prompt is REJECTED with a clear
         error instead of silently truncating its context (the old
         launch/serve.py failure mode)."""
@@ -192,12 +226,13 @@ class ServeEngine:
             raise ValueError(f"request {req.req_id}: empty prompt")
         if req.req_id in self._states:
             raise ValueError(f"request id {req.req_id} already submitted")
-        if need > self.geom.s_cap:
+        if need > self.geom.max_ctx:
             raise ValueError(
                 f"request {req.req_id}: prompt ({plen}) + max_new_tokens "
-                f"({req.max_new_tokens}) = {need} exceeds the KV slot "
-                f"capacity s_cap={self.geom.s_cap}; raise --s-cap or split "
-                f"the request (context is never silently truncated)")
+                f"({req.max_new_tokens}) = {need} exceeds the page-table "
+                f"capacity pages_per_seq * page_sz = {self.geom.max_ctx}; "
+                f"raise --pages / --page-sz or split the request (context "
+                f"is never silently truncated)")
         st = _ReqState(req=req, submitted_step=self.step_count,
                        submit_wall=time.perf_counter(),
                        waiting_since=self.step_count,
@@ -214,50 +249,83 @@ class ServeEngine:
         from repro.core.chunking import prompt_slices
         cap = min(self.config.prefill_chunk or self.geom.cap_t,
                   self.geom.cap_t)
+        ps = self.geom.page_sz
         while self._waiting:
             st = self._waiting[0]
-            slot = self.pool.alloc(st.req.req_id)
-            if slot is None:
+            rid = st.req.req_id
+            # resume after preemption: re-prefill everything already fed
+            # (history minus the un-fed last token); fresh requests prefill
+            # the prompt — and must FEED at least its last token (the TTFT
+            # token comes out of it), so the prefix match stops one short
+            target = st.history[:-1] if st.output \
+                else [int(t) for t in st.req.prompt]
+            mr = len(target) if st.output else len(target) - 1
+            pages_hit, rows_hit = self.pool.match_prefix(target, mr)
+            remaining = len(target) - rows_hit
+            # admission gate: the first chunk (or the resume's first decode
+            # write) must be able to allocate its pages, else the stream
+            # would be admitted only to stall — wait (or preempt) instead
+            first_rows = min(remaining, cap) if remaining else 1
+            end = rows_hit + first_rows
+            needed = -(-end // ps) - len(pages_hit)
+            if rows_hit % ps and pages_hit:
+                needed += 1      # shared partial tail: first write may COW
+            # adopting a free-but-cached page RESURRECTS it off the free
+            # list — it costs a free slot exactly like a fresh allocation.
+            # Not charging resurrections let admission drain the whole
+            # free pool into doomed prefills while a running decode stream
+            # starved on one page (preemption livelock, tested).
+            needed += sum(1 for p in pages_hit
+                          if self.pool.refcount(p) == 0)
+            if needed > self.pool.n_free and self.pool.in_use > 0:
                 if self._maybe_preempt(st):
-                    continue    # retry into the freed slot
+                    continue    # retry against the freed pages
                 return
             self._waiting.popleft()
-            st.slot = slot
+            self.pool.alloc_table(rid)
+            if pages_hit:
+                self.pool.adopt_prefix(rid, pages_hit, rows_hit)
             st.phase = "prefill"
-            st.committed = 0
+            st.committed = rows_hit
             st.next_chunk = 0
-            # resume after preemption: re-prefill everything already fed
-            # (history minus the un-fed last token); fresh requests
-            # prefill the prompt
-            st.prefill_target = st.history[:-1] if st.output \
-                else [int(t) for t in st.req.prompt]
-            off, st.chunks = 0, []
-            for ln in prompt_slices(self._cm, len(st.prefill_target), cap):
-                st.chunks.append((off, ln))
-                off += ln
+            st.prefill_target = target
+            off, st.chunks = rows_hit, []
+            if remaining:
+                for ln in prompt_slices(self._cm, remaining, cap):
+                    st.chunks.append((off, ln))
+                    off += ln
+            else:
+                # resume fully served by the cache: straight back to decode
+                st.phase = "decode"
             self._running.append(st)
 
+    def _preempt_stream(self, victim: _ReqState) -> None:
+        """Publish then free the victim's pages and requeue it for a
+        resume-prefill. Its published pages stay cached, so the resume
+        typically prefix-hits most of its own history. Greedy decode is
+        deterministic, so preemption can never change a request's output
+        ids — only its latency (tested)."""
+        rid = victim.req.req_id
+        self.pool.publish_ready(rid, victim.history, victim.committed)
+        self.pool.preempt(rid)
+        victim.phase = "waiting"
+        victim.preempted += 1
+        victim.waiting_since = self.step_count
+        self._running.remove(victim)
+        self._waiting.append(victim)
+
     def _maybe_preempt(self, head: _ReqState) -> bool:
-        """Pool-full admission policy: once the queue's head has waited
+        """Page-short admission policy: once the queue's head has waited
         ``preempt_waiting_steps`` steps, evict the most recently admitted
         decode stream (its first token is already out — decode-phase
-        implies progress) and requeue it for a resume-prefill. Greedy
-        decode is deterministic, so preemption can never change a
-        request's output ids — only its latency (tested)."""
+        implies progress)."""
         n = self.config.preempt_waiting_steps
         if n is None or self.step_count - head.waiting_since < n:
             return False
         victims = [s for s in self._running if s.phase == "decode"]
         if not victims:
             return False
-        victim = victims[-1]
-        self.pool.preempt(victim.slot)
-        victim.slot = -1
-        victim.phase = "waiting"
-        victim.preempted += 1
-        victim.waiting_since = self.step_count
-        self._running.remove(victim)
-        self._waiting.append(victim)
+        self._preempt_stream(victims[-1])
         return True
 
     # ------------------------------------------------------------------
@@ -268,46 +336,119 @@ class ServeEngine:
         for st in self._running:
             rid = st.req.req_id
             if st.phase == "decode":
-                draft = propose_draft(st.history, k - 1,
+                # cap the draft so the stream never writes past its own
+                # page table (pos <= plen + max_new - 2 < max_ctx) and the
+                # last useful token isn't padded with doomed drafts
+                n_draft = max(0, min(k - 1, st.req.max_new_tokens
+                                     - len(st.output) - 1))
+                draft = propose_draft(st.history, n_draft,
                                       ngram=self.config.draft_ngram)
                 dec.append(Segment(
                     req_id=rid, kind="decode",
                     tokens=(st.next_token, *draft),
-                    slot=st.slot, base=st.committed))
+                    base=st.committed))
             elif st.phase == "prefill":
                 segs = []
                 for off, ln in st.chunks[st.next_chunk:]:
                     segs.append(Segment(
                         req_id=rid, kind="prefill",
                         tokens=tuple(st.prefill_target[off:off + ln]),
-                        slot=st.slot, base=off))
+                        base=off))
                 pre.append(segs)
         return dec, pre
+
+    # ------------------------------------------------------------------
+    def _secure_pages(self, plan: StepPlan) -> List[Tuple[int, int]]:
+        """Walk the plan in execution order and make every page each
+        segment will write allocated and writable: logical page ``idx``
+        already in the table goes through :meth:`PagedKVPool.
+        ensure_writable` (COW pairs are returned for the device copy
+        program); pages past the table are allocated on write. A segment
+        whose pages cannot be secured is dropped from the plan (deferred),
+        along with every later segment of the same request."""
+        ps, pp = self.geom.page_sz, self.geom.pages_per_seq
+        copies: List[Tuple[int, int]] = []
+        dropped: set = set()
+        for item in plan.items:
+            kept = []
+            for sg in item:
+                rid = sg.req_id
+                ok = rid not in dropped
+                if ok:
+                    table = self.pool.table_of(rid)
+                    end = min(sg.start + len(sg.tokens), pp * ps)
+                    for idx in range(sg.start // ps,
+                                     max(end - 1, sg.start) // ps + 1):
+                        if idx < len(table):
+                            status, pair = self.pool.ensure_writable(
+                                rid, idx)
+                            if status == "fail":
+                                ok = False
+                                break
+                            if pair is not None:
+                                copies.append(pair)
+                        else:
+                            while ok and len(table) <= idx:
+                                ok = self.pool.append_page(rid) is not None
+                            if not ok:
+                                break
+                if ok:
+                    kept.append(sg)
+                else:
+                    dropped.add(rid)
+                    if sg.kind == "decode":
+                        plan.decode_tokens -= len(sg.tokens)
+                        plan.deferred_decode += 1
+                    else:
+                        plan.prefill_tokens -= len(sg.tokens)
+                        plan.deferred_prefill += 1
+            item[:] = kept
+        return copies
+
+    def _run_copies(self, copies: List[Tuple[int, int]]) -> None:
+        """Execute COW page copies on device, ``copy_cap`` pairs per call
+        (sentinel-padded). MUST run before this step's engine program —
+        and before any preemption can recycle a source page."""
+        if not copies:
+            return
+        import jax.numpy as jnp
+        cc = self.geom.copy_cap
+        sent = self.geom.trash_page
+        for i in range(0, len(copies), cc):
+            src = np.full((cc,), sent, np.int32)
+            dst = np.full((cc,), sent, np.int32)
+            for j, (s_, d_) in enumerate(copies[i:i + cc]):
+                src[j], dst[j] = s_, d_
+            self.pool_state = self._copy_fn(
+                self.pool_state,
+                {"src": jnp.asarray(src), "dst": jnp.asarray(dst)})
 
     def _pack(self, plan: StepPlan):
         import jax.numpy as jnp
         g = self.geom
-        n, c = g.n_items, g.cap_t
+        n, c, pp = g.n_items, g.cap_t, g.pages_per_seq
         tokens = np.zeros((n, c), np.int32)
-        slot = np.full((n, c), g.trash_slot, np.int32)
         pos = np.zeros((n, c), np.int32)
         seg = np.full((n, c), -1, np.int32)
         base = np.zeros((n, c), np.int32)
+        pages = np.full((n, c, pp), g.trash_page, np.int32)
         placements = []
         for i, item in enumerate(plan.items):
             cur = 0
             for s_idx, sg in enumerate(item):
                 ln = len(sg.tokens)
                 tokens[i, cur:cur + ln] = sg.tokens
-                slot[i, cur:cur + ln] = sg.slot
                 pos[i, cur:cur + ln] = np.arange(sg.start, sg.start + ln)
                 seg[i, cur:cur + ln] = s_idx
                 base[i, cur:cur + ln] = sg.base
+                table = self.pool.table_of(sg.req_id) or []
+                pages[i, cur:cur + ln, :len(table)] = \
+                    np.asarray(table, np.int32)[None, :]
                 placements.append((sg, i, cur))
                 cur += ln
-        batch = {"tokens": jnp.asarray(tokens), "slot": jnp.asarray(slot),
-                 "pos": jnp.asarray(pos), "seg": jnp.asarray(seg),
-                 "ctx_base": jnp.asarray(base)}
+        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+                 "seg": jnp.asarray(seg), "ctx_base": jnp.asarray(base),
+                 "pages": jnp.asarray(pages)}
         return batch, placements
 
     # ------------------------------------------------------------------
@@ -315,15 +456,18 @@ class ServeEngine:
         st.phase = "done"
         st.finished_step = self.step_count
         st.done_wall = time.perf_counter()
-        self.pool.free(st.slot)
-        st.slot = -1
+        rid = st.req.req_id
+        # a finished request's full pages stay in the prefix cache
+        # (free-but-cached) — the next request sharing its prefix hits them
+        self.pool.publish_ready(rid, st.history, st.committed)
+        self.pool.free_table(rid)
         self._running.remove(st)
         n_out = len(st.output)
-        tpot = 0.0
+        tpot = None
         if n_out > 1:
             tpot = (st.done_wall - st.first_wall) / (n_out - 1)
-        self.results[st.req.req_id] = RequestResult(
-            req_id=st.req.req_id, prompt_len=len(st.req.prompt),
+        self.results[rid] = RequestResult(
+            req_id=rid, prompt_len=len(st.req.prompt),
             output_ids=list(st.output),
             submitted_step=st.submitted_step,
             first_token_step=st.first_token_step,
@@ -355,8 +499,25 @@ class ServeEngine:
         """Run one engine step; returns the (req_id, token) stream emitted
         by this step (per-request output streams in arrival order)."""
         self._admit()
-        dec_c, pre_c = self._candidates()
-        plan = self.scheduler.plan(dec_c, pre_c)
+        # plan + secure pages; if page exhaustion kills EVERY segment, the
+        # step would spin forever — force-preempt the newest page-holding
+        # stream (LIFO keeps the oldest progressing) and re-plan. COW
+        # copies run immediately so a later preemption can never recycle a
+        # source page before its rows are duplicated.
+        guard = 4 * (len(self._running) + len(self._waiting) + 1)
+        while True:
+            dec_c, pre_c = self._candidates()
+            plan = self.scheduler.plan(dec_c, pre_c)
+            self._run_copies(self._secure_pages(plan))
+            guard -= 1
+            if plan.n_segments or not self._running or guard <= 0:
+                break
+            victims = [s for s in self._running
+                       if self.pool.table_of(s.req.req_id)]
+            if not victims:
+                break
+            self._preempt_stream(victims[-1])
+            self._admit()   # freed pages may unblock the queue head
         batch, placements = self._pack(plan)
         step_fn = self.cache.get(self.bucket_key, self._build_step)
         ids, self.pool_state = step_fn(self.params, self.pool_state, batch)
@@ -369,6 +530,7 @@ class ServeEngine:
                 continue
             out = ids[item, off:off + len(sg.tokens)]
             if sg.kind == "prefill":
+                self._prefill_fed += len(sg.tokens)
                 st.committed += len(sg.tokens)
                 st.next_chunk += 1
                 if st.committed == len(st.prefill_target):
@@ -389,6 +551,11 @@ class ServeEngine:
                 for tok in emitted:
                     if self._emit(st, tok, events):
                         break
+        # newly completed pages enter the prefix cache as soon as their
+        # rows are committed — a concurrent request can share a page with
+        # its still-running publisher
+        for st in list(self._running):
+            self.pool.publish_ready(st.req.req_id, st.history, st.committed)
         self.pool.note_tick()
         self.step_count += 1
         self.sim_time += self.config.sim_dt
@@ -428,7 +595,9 @@ class ServeEngine:
         res = list(self.results.values())
         ttft_s = [r.ttft_s for r in res]
         ttft_steps = [r.ttft_steps for r in res]
-        tpot = [r.tpot_s for r in res if r.tpot_s > 0]
+        # n_out < 2 has no inter-token latency: excluded EXPLICITLY (None),
+        # never conflated with a measured-0 tpot
+        tpot = [r.tpot_s for r in res if r.tpot_s is not None]
 
         def pct(xs, q):
             return float(np.percentile(xs, q)) if xs else 0.0
@@ -439,6 +608,7 @@ class ServeEngine:
             "rejected": len(self.rejected),
             "steps": self.step_count,
             "emitted_tokens": self._emitted_total,
+            "prefill_tokens_fed": self._prefill_fed,
             "tokens_per_s": round(self._emitted_total / wall, 2),
             "wall_s": round(self._run_wall, 3),
             "ttft_s_p50": round(pct(ttft_s, 50), 4),
@@ -447,6 +617,7 @@ class ServeEngine:
             "ttft_steps_p95": pct(ttft_steps, 95),
             "tpot_s_p50": round(pct(tpot, 50), 5),
             "tpot_s_p95": round(pct(tpot, 95), 5),
+            "tpot_measured": len(tpot),
             "kv_pool": self.pool.stats.as_dict(),
             "speculative": self.spec_stats.as_dict(),
             "compile_cache": self.cache.stats.as_dict(),
@@ -470,7 +641,7 @@ def one_shot_generate(cfg_arch, mesh, params, prompts: Sequence[Sequence[int]],
     a FULL teacher-forced prefill of (prompt + generated-so-far) through
     the EPP pipeline (``pipeline_loss_fn`` mode="prefill") — no KV reuse,
     no continuous batching, one request at a time. Quadratically slow and
-    exactly right: the oracle the engine's slotted-cache incremental
+    exactly right: the oracle the engine's paged-cache incremental
     decode is tested against (ids must match at every k).
     """
     import jax

@@ -39,10 +39,11 @@ class Segment:
     req_id: int
     kind: str                    # "prefill" | "decode"
     tokens: Tuple[int, ...]      # fed token ids
-    slot: int                    # KV slot (trash never appears here)
     base: int                    # committed cache rows at step start
     # absolute position of tokens[0] in the sequence (== base: both decode
-    # ticks and prefill chunks continue exactly where the cache ends)
+    # ticks and prefill chunks continue exactly where the cache ends).
+    # Which KV pages back those rows is engine state (the per-request page
+    # table), not scheduling state — the scheduler only packs tokens.
 
     @property
     def start(self) -> int:
@@ -84,7 +85,14 @@ class SchedulerConfig:
 class TickScheduler:
     def __init__(self, config: SchedulerConfig):
         self.config = config
-        self._rr = 0    # round-robin start over decode streams
+        # round-robin anchor: the req_id of the stream served FIRST last
+        # step (None before any decode ran). Keying the rotation on stable
+        # req_id order — instead of an index advanced mod the CURRENT
+        # stream count — keeps it fair when streams complete/join between
+        # steps: an index pointer drifts with the population and can leave
+        # one stream persistently ordered last (starvation; regression
+        # test in tests/test_serve_engine.py).
+        self._rr_last: Optional[int] = None
 
     # ------------------------------------------------------------------
     def plan(self, decode_candidates: Sequence[Segment],
@@ -121,13 +129,28 @@ class TickScheduler:
             d_budget = total_cap if not any(prefill_candidates) \
                 else max(c.k, total_cap // 2)
         if dec:
-            order = [dec[(self._rr + i) % len(dec)] for i in range(len(dec))]
-            self._rr = (self._rr + 1) % max(1, len(dec))
+            # stable rotation: req_id order, starting just past the stream
+            # served first last step (wrapping), so every stream reaches
+            # the front within n steps no matter who completed meanwhile
+            dec.sort(key=lambda s: s.req_id)
+            start = 0
+            if self._rr_last is not None:
+                start = len(dec)
+                for i, seg in enumerate(dec):
+                    if seg.req_id > self._rr_last:
+                        start = i
+                        break
+            order = [dec[(start + i) % len(dec)] for i in range(len(dec))]
             for seg in order:
                 if plan.decode_tokens + len(seg.tokens) > d_budget \
                         or not place(seg):
                     plan.deferred_decode += 1
                     continue
+                if plan.decode_tokens == 0:
+                    # advance past the first stream actually SERVED (not
+                    # merely considered) — a fully deferred step must not
+                    # rotate the anchor
+                    self._rr_last = seg.req_id
                 plan.decode_tokens += len(seg.tokens)
 
         # ---- prefill chunks, FIFO under the prefill budget -------------
@@ -135,12 +158,16 @@ class TickScheduler:
         if p_budget is None:
             p_budget = total_cap - plan.decode_tokens
         for chunks in prefill_candidates:
+            placed = 0
             for seg in chunks:
                 if plan.prefill_tokens + len(seg.tokens) > p_budget \
                         or not place(seg):
                     # later chunks of this request depend on this one —
-                    # defer the whole rest of the prompt
-                    plan.deferred_prefill += 1
+                    # defer the whole rest of the prompt, and COUNT every
+                    # deferred chunk (the StepPlan field is a chunk count;
+                    # one-per-request undercounted skewed traces)
                     break
+                placed += 1
                 plan.prefill_tokens += len(seg.tokens)
+            plan.deferred_prefill += len(chunks) - placed
         return plan

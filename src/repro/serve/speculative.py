@@ -15,6 +15,13 @@ earlier occurrence and its continuation proposed, falling back to repeating
 the last token. Rows written for rejected drafts sit at positions beyond
 the stream's committed length, so they are masked out of attention and
 overwritten by the next tick — no cache cleanup step exists or is needed.
+Under the paged pool the engine additionally caps the draft length to the
+tokens the request can still emit (``min(k-1, max_new - emitted - 1)``):
+a doomed draft would both skew ``acceptance_rate`` downward and write KV
+rows past the request's own page table (the device trash-guards such
+writes, but the host never plans them). Rejected-draft rows are never
+*published*: the prefix cache only indexes pages whose every row is
+committed, so sharing cannot observe draft garbage.
 """
 
 from __future__ import annotations
