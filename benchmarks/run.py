@@ -22,6 +22,9 @@ def main() -> None:
                     help="also write the full per-figure records (incl. the "
                          "compile_cache stats block) to this JSON file — "
                          "CI uploads it as an artifact")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed stamped into the artifact meta (benches "
+                         "that sample take it from here)")
     args = ap.parse_args()
 
     from . import paper_figures as pf
@@ -47,11 +50,15 @@ def main() -> None:
         "paged_kv": lambda: __import__(
             "benchmarks.serving", fromlist=["paged_kv"]
         ).paged_kv(quick=args.quick),
+        "replan": lambda: __import__(
+            "benchmarks.replan", fromlist=["replan_drift"]
+        ).replan_drift(quick=args.quick),
     }
     only = {x.strip() for x in args.only.split(",") if x.strip()}
 
     print("name,us_per_call,derived")
     all_rows = {}
+    elapsed_s = {}
     for name, fn in figs.items():
         if only and not any(name.startswith(o) for o in only):
             continue
@@ -63,6 +70,7 @@ def main() -> None:
             rows = [{"error": repr(e)}]
             status = "error"
         dt = (time.perf_counter() - t0) * 1e6
+        elapsed_s[name] = round(dt / 1e6, 3)
         derived = _derived(name, rows) if status == "ok" else status
         print(f"{name},{dt:.0f},{derived}", flush=True)
         all_rows[name] = rows
@@ -98,6 +106,15 @@ def main() -> None:
         for r in rows:
             print(json.dumps({"bench": name, **r}))
     if args.json_out:
+        # provenance: a BENCH artifact must say WHEN it was measured and
+        # with WHICH seed, or two checked-in generations can't be compared
+        all_rows["meta"] = [{
+            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "generated_at_unix": round(time.time(), 3),
+            "seed": args.seed,
+            "quick": bool(args.quick),
+            "elapsed_s": elapsed_s,
+        }]
         with open(args.json_out, "w") as f:
             json.dump(all_rows, f, indent=1)
 
@@ -158,6 +175,12 @@ def _derived(name: str, rows) -> str:
                 f"long={chk['long'][0]}@{chk['long'][1]};"
                 f"distinct={chk['distinct_sp_points']};"
                 f"pin_bucket={by['short_uniform+pin']['pin_distinct_bucket']}")
+    if name.startswith("replan"):
+        r = rows[0]
+        return (f"win={r['steady_state_win']:.3f};"
+                f"swaps={r['swaps']}@{r['swap_step']};"
+                f"fresh_in_tail={r['fresh_compiles_in_steady_state']};"
+                f"comm_delta={r['meta']['calibration_deltas'].get('comm', 0)}")
     if name.startswith("cache"):
         summaries = [r for r in rows
                      if str(r.get("step", "")).startswith("summary")]

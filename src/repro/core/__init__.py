@@ -20,7 +20,7 @@ from .schedule import (Occupancy, PipelineSimulator, ScheduleSpec, SimResult,
                        choose_schedule, enumerate_windows, get_schedule,
                        register_schedule, simulate_occupancy,
                        simulate_schedule, window_limit)
-from .planner import PlannerConfig, plan_batch
+from .planner import PlannerConfig, estimate_plan_time, plan_batch
 
 __all__ = [
     "BucketKey", "Chunk", "ChunkKind", "ClusterSpec", "Coefficients",
@@ -39,5 +39,5 @@ __all__ = [
     "choose_schedule", "enumerate_windows", "get_schedule",
     "register_schedule", "simulate_occupancy", "simulate_schedule",
     "window_limit",
-    "PlannerConfig", "plan_batch",
+    "PlannerConfig", "estimate_plan_time", "plan_batch",
 ]

@@ -196,6 +196,9 @@ class CostModel:
     sat_half: float = 256.0
     # cross-entropy memory regime (see analytic_coefficients)
     ce_mode: str = "streaming"
+    # measured-recompute correction (telemetry calibration): Eq. 11's
+    # analytic recompute fraction times this factor. 1.0 = analytic.
+    recompute_factor: float = 1.0
 
     def __post_init__(self) -> None:
         if self.coeffs is None:
@@ -366,7 +369,7 @@ class CostModel:
         if l_ckpt <= 0:
             return 0.0
         frac = min(1.0, l_ckpt * self.cluster.d_p / self.model.n_layers)
-        return frac * self.t_tot(chunk)
+        return self.recompute_factor * frac * self.t_tot(chunk)
 
     def t_layer_fwd(self) -> float:
         """F-hat of Eq. 17: estimated forward time of ONE model layer for a
@@ -501,7 +504,8 @@ class CostModel:
         return CostModel(self.model, self.cluster, self.coeffs,
                          sp_policy=self.sp_policy, sp_degree=self.sp_degree,
                          stage_slowdowns=list(slowdowns),
-                         sat_half=self.sat_half, ce_mode=self.ce_mode)
+                         sat_half=self.sat_half, ce_mode=self.ce_mode,
+                         recompute_factor=self.recompute_factor)
 
     def with_sp(self, policy: str, degree: int) -> "CostModel":
         """This model re-costed at another point of the SP axis (shares
@@ -509,7 +513,8 @@ class CostModel:
         return CostModel(self.model, self.cluster, self.coeffs,
                          sp_policy=policy, sp_degree=degree,
                          stage_slowdowns=self.stage_slowdowns,
-                         sat_half=self.sat_half, ce_mode=self.ce_mode)
+                         sat_half=self.sat_half, ce_mode=self.ce_mode,
+                         recompute_factor=self.recompute_factor)
 
 
 # ---------------------------------------------------------------------------

@@ -29,7 +29,7 @@ from .plan import ExecutionPlan
 from .schedule import build_schedule, choose_schedule
 from .sp import SPConfig, sp_candidates, sp_legal
 
-__all__ = ["plan_batch", "PlannerConfig"]
+__all__ = ["plan_batch", "estimate_plan_time", "PlannerConfig"]
 
 
 @dataclass
@@ -207,6 +207,26 @@ def _solve_k_sweep(cm: CostModel, lengths: Sequence[int], cfg: PlannerConfig
     if best is None:
         return None
     return (*best, tried)
+
+
+def estimate_plan_time(cm: CostModel, plan: ExecutionPlan) -> float:
+    """Predicted step time of an EXISTING plan under ``cm``: the cycle-
+    accurate simulator's makespan summed over the plan's pipelines
+    (gradient accumulation runs them back to back), evaluated at the
+    plan's own SP point. This is the re-planner's comparison primitive —
+    it re-costs an incumbent plan under a *newly calibrated* model so the
+    candidate-vs-incumbent hysteresis compares like against like."""
+    from .schedule import PipelineSimulator
+
+    cm_c = cm
+    if plan.sp is not None:
+        cm_c = cm.with_sp(plan.sp.policy, plan.sp.d_s_eff)
+    total = 0.0
+    for p in plan.pipelines:
+        res = PipelineSimulator(cm_c, p.chunks, p.f2b, p.n_split,
+                                p.ckpt or None).run()
+        total += res.makespan
+    return total
 
 
 def plan_batch(cm: CostModel, lengths: Sequence[int],

@@ -1,3 +1,3 @@
-from .failures import StragglerMonitor, replan_costmodel
+from .failures import StragglerInjector, StragglerMonitor, replan_costmodel
 
-__all__ = ["StragglerMonitor", "replan_costmodel"]
+__all__ = ["StragglerInjector", "StragglerMonitor", "replan_costmodel"]

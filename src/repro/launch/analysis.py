@@ -58,6 +58,92 @@ def format_cache_report(stats: dict) -> str:
     return line
 
 
+def telemetry_report(telemetry_dir: str) -> dict:
+    """Digest a run's ``--telemetry-dir``: the timeline JSONL spill(s),
+    the per-fingerprint calibration store, and the plan journal.
+
+    Returns one dict per artifact class so tooling (and the CI replan job)
+    can assert on it without re-parsing JSONL:
+
+    * ``steps``: count, wall-time mean/p95 per bucket, probed-step count;
+    * ``replan``: trigger/decision/swap counts and the swap steps;
+    * ``compile``: cold/warm event counts from the cache's timeline hook;
+    * ``calibrations``: the persisted store keyed by mesh fingerprint;
+    * ``journal_steps``: entries in plans.jsonl (0 = journaling off).
+    """
+    import json
+    from pathlib import Path
+
+    d = Path(telemetry_dir)
+    out: dict = {"dir": str(d), "steps": {"count": 0, "probed": 0},
+                 "buckets": {}, "replan": {"triggers": {}, "decisions": {},
+                                           "swaps": 0, "swap_steps": []},
+                 "compile": {}, "calibrations": {}, "journal_steps": 0}
+    walls: dict = {}
+    for spill in sorted(d.glob("timeline-*.jsonl")):
+        with open(spill) as f:
+            for line in f:
+                try:
+                    ev = json.loads(line)
+                except ValueError:
+                    continue   # torn tail line of a live run
+                kind = ev.get("kind")
+                if kind == "step":
+                    out["steps"]["count"] += 1
+                    if ev.get("probed"):
+                        out["steps"]["probed"] += 1
+                    walls.setdefault(str(ev.get("bucket")), []).append(
+                        float(ev.get("wall_s", 0.0)))
+                elif kind == "compile":
+                    evt = ev.get("event", "?")
+                    out["compile"][evt] = out["compile"].get(evt, 0) + 1
+                elif kind == "replan":
+                    ph = ev.get("phase")
+                    if ph == "trigger":
+                        r = ev.get("reason", "?")
+                        out["replan"]["triggers"][r] = \
+                            out["replan"]["triggers"].get(r, 0) + 1
+                    elif ph == "decision":
+                        dec = ev.get("decision", "?")
+                        out["replan"]["decisions"][dec] = \
+                            out["replan"]["decisions"].get(dec, 0) + 1
+                        if dec == "swap" and ev.get("mode") == "auto":
+                            out["replan"]["swaps"] += 1
+                            out["replan"]["swap_steps"].append(
+                                int(ev.get("step", -1)))
+    for bucket, ws in walls.items():
+        ws = sorted(ws)
+        out["buckets"][bucket] = {
+            "steps": len(ws),
+            "wall_s_mean": round(sum(ws) / len(ws), 6),
+            "wall_s_p95": round(ws[min(len(ws) - 1,
+                                       int(0.95 * len(ws)))], 6)}
+    cal = d / "calibration.json"
+    if cal.exists():
+        try:
+            out["calibrations"] = json.loads(cal.read_text())
+        except ValueError:
+            out["calibrations"] = {}
+    journal = d / "plans.jsonl"
+    if journal.exists():
+        with open(journal) as f:
+            out["journal_steps"] = sum(1 for line in f if line.strip())
+    return out
+
+
+def format_telemetry_report(rep: dict) -> str:
+    """One-line human summary of :func:`telemetry_report` output."""
+    cals = rep.get("calibrations", {})
+    vers = {fp: c.get("version") for fp, c in cals.items()}
+    return (f"steps={rep['steps']['count']} "
+            f"(probed={rep['steps']['probed']}) "
+            f"buckets={len(rep['buckets'])} "
+            f"swaps={rep['replan']['swaps']}@{rep['replan']['swap_steps']} "
+            f"triggers={rep['replan']['triggers']} "
+            f"compile={rep['compile']} "
+            f"calibrations={vers} journal={rep['journal_steps']}")
+
+
 def analytic_collectives(cfg, geom, kind: str) -> dict:
     """Exact per-step collective volume (bytes moved per device) from the
     executor's own schedule — every collective in runtime/ is enumerated

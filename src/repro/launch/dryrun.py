@@ -518,7 +518,9 @@ def main():
                        "status": "error", "error": repr(e),
                        "traceback": traceback.format_exc()[-4000:]}
                 failures += 1
-            path.write_text(json.dumps(rec, indent=1))
+            # atomic: a concurrent sweep aggregator never reads a torn cell
+            from repro.telemetry import atomic_write_json
+            atomic_write_json(path, rec)
             print(f"  -> {rec['status']}"
                   + (f" compile={rec.get('compile_s')}s"
                      f" flops={rec.get('flops', 0):.3e}"

@@ -22,7 +22,6 @@ CPU demo (4 fake devices):
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
 
@@ -87,6 +86,9 @@ def main():
     ap.add_argument("--stats-json", default="",
                     help="write per-pass engine stats + cache/store stats "
                          "to this JSON file (CI artifact)")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="spill a telemetry timeline (engine TTFT/TPOT/"
+                         "occupancy events) to this directory as JSONL")
     ap.add_argument("--verify", type=int, default=0,
                     help="cross-check the first N requests' output ids "
                          "against the one-shot reference path")
@@ -109,6 +111,7 @@ def main():
     from repro.runtime.compile_cache import CompileCache
     from repro.serve import (EngineConfig, Request, ServeEngine,
                              one_shot_generate)
+    from repro.telemetry import StepTimeline, atomic_write_json
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -171,6 +174,8 @@ def main():
                         max_new_tokens=t["max_new_tokens"],
                         arrival=t["arrival"]) for i, t in enumerate(trace)]
 
+    timeline = StepTimeline(spill_dir=args.telemetry_dir or None,
+                            name="serve")
     passes = []
     params = None
     rc = 0
@@ -179,7 +184,8 @@ def main():
         try:
             engine = ServeEngine(cfg, mesh, econf, params=params,
                                  param_dtype=jnp.float32, cache=cache,
-                                 seed=args.seed, log=print)
+                                 seed=args.seed, log=print,
+                                 timeline=timeline)
         except NotImplementedError as e:
             # SSM/hybrid, enc-dec and MLA archs have no engine path yet;
             # their pipelined one-shot decode step (decode_step_fn) is
@@ -227,17 +233,19 @@ def main():
 
     print(f"[compile-cache] {cache.stats.summary()}")
     out = {"config": vars(args), "passes": passes,
-           "compile_cache": cache.stats.as_dict(), "error": error}
+           "compile_cache": cache.stats.as_dict(), "error": error,
+           "telemetry": timeline.snapshot()}
+    timeline.close()
     if store is not None:
         rep = store.report()
         out["cache_store"] = rep
         out["cache_store_gc"] = gc_report
         print(f"[cache-store] {rep}")
     # the stats artifact is written even on a failed run — CI diagnoses
-    # exactly the failing case from it
+    # exactly the failing case from it. Atomic (tmp + os.replace): an
+    # external scraper can never read a torn file
     if args.stats_json:
-        with open(args.stats_json, "w") as f:
-            json.dump(out, f, indent=1, default=str)
+        atomic_write_json(args.stats_json, out)
     if error:
         print(f"error: {error}", file=sys.stderr)
         return rc

@@ -16,6 +16,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from dataclasses import dataclass
 from pathlib import Path
@@ -78,6 +79,40 @@ class TrainLoopConfig:
     # identity — no cross-SP executable aliasing.
     sp_policy: str = "auto"
     sp_degree: int = 0
+    # --- online re-planning (src/repro/telemetry/) ---
+    # "off" = static cost model (legacy behavior); "observe" = collect
+    # telemetry, fit calibrations and log would-be swaps without touching
+    # the plans (numerics provably unchanged); "auto" = close the loop:
+    # per-step solves use the active calibration and drift-triggered
+    # re-plans hot-swap at step boundaries (hysteresis + cooldown +
+    # plan-lint gated, fresh buckets precompiled off-thread).
+    replan: str = "off"
+    telemetry_dir: Optional[str] = None  # JSONL spill + plan journal +
+    #                                      per-mesh calibration persistence
+    # every Nth step is a probe: jax.block_until_ready brackets the step
+    # so its wall time excludes async dispatch, and a per-stage breakdown
+    # is attributed (0 = never probe; EMA counters stay always-on)
+    probe_every: int = 0
+    replan_min_win: float = 0.05
+    replan_cooldown: int = 8
+    replan_min_samples: int = 4
+    # re-plan jobs on a background thread (the training loop never blocks
+    # on the fit/ILP/precompile); False runs them inline — deterministic
+    # swap timing for tests
+    replan_background: bool = True
+    # deterministic telemetry-only straggler injection for tests/CI:
+    # "STAGE:FACTOR[,...][@START]", e.g. "2:2.5@3" (ft.StragglerInjector)
+    inject_straggler: str = ""
+    # two-phase drifting traces: switch the length-mix preset to dataset2
+    # at step drift_at (0 = never) — the CI replan job's short-uniform ->
+    # long-skewed trace
+    dataset2: Optional[str] = None
+    context2: int = 0              # 0 = keep --context across the drift
+    drift_at: int = 0
+    # replay the per-step plans from this JSONL journal instead of solving
+    # (written to <telemetry_dir>/plans.jsonl by any telemetry-enabled
+    # run): the pinned-plan baseline the CI job compares bitwise against
+    plan_journal: Optional[str] = None
 
 
 def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
@@ -85,9 +120,11 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     import jax.numpy as jnp
 
     from repro.ckpt import CheckpointManager
-    from repro.core import ClusterSpec, CostModel, PlannerConfig, plan_batch
+    from repro.core import (ClusterSpec, CostModel, ExecutionPlan,
+                            PlannerConfig, plan_batch)
     from repro.data import materialize_plan, sample_corpus_batch
-    from repro.ft import StragglerMonitor, replan_costmodel
+    from repro.ft import (StragglerInjector, StragglerMonitor,
+                          replan_costmodel)
     from repro.launch.mesh import latency_hiding_active
     from repro.lint import make_cache_lint, run_plan_checks
     from repro.optim import init_opt_state
@@ -95,6 +132,8 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
                                batch_struct, make_geometry,
                                store_fingerprint)
     from repro.runtime.sharding import mesh_axis_names
+    from repro.telemetry import (ReplanConfig, ReplanController,
+                                 StepTimeline, read_jsonl)
 
     pod, data, model = mesh_axis_names(mesh)
     n_pods = mesh.shape[pod] if pod else 1
@@ -137,6 +176,30 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     params = opt = None
     start_step = 0
 
+    # --- telemetry: collection + (optionally) the re-planning loop ---
+    timeline = StepTimeline(spill_dir=loop.telemetry_dir, name="train")
+    injector = (StragglerInjector.parse(loop.inject_straggler, d_p,
+                                        seed=loop.seed)
+                if loop.inject_straggler else None)
+    # plan journal: every telemetry-enabled run records the plan it
+    # EXECUTED each step; a journal replay run re-executes exactly those
+    # plans (--plan-journal), which is how CI proves the control plane is
+    # numerically non-intrusive (bitwise-equal losses)
+    journal_out = None
+    if loop.telemetry_dir:
+        jp = Path(loop.telemetry_dir) / "plans.jsonl"
+        jp.parent.mkdir(parents=True, exist_ok=True)
+        journal_out = open(jp, "w", buffering=1)
+    journal_in = {}
+    if loop.plan_journal:
+        for rec in read_jsonl(loop.plan_journal):
+            journal_in[int(rec["step"])] = ExecutionPlan.loads(rec["plan"])
+        if not journal_in:
+            raise ValueError(f"--plan-journal {loop.plan_journal} holds no "
+                             f"replayable plans")
+        log(f"[journal] replaying {len(journal_in)} plans from "
+            f"{loop.plan_journal}")
+
     # schedule backend is pinned after the bootstrap plan: interleaved
     # stacking bakes v_stages into the parameter layout, so mid-run
     # schedule switches would scramble live training state
@@ -144,12 +207,7 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     remat_mode = ("stage_aware" if loop.ckpt_policy == "stage-aware"
                   else "uniform")
 
-    def plan_for(step: int):
-        cm = replan_costmodel(base_cm, monitor)
-        corpus = sample_corpus_batch(loop.dataset, loop.global_batch,
-                                     loop.context, cfg_arch.spec.vocab,
-                                     seed=loop.seed + step)
-        lengths = [len(v) for v in corpus.values()]
+    def solve(cm, lengths):
         plan = plan_batch(cm, lengths,
                           PlannerConfig(bucket_rounding=loop.bucket_rounding,
                                         schedule=pinned["schedule"],
@@ -158,7 +216,78 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
                                         sp_policy=loop.sp_policy,
                                         sp_degree=loop.sp_degree))
         pinned["schedule"], pinned["v_stages"] = plan.schedule, plan.v_stages
-        return plan, corpus
+        return plan
+
+    def bucket_of(plan):
+        return str(plan.bucket_key(d_s, split_bwd=loop.split_bwd,
+                                   dtype=loop.compute_dtype))
+
+    def plan_lint(plan):
+        """Plan-invariant errors for a re-plan candidate: a hazardous
+        re-planned program is rejected BEFORE the swap."""
+        if loop.lint == "off":
+            return []
+        prep = run_plan_checks(plan, d_s, d_p, model=cfg_arch.spec,
+                               key_kwargs={"split_bwd": loop.split_bwd,
+                                           "dtype": loop.compute_dtype})
+        return [str(e) for e in prep.errors]
+
+    def resolve_incumbent(cm, lengths, inc):
+        """The hysteresis strawman: this batch re-planned under the
+        incumbent's bucket — capacity AND sp policy pinned, else the
+        "held" solve silently makes the candidate's own move and the
+        comparison degenerates. Does not touch ``pinned`` (it is a
+        what-if, never executed)."""
+        key = inc.bucket_key(d_s, split_bwd=loop.split_bwd,
+                             dtype=loop.compute_dtype)
+        return plan_batch(cm, lengths,
+                          PlannerConfig(bucket_rounding=loop.bucket_rounding,
+                                        schedule=pinned["schedule"],
+                                        v_stages=pinned["v_stages"],
+                                        remat_mode=remat_mode,
+                                        sp_policy=key.sp_policy,
+                                        sp_degree=key.d_s_eff,
+                                        token_capacity=key.cap))
+
+    controller = None
+    if loop.replan in ("observe", "auto") and not journal_in:
+        controller = ReplanController(
+            base_cm,
+            ReplanConfig(mode=loop.replan, min_win=loop.replan_min_win,
+                         cooldown_steps=loop.replan_cooldown,
+                         min_samples=loop.replan_min_samples,
+                         background=loop.replan_background),
+            solve, bucket_of, lint=plan_lint,
+            resolve_incumbent=resolve_incumbent,
+            precompile=lambda p: get_step(p),
+            timeline=timeline, telemetry_dir=loop.telemetry_dir,
+            fingerprint=(f"{d_p}x{d_s}:{cfg_arch.spec.name}"),
+            log=log)
+
+    def mix_for(step: int):
+        if loop.drift_at and step >= loop.drift_at and (
+                loop.dataset2 or loop.context2):
+            return (loop.dataset2 or loop.dataset,
+                    loop.context2 or loop.context)
+        return loop.dataset, loop.context
+
+    def plan_for(step: int):
+        ds, ctx = mix_for(step)
+        corpus = sample_corpus_batch(ds, loop.global_batch,
+                                     ctx, cfg_arch.spec.vocab,
+                                     seed=loop.seed + step)
+        if journal_in:
+            # replay: past the journal's end (the final overlap solve) the
+            # last journaled plan stands in — it is never executed
+            plan = journal_in.get(step) or journal_in[max(journal_in)]
+            pinned["schedule"], pinned["v_stages"] = (plan.schedule,
+                                                      plan.v_stages)
+            return plan, corpus
+        cm = (controller.cost_model() if controller is not None
+              else base_cm)
+        cm = replan_costmodel(cm, monitor)
+        lengths = [len(v) for v in corpus.values()]
+        return solve(cm, lengths), corpus
 
     def get_step(plan):
         # split_bwd and dtype are key fields now (plan-bucket-key lint
@@ -201,6 +330,10 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
                     log(f"[lint] {f}")
                 step_cache.stats.lint_findings += len(prep.findings)
                 step_cache.stats.lint_errors += len(prep.errors)
+                if prep.findings:
+                    timeline.record("lint", bucket=str(key),
+                                    findings=len(prep.findings),
+                                    errors=len(prep.errors))
                 if loop.lint == "error":
                     prep.raise_if_findings()
             # AOT lower+compile against abstract shapes: the resulting
@@ -213,7 +346,15 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
             if lint_hook is not None:
                 lint_stash["stablehlo"] = lowered.as_text()
             return lowered.compile()
-        return builder, step_cache.get(key, build)
+        m0, w0 = step_cache.stats.misses, step_cache.stats.warm_hits
+        compiled = step_cache.get(key, build)
+        if step_cache.stats.misses > m0:
+            timeline.record("compile", bucket=str(key), event="cold",
+                            compile_s=step_cache.stats
+                            .compile_seconds_per_key.get(repr(key), 0.0))
+        elif step_cache.stats.warm_hits > w0:
+            timeline.record("compile", bucket=str(key), event="warm")
+        return builder, compiled
 
     # --- bootstrap: plan step 0 to learn the first bucket ---
     plan, corpus = plan_for(0)
@@ -290,27 +431,72 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
     next_plan, next_corpus = plan, corpus
     for step in range(start_step, loop.steps):
         plan, corpus = next_plan, next_corpus
+        if journal_out is not None:
+            journal_out.write(json.dumps({"step": step,
+                                          "plan": plan.dumps()}) + "\n")
         builder, step_fn = get_step(plan)
         key = plan.bucket_key(d_s)
+        bucket = bucket_of(plan)
         batch = mat(plan, corpus, key.cap, key.n_chunks)
+        probed = bool(loop.probe_every) and step % loop.probe_every == 0
         t0 = time.perf_counter()
         params, opt, _err, metrics = step_fn(params, opt, None, batch)
+        dt_probe = None
+        if probed:
+            # probe mode: block_until_ready brackets the device step so
+            # the sample excludes async dispatch (and the overlapped
+            # solver below); per-stage attribution divides it across the
+            # pipeline — the injector can then skew individual stages
+            jax.block_until_ready(metrics["loss"])
+            dt_probe = time.perf_counter() - t0
         # overlap: next iteration's plan solves while devices run
         next_plan, next_corpus = plan_for(step + 1)
         loss = float(metrics["loss"])
         dt_step = time.perf_counter() - t0
+        wall = dt_probe if dt_probe is not None else dt_step
+        per_stage = None
+        wall_rep = wall
+        if probed:
+            per_stage = [wall / d_p] * d_p
+            if injector is not None:
+                per_stage = injector.per_stage(per_stage, step)
+        if injector is not None:
+            wall_rep = injector.wall(wall, step)
+        timeline.record_step(step, bucket, wall_rep,
+                             tokens=float(metrics["tokens"]), loss=loss,
+                             per_stage_s=per_stage, probed=probed)
         history.append({"step": step, "loss": loss, "time": dt_step,
                         "tokens": float(metrics["tokens"]),
                         "solve_time": plan.solve_time})
         log(f"step {step:5d} loss {loss:.4f} tokens "
             f"{int(metrics['tokens'])} wall {dt_step:.2f}s "
             f"(solver {plan.solve_time:.2f}s overlapped)")
+        if controller is not None:
+            lengths = [len(v) for v in corpus.values()]
+            controller.observe_step(step, plan, wall_rep, lengths,
+                                    per_stage_s=per_stage, bucket=bucket)
+            swap = controller.poll()
+            if swap is not None and loop.replan == "auto":
+                # hot-swap at the step boundary: the overlapped solve
+                # above used the pre-swap calibration, so re-solve the
+                # next step under the newly adopted one (a previously-seen
+                # bucket is a warm hit; a fresh one was precompiled by the
+                # re-plan job before adoption)
+                next_plan, next_corpus = plan_for(step + 1)
         if mgr and (step + 1) % loop.ckpt_every == 0:
             mgr.save(step, (params, opt),
                      extra={"step": step, "schedule": plan.schedule,
                             "v_stages": plan.v_stages})
     if mgr:
         mgr.wait()
+    if controller is not None:
+        controller.drain()
+        controller.poll()  # account a job that outlived the loop
+        log(f"[replan] version={controller.version} "
+            f"counters={controller.counters} "
+            f"triggers={controller.trigger_reasons}")
+    if journal_out is not None:
+        journal_out.close()
     log(f"[compile-cache] {step_cache.stats.summary()}")
     rep = store.report() if store is not None else None
     if rep is not None:
@@ -323,6 +509,10 @@ def train(cfg_arch, mesh, loop: TrainLoopConfig, *, log=print):
         if rep is not None:
             history[-1]["cache_store"] = rep
             history[-1]["cache_store_gc"] = gc_report
+        history[-1]["telemetry"] = timeline.snapshot()
+        if controller is not None:
+            history[-1]["replan"] = controller.snapshot()
+    timeline.close()
     return params, opt, history
 
 
@@ -393,6 +583,47 @@ def main():
                     help="effective SP degree pin (sub-groups of the "
                          "model axis; must divide the mesh's SP size); "
                          "0 = planner-chosen")
+    ap.add_argument("--replan", default="off",
+                    choices=["off", "observe", "auto"],
+                    help="online re-planning: 'observe' collects telemetry "
+                         "and logs would-be swaps without touching plans; "
+                         "'auto' closes the loop — calibrated per-step "
+                         "solves + drift-triggered hysteresis-gated plan "
+                         "hot-swaps at step boundaries")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="directory for the timeline JSONL spill, the "
+                         "per-step plan journal (plans.jsonl) and the "
+                         "per-mesh calibration store (calibration.json)")
+    ap.add_argument("--probe-every", type=int, default=0,
+                    help="bracket every Nth step with "
+                         "jax.block_until_ready and record a per-stage "
+                         "breakdown (0 = never; EMA counters stay on)")
+    ap.add_argument("--replan-min-win", type=float, default=0.05,
+                    help="hysteresis: a bucket-changing swap needs at "
+                         "least this predicted relative win")
+    ap.add_argument("--replan-cooldown", type=int, default=8,
+                    help="minimum steps between re-plan jobs")
+    ap.add_argument("--replan-min-samples", type=int, default=4,
+                    help="telemetry samples before the first fit")
+    ap.add_argument("--replan-sync", action="store_true",
+                    help="run re-plan jobs inline instead of on the "
+                         "background thread (deterministic swap timing)")
+    ap.add_argument("--inject-straggler", default="",
+                    help="deterministic telemetry-only straggler "
+                         "injection 'STAGE:FACTOR[,...][@START]' (e.g. "
+                         "'2:2.5@3'); perturbs measurements, never math")
+    ap.add_argument("--dataset2", default="",
+                    help="switch the length-mix preset to this at "
+                         "--drift-at (two-phase drifting traces)")
+    ap.add_argument("--context2", type=int, default=0,
+                    help="context limit for the post-drift phase "
+                         "(0 = keep --context)")
+    ap.add_argument("--drift-at", type=int, default=0,
+                    help="step at which --dataset2/--context2 take over "
+                         "(0 = never)")
+    ap.add_argument("--plan-journal", default="",
+                    help="replay per-step plans from this plans.jsonl "
+                         "instead of solving (pinned-plan baseline)")
     args = ap.parse_args()
 
     import os
@@ -428,17 +659,30 @@ def main():
                            split_bwd=args.split_bwd,
                            lint=args.lint,
                            sp_policy=args.sp_policy,
-                           sp_degree=args.sp_degree)
+                           sp_degree=args.sp_degree,
+                           replan=args.replan,
+                           telemetry_dir=args.telemetry_dir or None,
+                           probe_every=args.probe_every,
+                           replan_min_win=args.replan_min_win,
+                           replan_cooldown=args.replan_cooldown,
+                           replan_min_samples=args.replan_min_samples,
+                           replan_background=not args.replan_sync,
+                           inject_straggler=args.inject_straggler,
+                           dataset2=args.dataset2 or None,
+                           context2=args.context2,
+                           drift_at=args.drift_at,
+                           plan_journal=args.plan_journal or None)
     _, _, history = train(cfg, mesh, loop)
     if args.stats_json:
-        import json
+        from repro.telemetry import atomic_write_json
         last = history[-1] if history else {}
-        with open(args.stats_json, "w") as f:
-            json.dump({"history": history,
-                       "compile_cache": last.get("compile_cache", {}),
-                       "cache_store": last.get("cache_store", {}),
-                       "cache_store_gc": last.get("cache_store_gc")},
-                      f, indent=1)
+        atomic_write_json(args.stats_json,
+                          {"history": history,
+                           "compile_cache": last.get("compile_cache", {}),
+                           "cache_store": last.get("cache_store", {}),
+                           "cache_store_gc": last.get("cache_store_gc"),
+                           "telemetry": last.get("telemetry", {}),
+                           "replan": last.get("replan", {})})
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ so they cannot grow without bound.
 
 from __future__ import annotations
 
+import threading
 import time
 import weakref
 from collections import OrderedDict
@@ -158,6 +159,12 @@ class CompileCache:
         self.stats = CacheStats()
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._compiled_keys: Set[Hashable] = set()
+        # dict/stats mutations are lock-protected so a background
+        # precompile (telemetry/replan.py warming a fresh bucket
+        # off-thread) can share the cache with the training loop; builds
+        # and store I/O run OUTSIDE the lock — a hit never waits on a
+        # concurrent compile
+        self._lock = threading.RLock()
         _REGISTRY.add(self)
 
     # ------------------------------------------------------------------
@@ -200,41 +207,57 @@ class CompileCache:
         """Return the cached artifact for ``key``: resident -> hit;
         otherwise try the persistent store (warm hit, no compile);
         otherwise ``build()`` (cold compile, timed, offered to the
-        store)."""
-        if key in self._entries:
-            self.stats.hits += 1
-            self._entries.move_to_end(key)
-            return self._entries[key]
+        store). Safe to call from a background thread concurrently with
+        the training loop: builds and store I/O happen outside the lock,
+        so a resident hit never waits on another thread's compile (two
+        threads cold-building the SAME key may both compile; the first
+        insert wins)."""
+        with self._lock:
+            if key in self._entries:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
 
         if self.store is not None:
             t0 = time.perf_counter()
             value = self.store.load(key)
             if value is not None:
                 dt = time.perf_counter() - t0
-                self.stats.warm_hits += 1
-                # rebuild cost of a warm bucket is a disk reload
-                self.stats.compile_seconds_per_key[repr(key)] = round(dt, 3)
-                if len(self._compiled_keys) < self._COMPILED_KEYS_CAP:
-                    # a later cold rebuild of this key (evicted AND its
-                    # store entry gone) must still count as a recompile
-                    self._compiled_keys.add(key)
-                self._entries[key] = value
+                with self._lock:
+                    if key in self._entries:  # raced with another loader
+                        self.stats.hits += 1
+                        self._entries.move_to_end(key)
+                        return self._entries[key]
+                    self.stats.warm_hits += 1
+                    # rebuild cost of a warm bucket is a disk reload
+                    self.stats.compile_seconds_per_key[repr(key)] = \
+                        round(dt, 3)
+                    if len(self._compiled_keys) < self._COMPILED_KEYS_CAP:
+                        # a later cold rebuild of this key (evicted AND its
+                        # store entry gone) must still count as a recompile
+                        self._compiled_keys.add(key)
+                    self._entries[key] = value
+                    self._enforce_capacity()
+                    self.stats.buckets_live = len(self._entries)
                 if self.log:
                     self.log(f"[compile:{self.name}] warm-start bucket "
                              f"{key} ({dt:.2f}s load, no compile)")
-                self._enforce_capacity()
-                self.stats.buckets_live = len(self._entries)
                 return value
 
-        self.stats.misses += 1
-        if key in self._compiled_keys:
-            self.stats.recompiles += 1
-        elif len(self._compiled_keys) < self._COMPILED_KEYS_CAP:
-            # bounded recompile tracking: beyond the cap (far past any real
-            # bucket churn) new keys go uncounted rather than growing this
-            # set for the life of the cache — recompiles become a lower
-            # bound instead of a leak
-            self._compiled_keys.add(key)
+        with self._lock:
+            if key in self._entries:  # raced during the store probe
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.stats.misses += 1
+            if key in self._compiled_keys:
+                self.stats.recompiles += 1
+            elif len(self._compiled_keys) < self._COMPILED_KEYS_CAP:
+                # bounded recompile tracking: beyond the cap (far past any
+                # real bucket churn) new keys go uncounted rather than
+                # growing this set for the life of the cache — recompiles
+                # become a lower bound instead of a leak
+                self._compiled_keys.add(key)
         t0 = time.perf_counter()
         value = build()
         dt = time.perf_counter() - t0
@@ -244,21 +267,23 @@ class CompileCache:
             # cached nor persisted
             report = self.lint(key, value)
             if report is not None:
-                n = len(report.findings)
-                self.stats.lint_findings += n
-                self.stats.lint_errors += len(report.errors)
+                with self._lock:
+                    n = len(report.findings)
+                    self.stats.lint_findings += n
+                    self.stats.lint_errors += len(report.errors)
                 if n and self.log:
                     self.log(f"[compile:{self.name}] lint: "
                              f"{report.summary()}")
-        self.stats.compile_seconds += dt
-        self.stats.compile_seconds_per_key[repr(key)] = round(dt, 3)
-        self._entries[key] = value
+        with self._lock:
+            self.stats.compile_seconds += dt
+            self.stats.compile_seconds_per_key[repr(key)] = round(dt, 3)
+            self._entries[key] = value
+            self._enforce_capacity()
+            self.stats.buckets_live = len(self._entries)
         if self.log:
             self.log(f"[compile:{self.name}] bucket {key} ({dt:.2f}s)")
         if self.store is not None:
             self.store.save(key, value, compile_seconds=dt)
-        self._enforce_capacity()
-        self.stats.buckets_live = len(self._entries)
         return value
 
     def clear(self, reset_stats: bool = False) -> None:
@@ -270,18 +295,19 @@ class CompileCache:
         otherwise hit/miss history survives — including which keys were
         compiled before, so a post-clear rebuild still counts as a
         recompile."""
-        dropped = len(self._entries)
-        self._entries.clear()
-        if reset_stats:
-            self._compiled_keys.clear()
-            self.stats = CacheStats()
-        else:
+        with self._lock:
+            dropped = len(self._entries)
+            self._entries.clear()
+            if reset_stats:
+                self._compiled_keys.clear()
+                self.stats = CacheStats()
+                return
             self.stats.cleared += dropped
             self.stats.buckets_live = 0
             self.stats.compile_seconds_per_key.clear()
-            if dropped and self.log:
-                self.log(f"[compile:{self.name}] cleared {dropped} "
-                         f"resident executables")
+        if dropped and self.log:
+            self.log(f"[compile:{self.name}] cleared {dropped} "
+                     f"resident executables")
 
     def deregister(self) -> None:
         """Remove this cache from the process-wide stats registry (it keeps

@@ -142,7 +142,8 @@ class ServeEngine:
     def __init__(self, cfg_arch, mesh, config: EngineConfig, *,
                  params: Optional[Dict] = None, param_dtype=None,
                  compute_dtype=None, cache=None, store=None,
-                 seed: int = 0, log: Optional[Callable] = None):
+                 seed: int = 0, log: Optional[Callable] = None,
+                 timeline=None):
         import jax
         import jax.numpy as jnp
 
@@ -155,6 +156,9 @@ class ServeEngine:
         self.mesh = mesh
         self.config = config
         self.log = log
+        # optional telemetry.StepTimeline: run() records one "engine"
+        # event per drained trace (TTFT/TPOT percentiles + occupancy)
+        self.timeline = timeline
         param_dtype = param_dtype or jnp.float32
         compute_dtype = compute_dtype or param_dtype
         self.geom = make_engine_geometry(
@@ -584,6 +588,15 @@ class ServeEngine:
                 continue
             self.step()
         self._run_wall += time.perf_counter() - t0
+        if self.timeline is not None:
+            st = self.stats()
+            self.timeline.record(
+                "engine", self.step_count, bucket=str(self.bucket_key),
+                completed=st["completed"], steps=st["steps"],
+                wall_s=st["wall_s"], tokens_per_s=st["tokens_per_s"],
+                ttft_s_p50=st["ttft_s_p50"], ttft_s_p95=st["ttft_s_p95"],
+                tpot_s_p50=st["tpot_s_p50"], tpot_s_p95=st["tpot_s_p95"],
+                occupancy=st["kv_pool"].get("mean_occupancy"))
         if self.n_active:
             raise RuntimeError(
                 f"trace did not drain in {max_steps} steps: "

@@ -112,3 +112,79 @@ def test_deregister_removes_from_global_stats():
     assert "tmp" not in global_cache_stats()["caches"]
     # still functions as a cache
     assert c.get(1, lambda: 2) == 1
+
+
+def test_concurrent_precompile_then_step_loop():
+    """The replan flow: a background thread precompiles fresh buckets
+    (off-thread XLA) while the training loop keeps hitting its own; after
+    the swap boundary the loop's first get() on the new bucket must be a
+    HIT — never a second compile."""
+    import threading
+    import time
+
+    cache = CompileCache(name="replan-threads")
+    built = []
+
+    def build(key):
+        def _b():
+            time.sleep(0.005)           # a "compile"
+            built.append(key)
+            return ("exe", key)
+        return _b
+
+    fresh = [f"bucket-{i}" for i in range(4)]
+    t = threading.Thread(
+        target=lambda: [cache.get(k, build(k)) for k in fresh])
+    t.start()
+    # the loop keeps stepping its incumbent bucket concurrently
+    for _ in range(50):
+        cache.get("incumbent", build("incumbent"))
+    t.join(timeout=30)
+    assert not t.is_alive(), "precompile thread deadlocked"
+    # swap boundary: every precompiled bucket is now a resident hit
+    before = cache.stats.misses
+    for k in fresh:
+        assert cache.get(k, build(k)) == ("exe", k)
+    assert cache.stats.misses == before, "post-swap get must not compile"
+    assert sorted(set(built)) == sorted(fresh + ["incumbent"])
+    assert cache.stats.recompiles == 0
+
+
+def test_concurrent_cold_hammer_converges():
+    """Many threads racing cold gets over a small key set: no deadlock,
+    every caller gets a live value, and the cache converges to one
+    resident entry per key (duplicate racing builds are allowed — the
+    docstring's 'first insert wins' — but they stay bounded by the race
+    window, never grow per call)."""
+    import threading
+    import time
+
+    cache = CompileCache(name="hammer-threads")
+    keys = [f"k{i}" for i in range(6)]
+    calls_per_thread, n_threads = 30, 8
+    errors = []
+
+    def worker(seed):
+        try:
+            for i in range(calls_per_thread):
+                k = keys[(seed + i) % len(keys)]
+                v = cache.get(k, lambda k=k: (time.sleep(0.002), k)[1])
+                assert v == k
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,))
+               for s in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads), "hammer deadlocked"
+    assert not errors, errors
+    st = cache.stats
+    assert st.buckets_live == len(keys)
+    total = n_threads * calls_per_thread
+    assert st.hits + st.misses + st.warm_hits == total
+    # duplicate builds only from the initial race window
+    assert st.misses <= n_threads * len(keys)
+    assert st.hits >= total - n_threads * len(keys)
